@@ -1,0 +1,31 @@
+//! Shared bench-harness helpers (no criterion offline — each bench is a
+//! `harness = false` binary printing paper-style tables).
+
+use parac::graph::suite::Scale;
+
+/// Scale selected by `PARAC_SCALE` (tiny|small|medium), default small.
+pub fn bench_scale() -> Scale {
+    std::env::var("PARAC_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Small)
+}
+
+/// Threads/blocks from `PARAC_BENCH_THREADS`, default 4 (the engines
+/// are measured oversubscribed on this 1-core testbed; see
+/// EXPERIMENTS.md).
+pub fn bench_threads() -> usize {
+    std::env::var("PARAC_BENCH_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(4)
+}
+
+/// Median-of-`reps` timing helper.
+pub fn median_time<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    let mut times = Vec::with_capacity(reps);
+    let mut out = None;
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        out = Some(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    (out.unwrap(), parac::util::median(&times))
+}

@@ -1,0 +1,16 @@
+//! Figure 3 bench — CPU factor-time scaling across threads × orderings
+//! over the full matrix suite.
+//!
+//! NOTE (testbed): this environment exposes **one** CPU core, so
+//! wall-clock speedup is structurally flat; the dependency-level
+//! parallelism that drives the paper's Fig. 3 speedups is quantified by
+//! the fig4 bench's critical-path column (n / critical-path = available
+//! parallelism). See EXPERIMENTS.md.
+
+mod bench_common;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let threads = bench_common::bench_threads();
+    parac::coordinator::repro::fig3(scale, threads);
+}

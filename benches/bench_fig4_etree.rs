@@ -1,0 +1,11 @@
+//! Figure 4 bench — classical vs actual e-tree heights, triangular
+//! solve critical path, gpusim factor time, and fill ratio per
+//! ordering, full suite.
+
+mod bench_common;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let blocks = bench_common::bench_threads();
+    parac::coordinator::repro::fig4(scale, blocks);
+}

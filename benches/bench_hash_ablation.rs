@@ -1,0 +1,11 @@
+//! Hash-ablation bench (§5.3.4 / §7.1): random-permutation vs identity
+//! hash codes in the gpusim fill workspace — the paper's "the default
+//! permutation may cause slow down; a random permutation works great".
+
+mod bench_common;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let blocks = bench_common::bench_threads();
+    parac::coordinator::repro::hash_ablation(scale, blocks);
+}

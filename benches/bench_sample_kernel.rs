@@ -1,0 +1,69 @@
+//! L1 kernel micro-bench: native rust clique sampling vs the
+//! AOT-compiled Pallas kernel executed through PJRT, across bucket
+//! widths — quantifies the offload break-even the coordinator's
+//! batching policy is built around. Skips the PJRT half gracefully if
+//! `make artifacts` hasn't run.
+
+mod bench_common;
+
+use parac::coordinator::report::Table;
+use parac::rng::Rng;
+use parac::runtime::sampler::{native_reference, HloSampler, SampleTask, BATCH, BUCKET_WIDTHS};
+use parac::runtime::Artifacts;
+
+fn make_tasks(k: usize, count: usize, seed: u64) -> Vec<SampleTask> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let m = 2 + rng.below(k - 1);
+            let mut nbrs: Vec<(u32, f64)> =
+                (0..m).map(|j| (j as u32 * 3 + 1, rng.range_f64(0.1, 10.0))).collect();
+            parac::factor::sample::sort_by_weight(&mut nbrs);
+            SampleTask { pivot: i as u32, nbrs }
+        })
+        .collect()
+}
+
+fn main() {
+    let seed = 42;
+    let reps = 5;
+    let mut table = Table::new(&[
+        "bucket K", "tasks", "native (µs)", "pjrt (µs)", "pjrt/native", "edges",
+    ]);
+    let mut arts = Artifacts::open_default().ok();
+    for &k in &BUCKET_WIDTHS {
+        let tasks = make_tasks(k, BATCH * 4, seed);
+        // Native path.
+        let (edges_native, t_native) = bench_common::median_time(reps, || {
+            tasks.iter().map(|t| native_reference(seed, t).len()).sum::<usize>()
+        });
+        // PJRT path.
+        let (pjrt_us, edges_pjrt) = match arts.as_mut() {
+            Some(a) => {
+                let mut sampler = HloSampler::new(a, seed);
+                match bench_common::median_time(reps, || sampler.run_bucket(k, &tasks)) {
+                    (Ok(edges), t) => (format!("{:.0}", t * 1e6), edges.len()),
+                    (Err(e), _) => (format!("err: {e}"), 0),
+                }
+            }
+            None => ("n/a (no artifacts)".to_string(), 0),
+        };
+        let ratio = if edges_pjrt > 0 {
+            let pj: f64 = pjrt_us.parse().unwrap_or(f64::NAN);
+            format!("{:.1}x", pj / (t_native * 1e6))
+        } else {
+            "-".into()
+        };
+        table.row(vec![
+            k.to_string(),
+            tasks.len().to_string(),
+            format!("{:.0}", t_native * 1e6),
+            pjrt_us,
+            ratio,
+            format!("{edges_native}/{edges_pjrt}"),
+        ]);
+    }
+    println!("## L1 sampling kernel: native vs PJRT-offloaded (batch={BATCH})\n");
+    print!("{}", table.render());
+    println!("\n(native is the engines' default; the PJRT path demonstrates the L1 kernel on the factor path and its launch-overhead break-even)");
+}

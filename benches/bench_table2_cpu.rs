@@ -1,0 +1,10 @@
+//! Table 2 bench — CPU convergence comparison: ParAC (AMD) vs
+//! fill-matched threshold ichol vs AMG (HyPre proxy), full suite.
+
+mod bench_common;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let threads = bench_common::bench_threads();
+    parac::coordinator::repro::table2(scale, threads);
+}

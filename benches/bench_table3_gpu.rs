@@ -1,0 +1,11 @@
+//! Table 3 bench — GPU-model comparison: ParAC (gpusim, nnz-sort,
+//! level-scheduled SPSV) vs AMG (AmgX proxy) vs IC(0)+CG (cuSPARSE
+//! proxy), full suite, times in ms.
+
+mod bench_common;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let blocks = bench_common::bench_threads();
+    parac::coordinator::repro::table3(scale, blocks);
+}

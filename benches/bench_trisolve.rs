@@ -1,0 +1,53 @@
+//! Triangular-solve bench — sequential vs level-scheduled solves per
+//! ordering (the paper §6.2: GPU solve performance is governed by the
+//! DAG critical path, which is why AMD loses on GPU).
+
+mod bench_common;
+
+use parac::coordinator::report::Table;
+use parac::factor::{factorize, Engine, ParacOptions};
+use parac::graph::suite;
+use parac::ordering::Ordering;
+use parac::precond::{LdlPrecond, Preconditioner};
+use parac::solve::pcg;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let threads = bench_common::bench_threads();
+    let reps = 5;
+    println!("## Triangular solve: sequential vs level-scheduled  [scale {scale:?}]\n");
+    let mut table = Table::new(&[
+        "problem", "ordering", "critical path", "levels avg width", "seq (ms)", "level (ms)",
+    ]);
+    for name in ["uniform_3d_poisson", "GAP-road", "com-LiveJournal"] {
+        let e = suite::by_name(name).unwrap();
+        let lap = (e.build)(scale);
+        let b = pcg::random_rhs(&lap, 3);
+        for ord in [Ordering::Amd, Ordering::NnzSort, Ordering::Random] {
+            let opts = ParacOptions {
+                ordering: ord,
+                engine: Engine::Cpu { threads: 0 },
+                seed: 1,
+                ..Default::default()
+            };
+            let f = factorize(&lap, &opts).unwrap();
+            let (levels, cp) = parac::etree::trisolve_levels(&f.g);
+            let avg_width = lap.n() as f64 / cp as f64;
+            let seq = LdlPrecond::new(f.clone());
+            let lvl = LdlPrecond::with_level_schedule(f, threads);
+            let (_, t_seq) = bench_common::median_time(reps, || seq.apply(&b));
+            let (_, t_lvl) = bench_common::median_time(reps, || lvl.apply(&b));
+            let _ = levels;
+            table.row(vec![
+                e.name.into(),
+                ord.name().into(),
+                cp.to_string(),
+                format!("{avg_width:.0}"),
+                format!("{:.2}", t_seq * 1e3),
+                format!("{:.2}", t_lvl * 1e3),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!("\n(1-core testbed: the level schedule pays thread overhead without parallel payoff; the `critical path` / `avg width` columns carry the architectural signal — see EXPERIMENTS.md)");
+}

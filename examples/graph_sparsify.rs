@@ -1,0 +1,133 @@
+//! Graph sparsification via ParAC — the paper's §1 closing use-case:
+//! "ParAC, combined with sketching, provides a fast framework for graph
+//! sparsification". This example approximates effective resistances
+//! with the ParAC preconditioner + a Johnson–Lindenstrauss sketch and
+//! resamples the graph by resistance (Spielman–Srivastava), then checks
+//! the sparsifier's quality spectrally.
+//!
+//! ```bash
+//! cargo run --release --example graph_sparsify [-- --side 40 --eps 0.5]
+//! ```
+
+use parac::cli::args::Args;
+use parac::factor::{factorize, ParacOptions};
+use parac::graph::generators::{self, Coeff};
+use parac::graph::Laplacian;
+use parac::precond::LdlPrecond;
+use parac::rng::Rng;
+use parac::solve::pcg::{self, PcgOptions};
+use parac::sparse::ops::dot;
+use parac::util::{fmt_count, timed};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let side = args.get_parse("side", 40usize);
+    let eps = args.get_parse("eps", 0.5f64);
+    let sketches = args.get_parse("sketches", 12usize);
+
+    let lap = generators::grid2d(side, side, Coeff::Uniform, 3);
+    let edges = lap.edges();
+    println!(
+        "input: {}  n={} edges={}",
+        lap.name,
+        fmt_count(lap.n()),
+        fmt_count(edges.len())
+    );
+
+    // 1. ParAC factor once — the solver backbone for resistance estimates.
+    let (f, dt) = timed(|| factorize(&lap, &ParacOptions::default()).unwrap());
+    println!("ParAC factor: {:.3}s (fill ratio {:.2})", dt, f.fill_ratio(lap.matrix.nnz()));
+    let pre = LdlPrecond::new(f);
+
+    // 2. JL sketch: R_eff(u,v) ≈ ‖Z(e_u − e_v)‖² with Z = Q W B L⁺, where
+    //    B is the signed incidence, W the weights, Q random ±1/√k rows.
+    //    Each sketch row costs one PCG solve of L x = (QWB)ᵀ row.
+    let n = lap.n();
+    let mut rng = Rng::new(99);
+    let mut z_rows: Vec<Vec<f64>> = Vec::with_capacity(sketches);
+    let o = PcgOptions { tol: 1e-6, max_iter: 1000, ..Default::default() };
+    let (_, t_sketch) = timed(|| {
+        for _ in 0..sketches {
+            // y = (Q W^1/2 B)ᵀ q for a random ±1 edge-vector q.
+            let mut y = vec![0.0; n];
+            for &(u, v, w) in &edges {
+                let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                let c = s * w.sqrt() / (sketches as f64).sqrt();
+                y[u as usize] += c;
+                y[v as usize] -= c;
+            }
+            let out = pcg::solve(&lap.matrix, &y, &pre, &o);
+            z_rows.push(out.x);
+        }
+    });
+    println!("sketch: {sketches} solves in {t_sketch:.2}s");
+
+    // 3. Resistance estimates → importance sampling of edges.
+    let mut r_eff: Vec<f64> = edges
+        .iter()
+        .map(|&(u, v, _)| {
+            z_rows
+                .iter()
+                .map(|z| {
+                    let d = z[u as usize] - z[v as usize];
+                    d * d
+                })
+                .sum::<f64>()
+        })
+        .collect();
+    // Clamp into the valid range (estimates are noisy).
+    for r in r_eff.iter_mut() {
+        *r = r.clamp(1e-12, 1.0 / eps);
+    }
+    let q = ((lap.n() as f64).ln() * 9.0 / (eps * eps)) as usize;
+    let probs: Vec<f64> = edges
+        .iter()
+        .zip(&r_eff)
+        .map(|(&(_, _, w), &r)| (w * r).min(1.0))
+        .collect();
+    let ptotal: f64 = probs.iter().sum();
+    let mut kept: Vec<(u32, u32, f64)> = Vec::new();
+    let mut acc: Vec<f64> = Vec::new();
+    // q independent draws ∝ w·R, accumulate w/(q·p) per hit.
+    let mut hits: std::collections::HashMap<usize, f64> = Default::default();
+    for _ in 0..q {
+        let mut t = rng.next_f64() * ptotal;
+        let mut idx = 0;
+        for (i, &p) in probs.iter().enumerate() {
+            if t < p {
+                idx = i;
+                break;
+            }
+            t -= p;
+        }
+        let p_i = probs[idx] / ptotal;
+        *hits.entry(idx).or_insert(0.0) += edges[idx].2 / (q as f64 * p_i);
+    }
+    for (idx, w) in hits {
+        kept.push((edges[idx].0, edges[idx].1, w));
+        acc.push(w);
+    }
+    let sparse = Laplacian::from_edges(n, &kept, "sparsifier");
+    println!(
+        "sparsifier: {} edges ({:.1}% of input)",
+        fmt_count(kept.len()),
+        100.0 * kept.len() as f64 / edges.len() as f64
+    );
+
+    // 4. Spectral quality check: xᵀHx / xᵀLx for random mean-zero x
+    //    should concentrate near 1.
+    let mut worst: f64 = 1.0;
+    for s in 0..20 {
+        let x = pcg::random_rhs(&lap, 1000 + s);
+        let lx = dot(&x, &lap.matrix.mul_vec(&x));
+        let hx = dot(&x, &sparse.matrix.mul_vec(&x));
+        let ratio = hx / lx;
+        worst = worst.max(ratio.max(1.0 / ratio.max(1e-12)));
+    }
+    println!("worst quadratic-form ratio over 20 probes: {worst:.2}");
+    assert!(
+        worst < 1.0 + 4.0 * eps,
+        "sparsifier quality {worst} out of range for eps={eps}"
+    );
+    println!("sparsify OK");
+}

@@ -1,0 +1,69 @@
+//! Ordering ablation (Fig. 4 companion): how the elimination ordering
+//! shapes the *parallelism* of the randomized factor — classical vs
+//! actual e-tree height, triangular-solve critical path, fill, and the
+//! sampling-sort quality ablation the paper mentions in §2.2.
+//!
+//! ```bash
+//! cargo run --release --example ordering_study [-- --matrix GAP-road --scale small]
+//! ```
+
+use parac::cli::args::Args;
+use parac::coordinator::report::Table;
+use parac::etree;
+use parac::factor::{factorize, Engine, ParacOptions};
+use parac::graph::suite::{self, Scale};
+use parac::ordering::Ordering;
+use parac::precond::LdlPrecond;
+use parac::solve::pcg::{self, PcgOptions};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.get("matrix", "uniform_3d_poisson");
+    let scale = Scale::parse(args.get("scale", "small")).unwrap_or(Scale::Small);
+    let entry = suite::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown matrix {name}");
+        std::process::exit(2);
+    });
+    let lap = (entry.build)(scale);
+    println!("## Ordering study on {} (n={})\n", entry.name, lap.n());
+
+    // --- Part 1: parallelism metrics per ordering (Fig. 4 shape). ---
+    let mut t = Table::new(&[
+        "ordering", "classical e-tree", "actual e-tree", "critical path", "fill ratio",
+        "parallelism (n/cp)",
+    ]);
+    for ord in [Ordering::Amd, Ordering::NnzSort, Ordering::Random, Ordering::Rcm] {
+        let opts = ParacOptions { ordering: ord, engine: Engine::Seq, seed: 5, ..Default::default() };
+        let f = factorize(&lap, &opts).unwrap();
+        let permuted = lap.matrix.permute_sym(f.perm.as_ref().unwrap());
+        let rep = etree::report(&permuted, &f.g);
+        t.row(vec![
+            ord.name().into(),
+            rep.classical_height.to_string(),
+            rep.actual_height.to_string(),
+            rep.critical_path.to_string(),
+            format!("{:.2}", rep.fill_ratio),
+            format!("{:.0}", lap.n() as f64 / rep.critical_path as f64),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- Part 2: the §2.2 sampling-sort quality ablation. ---
+    println!("\n## Weight-sort ablation (paper §2.2: sorting improves quality)\n");
+    let mut t2 = Table::new(&["sort by weight", "PCG iters", "rel residual"]);
+    let b = pcg::random_rhs(&lap, 17);
+    for sort in [true, false] {
+        let opts = ParacOptions { sort_by_weight: sort, seed: 5, ..Default::default() };
+        let f = factorize(&lap, &opts).unwrap();
+        let pre = LdlPrecond::new(f);
+        let out = pcg::solve(
+            &lap.matrix,
+            &b,
+            &pre,
+            &PcgOptions { max_iter: 2000, tol: 1e-8, ..Default::default() },
+        );
+        t2.row(vec![sort.to_string(), out.iters.to_string(), format!("{:.2e}", out.rel_residual)]);
+    }
+    print!("{}", t2.render());
+    println!("\nordering study OK");
+}

@@ -1,0 +1,53 @@
+//! Quickstart: build a Laplacian, factor it with ParAC, solve with PCG.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use parac::factor::{factorize, Engine, ParacOptions};
+use parac::graph::generators::{self, Coeff};
+use parac::ordering::Ordering;
+use parac::precond::LdlPrecond;
+use parac::solve::pcg::{self, PcgOptions};
+use parac::util::{fmt_count, fmt_duration, timed};
+
+fn main() {
+    // 1. A Laplacian: 3D Poisson on a 24³ grid (13.8k vertices).
+    let lap = generators::grid3d(24, 24, 24, Coeff::Uniform, 42);
+    println!(
+        "matrix: {}  n={}  nnz={}",
+        lap.name,
+        fmt_count(lap.n()),
+        fmt_count(lap.matrix.nnz())
+    );
+
+    // 2. Factor with the parallel CPU engine and nnz-sort ordering.
+    let opts = ParacOptions {
+        ordering: Ordering::NnzSort,
+        engine: Engine::Cpu { threads: 0 }, // auto
+        seed: 7,
+        ..Default::default()
+    };
+    let (factor, dt) = timed(|| factorize(&lap, &opts).expect("factorization"));
+    println!(
+        "factor: {} in {}  (nnz(G)={}, fill ratio {:.2})",
+        opts.engine.name(),
+        fmt_duration(dt),
+        fmt_count(factor.nnz()),
+        factor.fill_ratio(lap.matrix.nnz()),
+    );
+
+    // 3. Solve L x = b with ParAC-preconditioned CG.
+    let b = pcg::random_rhs(&lap, 1);
+    let pre = LdlPrecond::new(factor);
+    let (out, ds) = timed(|| pcg::solve(&lap.matrix, &b, &pre, &PcgOptions::default()));
+    println!(
+        "solve: {} iterations in {}  (relative residual {:.2e}, converged={})",
+        out.iters,
+        fmt_duration(ds),
+        out.rel_residual,
+        out.converged,
+    );
+    assert!(out.converged, "quickstart must converge");
+    println!("OK");
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the rust runtime.
+
+Interchange format is HLO text, not ``lowered.compile()`` /
+``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids that the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary then never touches
+python. Emits::
+
+    artifacts/pcg_n4096_k8.hlo.txt        # L2 Jacobi-PCG model
+    artifacts/spmv_n4096_k8.hlo.txt       # bare L1 SpMV
+    artifacts/sample_b64_k{16,64,256}.hlo.txt  # L1 clique sampling
+    artifacts/manifest.json               # shapes/dtypes per artifact
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static shapes — must match rust/src/runtime/sampler.rs and the
+# hlo_pcg example.
+PCG_N = 4096
+PCG_K = 8
+SAMPLE_B = 64
+SAMPLE_KS = (16, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_definitions():
+    """(name, fn, arg_specs, description) for every artifact."""
+    f32, i32 = jnp.float32, jnp.int32
+    defs = [
+        (
+            f"pcg_n{PCG_N}_k{PCG_K}",
+            model.pcg_entry,
+            [
+                _spec((PCG_N, PCG_K), f32),
+                _spec((PCG_N, PCG_K), i32),
+                _spec((PCG_N,), f32),
+                _spec((PCG_N,), f32),
+            ],
+            "Jacobi-PCG, 100 fixed iterations over padded-ELL",
+        ),
+        (
+            f"spmv_n{PCG_N}_k{PCG_K}",
+            model.spmv_entry,
+            [
+                _spec((PCG_N, PCG_K), f32),
+                _spec((PCG_N, PCG_K), i32),
+                _spec((PCG_N,), f32),
+            ],
+            "bare Pallas ELL SpMV",
+        ),
+    ]
+    for k in SAMPLE_KS:
+        defs.append(
+            (
+                f"sample_b{SAMPLE_B}_k{k}",
+                model.sample_entry,
+                [_spec((SAMPLE_B, k), f32), _spec((SAMPLE_B, k), f32)],
+                f"batched clique sampling, bucket width {k}",
+            )
+        )
+    return defs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, specs, desc in artifact_definitions():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "description": desc,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

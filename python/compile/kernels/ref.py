@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the pytest suite checks the
+kernels against (`assert_allclose`), and they document the exact
+semantics the rust runtime (`rust/src/runtime/sampler.rs`) relies on.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Padded-ELL SpMV: ``y[r] = sum_k vals[r, k] * x[cols[r, k]]``.
+
+    Padding slots carry ``vals == 0`` with an in-bounds self-referencing
+    column, so they contribute nothing.
+    """
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def sample_clique_ref(w: jnp.ndarray, u: jnp.ndarray):
+    """Batched AC clique sampling (Algorithm 2 inner loop), vectorized.
+
+    Args:
+      w: ``(B, K)`` f32 — merged neighbor weights per pivot, sorted
+        ascending, **front-padded** with zeros (padding first keeps the
+        ascending order valid).
+      u: ``(B, K)`` f32 — uniform draws in ``[0, 1)`` per sample slot
+        (host-generated from the per-pivot RNG stream).
+
+    Returns:
+      ``(j_idx, w_new)`` both ``(B, K)``:
+      * ``j_idx`` i32 — absolute index of the sampled partner for the
+        neighbor at each position ``i`` (−1 where no sample is drawn:
+        padding slots and the last live neighbor);
+      * ``w_new`` f32 — the fill edge's weight
+        ``w_i · (Σ_{t>i} w_t) / ℓ_kk`` (0 where invalid).
+
+    Semantics per row: ``P = cumsum(w)``; ``total = P[-1]``;
+    ``rest_i = total − P[i]``; partner
+    ``j = #{t : P[t] ≤ P[i] + u_i·rest_i}`` (inverse-CDF over the
+    suffix); valid iff ``w_i > 0`` and ``rest_i > 0``.
+    """
+    K = w.shape[1]
+    P = jnp.cumsum(w, axis=1)  # inclusive prefix sums
+    total = P[:, -1:]
+    below = P
+    rest = total - below
+    valid = (w > 0.0) & (rest > 1e-30)
+    target = below + u * rest
+    # j = count of prefix entries <= target  (first index with P > target)
+    j = jnp.sum(P[:, None, :] <= target[:, :, None], axis=2)
+    # Guard: partner strictly after i, inside the row.
+    i_idx = jnp.arange(K)[None, :]
+    j = jnp.clip(j, i_idx + 1, K - 1)
+    w_new = jnp.where(valid, w * rest / jnp.maximum(total, 1e-30), 0.0)
+    j_idx = jnp.where(valid, j, -1).astype(jnp.int32)
+    return j_idx, w_new.astype(jnp.float32)
+
+
+def jacobi_pcg_ref(vals, cols, inv_diag, b, iters: int):
+    """Reference Jacobi-preconditioned CG on an ELL operator.
+
+    Plain python loop (no scan) — the oracle for ``model.jacobi_pcg``.
+    Returns ``(x, res_norms)`` with ``res_norms`` of length ``iters``.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    z = inv_diag * r
+    p = z
+    rz = jnp.dot(r, z)
+    norms = []
+    for _ in range(iters):
+        ap = spmv_ell_ref(vals, cols, p)
+        pap = jnp.dot(p, ap)
+        alpha = jnp.where(pap > 0, rz / jnp.maximum(pap, 1e-30), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = inv_diag * r
+        rz_new = jnp.dot(r, z)
+        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p = z + beta * p
+        rz = rz_new
+        norms.append(jnp.linalg.norm(r))
+    return x, jnp.stack(norms)

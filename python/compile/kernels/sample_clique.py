@@ -1,0 +1,78 @@
+"""Pallas batched clique-sampling kernel — the paper's per-vertex
+stage-2 hot spot (Algorithm 2 / Algorithm 4 lines 17–22) as a Layer-1
+kernel.
+
+The GPU paper runs one thread block per pivot: sort by weight, suffix
+sums, then each lane draws its partner with a parallel binary search.
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of a block per
+pivot we **batch** `B` pivots into a `(B, K)` tile held in VMEM — the
+sort is pre-applied host-side (the rust coordinator keeps neighbors
+merged and weight-sorted anyway), the suffix CDF becomes a row cumsum,
+and the per-lane binary search becomes a vectorized rank computation
+`sum(P <= target)` over the tile: an all-compare that trades the
+device's `log K` search for one VPU-friendly dense comparison — the
+natural choice when K is small and fixed.
+
+Inputs are front-padded (zeros first keeps ascending order); the
+uniform draws come from the host so the samples reproduce the native
+engines' RNG streams exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the (B, K) batch processed per grid step; K ≤ 256 keeps the
+# (BLOCK_B, K, K) comparison cube small (8·256·256·4 B = 2 MiB < VMEM).
+BLOCK_B = 8
+
+
+def _sample_kernel(w_ref, u_ref, j_ref, wn_ref):
+    """One batch tile: cumsum CDF + rank-search + weight assignment."""
+    w = w_ref[...]  # (BLOCK_B, K)
+    u = u_ref[...]
+    K = w.shape[1]
+    P = jnp.cumsum(w, axis=1)
+    total = P[:, -1:]
+    rest = total - P
+    valid = (w > 0.0) & (rest > 1e-30)
+    target = P + u * rest
+    j = jnp.sum((P[:, None, :] <= target[:, :, None]).astype(jnp.int32), axis=2)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    j = jnp.clip(j, i_idx + 1, K - 1)
+    j_ref[...] = jnp.where(valid, j, -1).astype(jnp.int32)
+    wn_ref[...] = jnp.where(valid, w * rest / jnp.maximum(total, 1e-30), 0.0).astype(
+        jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sample_clique(w: jnp.ndarray, u: jnp.ndarray):
+    """Batched sampling over `(B, K)`; B % BLOCK_B == 0.
+
+    Returns `(j_idx i32, w_new f32)`, see `ref.sample_clique_ref`.
+    """
+    b, k = w.shape
+    assert b % BLOCK_B == 0, f"B={b} must be a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _sample_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=True,
+    )(w, u)

@@ -1,0 +1,54 @@
+"""Pallas ELL SpMV kernel — the solve-phase hot spot (Layer 1).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): rather than a
+CUDA-style one-warp-per-row gather, rows are tiled into VMEM blocks via
+``BlockSpec`` — each grid step loads a ``(BLOCK_ROWS, K)`` tile of
+values/columns plus the full ``x`` vector (N·4 bytes; at N=4096 that is
+16 KiB, far under VMEM), does a vectorized gather + row reduction on
+the VPU, and writes a ``(BLOCK_ROWS,)`` slice of ``y``. The MXU is not
+used — SpMV is bandwidth-bound (the paper's §3.1.1 point: AC/ParAC's
+operations don't block; same for its solve phase).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO (numerics are
+identical; real-TPU performance is estimated structurally in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    """One row-tile: gather x at the tile's column ids, reduce rows."""
+    vals = vals_ref[...]  # (BLOCK_ROWS, K)
+    cols = cols_ref[...]  # (BLOCK_ROWS, K)
+    x = x_ref[...]  # (N,)
+    gathered = jnp.take(x, cols, axis=0)  # VPU gather
+    y_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def spmv_ell(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """``y = A x`` for a padded-ELL matrix ``(N, K)``; N % BLOCK_ROWS == 0."""
+    n, k = vals.shape
+    assert n % BLOCK_ROWS == 0, f"N={n} must be a multiple of {BLOCK_ROWS}"
+    grid = (n // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # x resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(vals, cols, x)

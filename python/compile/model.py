@@ -1,0 +1,69 @@
+"""Layer 2 — the JAX compute graph built on the Pallas kernels.
+
+The paper's solve phase is PCG with the randomized factor; the
+fixed-shape AOT model compiled here is the **Jacobi-PCG inner loop**
+over a padded-ELL operator (`lax.scan`, fixed iteration count — PJRT
+executables need static shapes). The rust coordinator uses it as the
+L2 demonstration path (`examples/hlo_pcg.rs`): same numerics as the
+native rust PCG with a Jacobi preconditioner.
+
+Build-time only: nothing here is imported at serve/solve time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv_ell import spmv_ell
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def jacobi_pcg(vals, cols, inv_diag, b, iters: int = 100):
+    """Run `iters` fixed PCG steps; returns `(x, res_norm_history)`.
+
+    All shapes static: `vals/cols (N, K)`, `inv_diag/b (N,)`.
+    Singular or exhausted directions degrade to zero steps (`alpha = 0`)
+    instead of NaNs so the scan is total.
+    """
+
+    def step(state, _):
+        x, r, p, rz = state
+        ap = spmv_ell(vals, cols, p)
+        pap = jnp.dot(p, ap)
+        ok = pap > 0
+        alpha = jnp.where(ok, rz / jnp.maximum(pap, 1e-30), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = inv_diag * r
+        rz_new = jnp.dot(r, z)
+        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p = z + beta * p
+        return (x, r, p, rz_new), jnp.linalg.norm(r)
+
+    x0 = jnp.zeros_like(b)
+    z0 = inv_diag * b
+    init = (x0, b, z0, jnp.dot(b, z0))
+    (x, _, _, _), norms = jax.lax.scan(step, init, None, length=iters)
+    return x, norms
+
+
+def pcg_entry(vals, cols, inv_diag, b):
+    """AOT entry point (tuple output, fixed 100 iterations)."""
+    x, norms = jacobi_pcg(vals, cols, inv_diag, b, iters=100)
+    return (x, norms)
+
+
+def sample_entry(w, u):
+    """AOT entry point for the batched sampling kernel (tuple output)."""
+    from .kernels.sample_clique import sample_clique
+
+    j, wn = sample_clique(w, u)
+    return (j, wn)
+
+
+def spmv_entry(vals, cols, x):
+    """AOT entry point for a bare SpMV (tuple output)."""
+    return (spmv_ell(vals, cols, x),)

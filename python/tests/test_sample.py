@@ -1,0 +1,104 @@
+"""Pallas clique-sampling kernel vs the oracle + statistical checks."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import sample_clique_ref
+from compile.kernels.sample_clique import BLOCK_B, sample_clique
+
+
+def make_batch(rng, b, k):
+    """Random front-padded ascending weight rows + uniforms."""
+    w = np.zeros((b, k), np.float32)
+    u = rng.random((b, k)).astype(np.float32)
+    for row in range(b):
+        m = rng.integers(0, k + 1)
+        if m > 0:
+            ws = np.sort(rng.random(m).astype(np.float32) * 10 + 0.01)
+            w[row, k - m :] = ws
+    return jnp.asarray(w), jnp.asarray(u)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    k=st.sampled_from([4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_reference(k, seed):
+    rng = np.random.default_rng(seed)
+    b = 4 * BLOCK_B
+    w, u = make_batch(rng, b, k)
+    jk, wk = sample_clique(w, u)
+    jr, wr = sample_clique_ref(w, u)
+    np.testing.assert_array_equal(np.asarray(jk), np.asarray(jr))
+    assert_allclose(np.asarray(wk), np.asarray(wr), rtol=1e-6, atol=1e-7)
+
+
+def test_partner_is_strictly_later():
+    rng = np.random.default_rng(0)
+    w, u = make_batch(rng, BLOCK_B, 16)
+    j, wn = sample_clique(w, u)
+    j = np.asarray(j)
+    wn = np.asarray(wn)
+    wnp = np.asarray(w)
+    for row in range(BLOCK_B):
+        for i in range(16):
+            if j[row, i] >= 0:
+                assert j[row, i] > i
+                assert wnp[row, j[row, i]] > 0, "partner must be a live neighbor"
+                assert wn[row, i] > 0
+
+
+def test_invalid_rows_and_padding():
+    k = 8
+    w = np.zeros((BLOCK_B, k), np.float32)
+    # Row 0: empty. Row 1: single neighbor (no samples possible).
+    w[1, -1] = 3.0
+    u = np.full((BLOCK_B, k), 0.5, np.float32)
+    j, wn = sample_clique(jnp.asarray(w), jnp.asarray(u))
+    assert np.all(np.asarray(j)[0] == -1)
+    assert np.all(np.asarray(j)[1] == -1)
+    assert np.all(np.asarray(wn)[:2] == 0.0)
+
+
+def test_expectation_preserves_clique():
+    """E[w(i,j)] == w_i w_j / total over the uniform draws."""
+    k = 8
+    weights = np.array([0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 3.0], np.float32)
+    total = 6.0
+    rng = np.random.default_rng(42)
+    trials = 4000
+    acc = {}
+    for t in range(trials // BLOCK_B):
+        w = np.tile(weights, (BLOCK_B, 1))
+        u = rng.random((BLOCK_B, k)).astype(np.float32)
+        j, wn = sample_clique(jnp.asarray(w), jnp.asarray(u))
+        j = np.asarray(j)
+        wn = np.asarray(wn)
+        for row in range(BLOCK_B):
+            for i in range(k):
+                if j[row, i] >= 0:
+                    key = (i, int(j[row, i]))
+                    acc[key] = acc.get(key, 0.0) + float(wn[row, i])
+    n_total = (trials // BLOCK_B) * BLOCK_B
+    for (i, j_), s in acc.items():
+        want = weights[i] * weights[j_] / total
+        got = s / n_total
+        assert abs(got - want) < 0.15 * max(want, 0.2), f"pair {(i, j_)}: {got} vs {want}"
+
+
+def test_weight_mass_deterministic():
+    """Σ_i w_new_i is u-independent: w_i·rest_i/total summed."""
+    k = 16
+    rng = np.random.default_rng(7)
+    w, _ = make_batch(rng, BLOCK_B, k)
+    u1 = jnp.asarray(rng.random((BLOCK_B, k)).astype(np.float32))
+    u2 = jnp.asarray(rng.random((BLOCK_B, k)).astype(np.float32))
+    _, w1 = sample_clique(w, u1)
+    _, w2 = sample_clique(w, u2)
+    assert_allclose(
+        np.asarray(w1).sum(axis=1), np.asarray(w2).sum(axis=1), rtol=1e-5
+    )

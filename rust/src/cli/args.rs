@@ -1,0 +1,76 @@
+//! Minimal `--key value` / `--flag` argument parser.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options and bare `--flag`s (value
+    /// `"true"`).
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Parsed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["repro", "table2", "--scale", "small", "--threads=8", "--verbose"]);
+        assert_eq!(a.positional, vec!["repro", "table2"]);
+        assert_eq!(a.get("scale", "medium"), "small");
+        assert_eq!(a.get_parse::<usize>("threads", 1), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--x", "--y", "3"]);
+        assert!(a.flag("x"));
+        assert_eq!(a.get_parse::<i32>("y", 0), 3);
+    }
+}

@@ -1,0 +1,3 @@
+//! Hand-rolled CLI argument parsing (no clap offline).
+
+pub mod args;

@@ -1,0 +1,7 @@
+//! Pipeline coordinator and experiment drivers (filled in alongside the
+//! runtime; see `pipeline` / `report` / repro drivers).
+
+pub mod incremental;
+pub mod pipeline;
+pub mod report;
+pub mod repro;

@@ -1,0 +1,183 @@
+//! The experiment pipeline: matrix → ordering → factor → PCG → report.
+//!
+//! Every repro driver (Tables 2–3, Figures 3–4) and example goes through
+//! [`run`] so timings are measured uniformly: `setup_secs` is
+//! preconditioner construction (ParAC factor time / ichol factor time /
+//! AMG setup time — the paper's "Factorize/Setup/Analysis" columns),
+//! `solve_secs` is the PCG loop.
+
+use crate::factor::{self, ParacOptions};
+use crate::graph::Laplacian;
+use crate::precond::amg::AmgOptions;
+use crate::precond::{AmgPrecond, Ichol0, IcholT, JacobiPrecond, LdlPrecond, Preconditioner};
+use crate::solve::pcg::{self, PcgOptions};
+use crate::util::Timer;
+
+/// Which solver configuration to run.
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// ParAC with the given options; `level_threads > 0` uses the
+    /// level-scheduled parallel triangular solve.
+    Parac { opts: ParacOptions, level_threads: usize },
+    /// Zero fill-in incomplete Cholesky (cuSPARSE `csric02` proxy).
+    Ichol0,
+    /// Threshold ICT; `droptol = None` calibrates fill to `fill_target`.
+    IcholT { droptol: Option<f64>, fill_target: Option<usize> },
+    /// Smoothed-aggregation AMG (HyPre / AmgX proxy).
+    Amg,
+    /// Jacobi diagonal scaling.
+    Jacobi,
+}
+
+impl Method {
+    /// Display name for report rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Parac { .. } => "ParAC",
+            Method::Ichol0 => "ichol(0)",
+            Method::IcholT { .. } => "ichol-t",
+            Method::Amg => "AMG",
+            Method::Jacobi => "Jacobi",
+        }
+    }
+}
+
+/// One pipeline run's outcome — a table row.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Method display name.
+    pub method: &'static str,
+    /// Preconditioner construction seconds.
+    pub setup_secs: f64,
+    /// PCG solve seconds.
+    pub solve_secs: f64,
+    /// PCG iterations.
+    pub iters: usize,
+    /// Final (true) relative residual.
+    pub rel_residual: f64,
+    /// Converged within the budget?
+    pub converged: bool,
+    /// Preconditioner nonzeros.
+    pub nnz: usize,
+    /// Factor statistics (ParAC only).
+    pub factor_stats: Option<crate::factor::FactorStats>,
+}
+
+/// Run one method on one Laplacian with a seeded right-hand side.
+pub fn run(lap: &Laplacian, method: &Method, pcg_opts: &PcgOptions, rhs_seed: u64) -> RunResult {
+    let b = pcg::random_rhs(lap, rhs_seed);
+    run_with_rhs(lap, method, pcg_opts, &b)
+}
+
+/// [`run`] with an explicit right-hand side.
+pub fn run_with_rhs(
+    lap: &Laplacian,
+    method: &Method,
+    pcg_opts: &PcgOptions,
+    b: &[f64],
+) -> RunResult {
+    let timer = Timer::start();
+    let (pre, factor_stats): (Box<dyn Preconditioner>, _) = match method {
+        Method::Parac { opts, level_threads } => {
+            let f = factor::factorize(lap, opts).expect("ParAC factorization failed");
+            let stats = f.stats.clone();
+            let pre: Box<dyn Preconditioner> = if *level_threads > 0 {
+                Box::new(LdlPrecond::with_level_schedule(f, *level_threads))
+            } else {
+                Box::new(LdlPrecond::new(f))
+            };
+            (pre, Some(stats))
+        }
+        Method::Ichol0 => (Box::new(Ichol0::new(&lap.matrix)), None),
+        Method::IcholT { droptol, fill_target } => {
+            let f = match (droptol, fill_target) {
+                (Some(t), _) => IcholT::new(&lap.matrix, *t),
+                (None, Some(nnz)) => IcholT::with_fill_target(&lap.matrix, *nnz),
+                (None, None) => IcholT::new(&lap.matrix, 1e-3),
+            };
+            (Box::new(f), None)
+        }
+        Method::Amg => (Box::new(AmgPrecond::new(&lap.matrix, &AmgOptions::default())), None),
+        Method::Jacobi => (Box::new(JacobiPrecond::new(&lap.matrix)), None),
+    };
+    let setup_secs = timer.secs();
+    let nnz = pre.nnz();
+
+    let t2 = Timer::start();
+    let out = pcg::solve(&lap.matrix, b, pre.as_ref(), pcg_opts);
+    let solve_secs = t2.secs();
+    RunResult {
+        method: method.name(),
+        setup_secs,
+        solve_secs,
+        iters: out.iters,
+        rel_residual: out.rel_residual,
+        converged: out.converged,
+        nnz,
+        factor_stats,
+    }
+}
+
+/// The paper's default ParAC method for CPU tables (AMD ordering).
+pub fn parac_cpu_method(threads: usize, seed: u64) -> Method {
+    Method::Parac {
+        opts: ParacOptions {
+            ordering: crate::ordering::Ordering::Amd,
+            engine: factor::Engine::Cpu { threads },
+            seed,
+            ..Default::default()
+        },
+        level_threads: 0,
+    }
+}
+
+/// The paper's default ParAC method for GPU tables (nnz-sort ordering,
+/// gpusim engine). The level schedule is analyzed (modeling the
+/// cuSPARSE SPSV analysis stage of Table 3) but executed serially —
+/// this testbed has one core, so a parallel sweep would only add
+/// scheduling overhead; `benches/bench_trisolve.rs` quantifies that
+/// trade-off explicitly.
+pub fn parac_gpu_method(blocks: usize, seed: u64) -> Method {
+    Method::Parac {
+        opts: ParacOptions {
+            ordering: crate::ordering::Ordering::NnzSort,
+            engine: factor::Engine::GpuSim { blocks },
+            seed,
+            ..Default::default()
+        },
+        level_threads: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn parac_pipeline_end_to_end() {
+        let lap = generators::grid2d(20, 20, generators::Coeff::Uniform, 0);
+        let o = PcgOptions { max_iter: 500, tol: 1e-8, ..Default::default() };
+        let r = run(&lap, &parac_cpu_method(2, 1), &o, 7);
+        assert!(r.converged, "rel={}", r.rel_residual);
+        assert!(r.iters < 200);
+        assert!(r.factor_stats.is_some());
+        assert!(r.nnz > 0);
+    }
+
+    #[test]
+    fn all_methods_converge_on_small_mesh() {
+        let lap = generators::grid2d(14, 14, generators::Coeff::Uniform, 0);
+        let o = PcgOptions { max_iter: 3000, tol: 1e-7, ..Default::default() };
+        for m in [
+            parac_gpu_method(2, 3),
+            Method::Ichol0,
+            Method::IcholT { droptol: Some(1e-3), fill_target: None },
+            Method::Amg,
+            Method::Jacobi,
+        ] {
+            let r = run(&lap, &m, &o, 11);
+            assert!(r.converged, "{} rel={}", r.method, r.rel_residual);
+        }
+    }
+}

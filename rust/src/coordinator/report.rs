@@ -1,0 +1,89 @@
+//! Markdown table rendering for experiment reports.
+
+/// A simple markdown table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        let _ = ncol;
+        out
+    }
+}
+
+/// Format seconds as the paper's tables do (seconds with 2 decimals).
+pub fn secs(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format milliseconds.
+pub fn ms(x: f64) -> String {
+    format!("{:.2}", x * 1e3)
+}
+
+/// Format a residual in scientific notation (`4.61e-7` style).
+pub fn sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new(&["name", "iters"]);
+        t.row(vec!["grid".into(), "42".into()]);
+        let s = t.render();
+        assert!(s.contains("| name |"));
+        assert!(s.contains("| grid | 42    |") || s.contains("| grid | 42"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(secs(1.234), "1.23");
+        assert_eq!(ms(0.0456), "45.60");
+        assert!(sci(4.61e-7).contains("e-7"));
+    }
+}

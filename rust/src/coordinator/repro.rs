@@ -1,0 +1,222 @@
+//! Experiment regenerators — one driver per table / figure in the
+//! paper's evaluation (§6). Each prints a markdown table with the same
+//! rows and columns as the paper (matrix suite in Table 1 order) and is
+//! reachable both from `parac repro …` and from the bench harness.
+
+use super::pipeline::{self, Method};
+use super::report::{sci, secs, Table};
+use crate::etree;
+use crate::factor::{self, Engine, ParacOptions};
+use crate::graph::suite::{Scale, SUITE};
+use crate::ordering::Ordering;
+use crate::solve::pcg::PcgOptions;
+use crate::util::{default_threads, fmt_count, timed, Timer};
+
+fn pcg_opts() -> PcgOptions {
+    // Paper tables converge to ~1e-6..1e-7 relative residual.
+    PcgOptions { tol: 1e-7, max_iter: 1000, ..Default::default() }
+}
+
+fn workers(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
+/// Table 2 — CPU convergence: ParAC (AMD) vs fill-matched ICT vs AMG
+/// (HyPre proxy).
+pub fn table2(scale: Scale, threads: usize) {
+    let t = workers(threads);
+    println!("## Table 2 (CPU): ParAC vs ichol-t vs AMG  [scale {scale:?}, {t} threads]\n");
+    let mut tab = Table::new(&[
+        "problem", "ParAC fact(s)", "ParAC solve(s)", "ParAC it", "ParAC res", "ICT fact(s)",
+        "ICT solve(s)", "ICT it", "ICT res", "AMG setup(s)", "AMG solve(s)", "AMG it", "AMG res",
+    ]);
+    for e in SUITE {
+        let lap = (e.build)(scale);
+        let o = pcg_opts();
+        let rp = pipeline::run(&lap, &pipeline::parac_cpu_method(t, 1), &o, 7);
+        let target = rp.nnz;
+        let ri = pipeline::run(
+            &lap,
+            &Method::IcholT { droptol: None, fill_target: Some(target) },
+            &o,
+            7,
+        );
+        let ra = pipeline::run(&lap, &Method::Amg, &o, 7);
+        tab.row(vec![
+            e.name.into(),
+            secs(rp.setup_secs),
+            secs(rp.solve_secs),
+            rp.iters.to_string(),
+            sci(rp.rel_residual),
+            secs(ri.setup_secs),
+            secs(ri.solve_secs),
+            ri.iters.to_string(),
+            sci(ri.rel_residual),
+            secs(ra.setup_secs),
+            secs(ra.solve_secs),
+            ra.iters.to_string(),
+            sci(ra.rel_residual),
+        ]);
+    }
+    print!("{}", tab.render());
+}
+
+/// Table 3 — GPU-model results: ParAC (gpusim, nnz-sort, level-parallel
+/// SPSV) vs AMG (AmgX proxy) vs IC(0)+CG (cuSPARSE proxy). Times in ms.
+pub fn table3(scale: Scale, blocks: usize) {
+    let b = workers(blocks);
+    println!(
+        "## Table 3 (GPU model): ParAC(nnz-sort) vs AMG vs ichol(0)  [scale {scale:?}, {b} blocks]\n"
+    );
+    let mut tab = Table::new(&[
+        "problem", "ParAC factor(ms)", "ParAC solve(ms)", "ParAC total(ms)", "ParAC it",
+        "ParAC res", "AMG total(ms)", "AMG it", "AMG res", "IC0 factor(ms)", "IC0 solve(ms)",
+        "IC0 it", "IC0 res",
+    ]);
+    for e in SUITE {
+        let lap = (e.build)(scale);
+        let o = PcgOptions { tol: 1e-7, max_iter: 10_000, ..Default::default() };
+        let rp = pipeline::run(&lap, &pipeline::parac_gpu_method(b, 1), &o, 7);
+        let ra = pipeline::run(&lap, &Method::Amg, &pcg_opts(), 7);
+        let r0 = pipeline::run(&lap, &Method::Ichol0, &o, 7);
+        tab.row(vec![
+            e.name.into(),
+            format!("{:.1}", rp.setup_secs * 1e3),
+            format!("{:.1}", rp.solve_secs * 1e3),
+            format!("{:.1}", (rp.setup_secs + rp.solve_secs) * 1e3),
+            rp.iters.to_string(),
+            sci(rp.rel_residual),
+            format!("{:.1}", (ra.setup_secs + ra.solve_secs) * 1e3),
+            ra.iters.to_string(),
+            sci(ra.rel_residual),
+            format!("{:.1}", r0.setup_secs * 1e3),
+            format!("{:.1}", r0.solve_secs * 1e3),
+            r0.iters.to_string(),
+            sci(r0.rel_residual),
+        ]);
+    }
+    print!("{}", tab.render());
+}
+
+/// Figure 3 — CPU factor-time scaling over threads for the three
+/// orderings.
+pub fn fig3(scale: Scale, max_threads: usize) {
+    let maxt = workers(max_threads);
+    let mut counts = vec![1usize];
+    while counts.last().unwrap() * 2 <= maxt {
+        counts.push(counts.last().unwrap() * 2);
+    }
+    println!("## Figure 3: CPU factor time (s) vs threads  [scale {scale:?}]\n");
+    let mut headers: Vec<String> = vec!["problem".into(), "ordering".into()];
+    headers.extend(counts.iter().map(|c| format!("T={c}")));
+    headers.push("speedup".into());
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut tab = Table::new(&hrefs);
+    for e in SUITE {
+        let lap = (e.build)(scale);
+        for ord in Ordering::paper_set() {
+            let mut times = Vec::new();
+            for &t in &counts {
+                let opts = ParacOptions {
+                    ordering: ord,
+                    engine: Engine::Cpu { threads: t },
+                    seed: 1,
+                    ..Default::default()
+                };
+                let (_, dt) = timed(|| factor::factorize(&lap, &opts).unwrap());
+                times.push(dt);
+            }
+            let mut row = vec![e.name.to_string(), ord.name().to_string()];
+            row.extend(times.iter().map(|t| format!("{t:.3}")));
+            row.push(format!("{:.1}x", times[0] / times.last().unwrap().max(1e-9)));
+            tab.row(row);
+        }
+    }
+    print!("{}", tab.render());
+}
+
+/// Hash-ablation (§5.3.4 / §7.1): random-permutation vs identity hash
+/// codes in the gpusim workspace — probe-length and wall-time impact.
+/// The factor itself is hash-independent (pinned by tests); only the
+/// probing behaviour changes.
+pub fn hash_ablation(scale: Scale, blocks: usize) {
+    use crate::factor::gpusim::factorize_csr_hash;
+    use crate::gpusim::hashmap::HashKind;
+    let b = workers(blocks);
+    println!("## Hash ablation (gpusim workspace): random-permutation vs identity\n");
+    let mut tab = Table::new(&[
+        "problem", "hash", "factor(ms)", "max probe", "probe steps / fill",
+    ]);
+    for name in ["uniform_3d_poisson", "com-LiveJournal", "GAP-road", "G3_circuit"] {
+        let e = crate::graph::suite::by_name(name).unwrap();
+        let lap = (e.build)(scale);
+        let perm = Ordering::NnzSort.compute(&lap, 1);
+        let permuted = lap.matrix.permute_sym(&perm);
+        for (kind, label) in [(HashKind::RandomPerm, "random-perm"), (HashKind::Identity, "identity")] {
+            let timer = Timer::start();
+            let (_, _, stats) =
+                factorize_csr_hash(&permuted, 1, true, b, 6.0, kind, false).unwrap();
+            let dt = timer.secs();
+            tab.row(vec![
+                e.name.into(),
+                label.into(),
+                format!("{:.1}", dt * 1e3),
+                stats.max_probe.to_string(),
+                format!("{:.2}", stats.probe_steps as f64 / stats.fills.max(1) as f64),
+            ]);
+        }
+    }
+    print!("{}", tab.render());
+}
+
+/// Figure 4 — e-tree heights, triangular-solve critical path, gpusim
+/// factor time, and fill ratio per ordering.
+pub fn fig4(scale: Scale, blocks: usize) {
+    let b = workers(blocks);
+    println!("## Figure 4: e-tree depth / critical path / GPU-model time / fill  [scale {scale:?}]\n");
+    let mut tab = Table::new(&[
+        "problem", "ordering", "classical e-tree", "actual e-tree", "critical path",
+        "gpusim factor(ms)", "fill ratio",
+    ]);
+    for e in SUITE {
+        let lap = (e.build)(scale);
+        for ord in Ordering::paper_set() {
+            let opts = ParacOptions {
+                ordering: ord,
+                engine: Engine::GpuSim { blocks: b },
+                seed: 1,
+                ..Default::default()
+            };
+            let timer = Timer::start();
+            let f = factor::factorize(&lap, &opts).unwrap();
+            let dt = timer.secs();
+            // Heights are measured on the *permuted* matrix (the one the
+            // elimination actually ran on).
+            let perm = f.perm.clone().unwrap();
+            let permuted = lap.matrix.permute_sym(&perm);
+            let rep = etree::report(&permuted, &f.g);
+            tab.row(vec![
+                e.name.into(),
+                ord.name().into(),
+                rep.classical_height.to_string(),
+                rep.actual_height.to_string(),
+                rep.critical_path.to_string(),
+                format!("{:.1}", dt * 1e3),
+                format!("{:.2}", rep.fill_ratio),
+            ]);
+        }
+    }
+    print!("{}", tab.render());
+    println!(
+        "\n(n per problem at this scale: {})",
+        SUITE
+            .iter()
+            .map(|e| format!("{}={}", e.name, fmt_count((e.build)(scale).n())))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}

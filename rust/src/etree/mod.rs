@@ -1,0 +1,212 @@
+//! Elimination-tree analytics — everything Figure 4 measures.
+//!
+//! * [`etree_classical`] — Liu's union-find e-tree of the *classical*
+//!   (no-dropping) Cholesky factorization, computed symbolically from the
+//!   input matrix. Its height is the paper's "classical e-tree height":
+//!   the dependency depth a conventional parallel factorization would be
+//!   limited by.
+//! * [`etree_from_factor`] — the *actual* e-tree of a computed randomized
+//!   factor (parent = first sub-diagonal nonzero per column). Sampling
+//!   cuts edges, so this tree is much shallower — the source of ParAC's
+//!   extra parallelism (paper §4.1).
+//! * [`trisolve_levels`] — level schedule / critical path of the
+//!   triangular-solve DAG of the factor ("longest path" in Fig. 4),
+//!   which bounds parallel triangular-solve performance.
+
+use crate::sparse::{Csc, Csr};
+
+/// Liu's elimination tree of the complete Cholesky factor of a symmetric
+/// matrix, without forming the factor. Returns `parent[v]` (`-1` = root).
+pub fn etree_classical(a: &Csr) -> Vec<i64> {
+    let n = a.nrows;
+    let mut parent = vec![-1i64; n];
+    let mut ancestor = vec![-1i64; n];
+    for i in 0..n {
+        for &kc in a.row_indices(i) {
+            let mut k = kc as i64;
+            if k >= i as i64 {
+                continue;
+            }
+            // Walk from k to the root of its current subtree, compressing
+            // the path onto i.
+            while ancestor[k as usize] != -1 && ancestor[k as usize] != i as i64 {
+                let next = ancestor[k as usize];
+                ancestor[k as usize] = i as i64;
+                k = next;
+            }
+            if ancestor[k as usize] == -1 {
+                ancestor[k as usize] = i as i64;
+                parent[k as usize] = i as i64;
+            }
+        }
+    }
+    parent
+}
+
+/// E-tree of a computed (possibly incomplete/randomized) factor: the
+/// parent of column `k` is the first sub-diagonal nonzero row in `G(:,k)`.
+/// `g` stores the strictly-lower part of the unit-lower factor in CSC.
+pub fn etree_from_factor(g: &Csc) -> Vec<i64> {
+    let n = g.ncols;
+    let mut parent = vec![-1i64; n];
+    for k in 0..n {
+        let rows = g.col_rows(k);
+        if let Some(&r) = rows.first() {
+            parent[k] = r as i64;
+        }
+    }
+    parent
+}
+
+/// Height of a forest given `parent` pointers (levels counted in
+/// vertices: an isolated vertex has height 1). Requires the e-tree
+/// property `parent[v] > v`.
+pub fn tree_height(parent: &[i64]) -> usize {
+    let n = parent.len();
+    let mut depth = vec![1u32; n];
+    let mut best = if n == 0 { 0 } else { 1 };
+    // parent > child, so a single ascending pass computes depths.
+    for v in 0..n {
+        let p = parent[v];
+        if p >= 0 {
+            debug_assert!(p as usize > v, "e-tree parents must have larger labels");
+            let d = depth[v] + 1;
+            if d > depth[p as usize] {
+                depth[p as usize] = d;
+                if d as usize > best {
+                    best = d as usize;
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Level schedule of the forward-triangular-solve DAG: `level[k] = 1 +
+/// max level over columns j with G[k,j] ≠ 0`. Returns `(levels,
+/// critical_path_len)`. `g` in CSC (strictly lower).
+pub fn trisolve_levels(g: &Csc) -> (Vec<u32>, usize) {
+    let n = g.ncols;
+    let mut level = vec![1u32; n];
+    let mut maxl = if n == 0 { 0 } else { 1 };
+    // Column k finalizes level[k] before any row below it is visited —
+    // ascending order works because dependencies point downward.
+    for k in 0..n {
+        let lk = level[k];
+        if lk as usize > maxl {
+            maxl = lk as usize;
+        }
+        for &r in g.col_rows(k) {
+            let r = r as usize;
+            if level[r] <= lk {
+                level[r] = lk + 1;
+            }
+        }
+    }
+    (level, maxl)
+}
+
+/// Histogram of level widths — the parallelism profile (how many columns
+/// can be processed concurrently at each step of a level-scheduled
+/// solve).
+pub fn level_histogram(levels: &[u32]) -> Vec<usize> {
+    let maxl = levels.iter().copied().max().unwrap_or(0) as usize;
+    let mut h = vec![0usize; maxl];
+    for &l in levels {
+        h[(l - 1) as usize] += 1;
+    }
+    h
+}
+
+/// Summary statistics for one factor — a Fig. 4 row.
+#[derive(Clone, Debug)]
+pub struct EtreeReport {
+    /// Height of the classical (symbolic, no-drop) e-tree of the input.
+    pub classical_height: usize,
+    /// Height of the actual e-tree of the computed factor.
+    pub actual_height: usize,
+    /// Critical path of the factor's triangular-solve DAG.
+    pub critical_path: usize,
+    /// Fill ratio `2·nnz(G) / nnz(L)` as defined under Fig. 4.
+    pub fill_ratio: f64,
+}
+
+/// Compute the full Fig. 4 metric set for `(input, factor)`.
+pub fn report(input: &Csr, g: &Csc) -> EtreeReport {
+    let classical = etree_classical(input);
+    let actual = etree_from_factor(g);
+    let (_, cp) = trisolve_levels(g);
+    EtreeReport {
+        classical_height: tree_height(&classical),
+        actual_height: tree_height(&actual),
+        critical_path: cp,
+        fill_ratio: 2.0 * g.nnz() as f64 / input.nnz() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn path_etree_is_a_chain() {
+        let l = generators::path(10);
+        let parent = etree_classical(&l.matrix);
+        for v in 0..9 {
+            assert_eq!(parent[v], v as i64 + 1);
+        }
+        assert_eq!(parent[9], -1);
+        assert_eq!(tree_height(&parent), 10);
+    }
+
+    #[test]
+    fn star_etree_is_flat_when_hub_last() {
+        // Star with hub at the end: no fill, all leaves point at hub.
+        let n = 8u32;
+        let edges: Vec<_> = (0..n - 1).map(|i| (i, n - 1, 1.0)).collect();
+        let l = crate::graph::Laplacian::from_edges(n as usize, &edges, "star-last");
+        let parent = etree_classical(&l.matrix);
+        for v in 0..(n - 1) as usize {
+            assert_eq!(parent[v], (n - 1) as i64);
+        }
+        assert_eq!(tree_height(&parent), 2);
+    }
+
+    #[test]
+    fn grid_etree_height_between_bounds() {
+        let l = generators::grid2d(8, 8, generators::Coeff::Uniform, 0);
+        let parent = etree_classical(&l.matrix);
+        let h = tree_height(&parent);
+        assert!(h >= 8, "height {h} too small for an 8x8 grid");
+        assert!(h <= 64);
+    }
+
+    #[test]
+    fn factor_etree_and_levels() {
+        // Hand-built strictly-lower factor on 4 columns:
+        // col0 -> rows {1,3}, col1 -> {2}, col2 -> {}, col3 -> {}.
+        let mut coo = Coo::new(4, 4);
+        coo.push(1, 0, -0.5);
+        coo.push(3, 0, -0.5);
+        coo.push(2, 1, -1.0);
+        let g = crate::sparse::Csc::from_csr(&coo.to_csr());
+        let parent = etree_from_factor(&g);
+        assert_eq!(parent, vec![1, 2, -1, -1]);
+        assert_eq!(tree_height(&parent), 3);
+        let (levels, cp) = trisolve_levels(&g);
+        assert_eq!(levels, vec![1, 2, 3, 2]);
+        assert_eq!(cp, 3);
+        assert_eq!(level_histogram(&levels), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn empty_factor_levels() {
+        let g = crate::sparse::Csc::zero(5);
+        let (levels, cp) = trisolve_levels(&g);
+        assert!(levels.iter().all(|&l| l == 1));
+        assert_eq!(cp, 1);
+        assert_eq!(tree_height(&etree_from_factor(&g)), 1);
+    }
+}

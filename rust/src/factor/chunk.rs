@@ -1,0 +1,230 @@
+//! Shared bump-allocated arenas — the paper's "one large chunk `O`"
+//! (§5.2.1): instead of per-column allocation (malloc scalability
+//! ceiling, lock contention — the Rchol bottleneck the paper calls out),
+//! every worker reserves space with a single atomic fetch-add and writes
+//! into its disjoint slice through raw pointers.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Null index for arena-linked lists.
+pub const NIL: usize = usize::MAX;
+
+/// A fixed-capacity buffer shared across threads. Safety contract:
+/// writers only touch indices inside a region they reserved from a bump
+/// counter; readers only read after synchronizing with the writer
+/// (release/acquire through an atomic the engines already maintain).
+pub struct SharedBuf<T> {
+    buf: Box<[UnsafeCell<T>]>,
+}
+
+// SAFETY: access discipline is enforced by the engines (disjoint bump
+// regions + release/acquire publication); T is plain data.
+unsafe impl<T: Send> Sync for SharedBuf<T> {}
+unsafe impl<T: Send> Send for SharedBuf<T> {}
+
+impl<T: Copy + Default> SharedBuf<T> {
+    /// Allocate with `cap` default-initialized slots.
+    pub fn new(cap: usize) -> Self {
+        let mut v = Vec::with_capacity(cap);
+        v.resize_with(cap, || UnsafeCell::new(T::default()));
+        SharedBuf { buf: v.into_boxed_slice() }
+    }
+
+    /// Capacity.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether capacity is zero.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Write slot `i`.
+    ///
+    /// # Safety
+    /// `i` must be inside a region reserved by this thread, or otherwise
+    /// free of concurrent access.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        *self.buf[i].get() = v;
+    }
+
+    /// Read slot `i`.
+    ///
+    /// # Safety
+    /// The write to `i` must happen-before this read (engine-level
+    /// synchronization).
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T {
+        *self.buf[i].get()
+    }
+}
+
+/// Bump allocator over an abstract capacity.
+pub struct Bump {
+    head: AtomicUsize,
+    cap: usize,
+}
+
+impl Bump {
+    /// New allocator of `cap` slots.
+    pub fn new(cap: usize) -> Self {
+        Bump { head: AtomicUsize::new(0), cap }
+    }
+
+    /// Reserve `count` contiguous slots; `None` when exhausted.
+    #[inline]
+    pub fn alloc(&self, count: usize) -> Option<usize> {
+        let start = self.head.fetch_add(count, Ordering::Relaxed);
+        if start + count > self.cap {
+            None
+        } else {
+            Some(start)
+        }
+    }
+
+    /// High-water mark (may exceed cap after a failed alloc).
+    pub fn used(&self) -> usize {
+        self.head.load(Ordering::Relaxed).min(self.cap)
+    }
+
+    /// Capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// The fill arena: nodes `(row, val, next)` forming per-vertex
+/// linked lists of pending fill-in edges (CPU engine stage 3 → stage 1).
+pub struct FillArena {
+    /// Target vertex of the fill edge (the larger endpoint).
+    pub rows: SharedBuf<u32>,
+    /// Edge weight.
+    pub vals: SharedBuf<f64>,
+    /// Next node in the owner's list (`NIL` terminates). Atomic because
+    /// it is written during lock-free pushes.
+    pub next: Box<[AtomicUsize]>,
+    /// Slot allocator.
+    pub bump: Bump,
+}
+
+impl FillArena {
+    /// Allocate an arena of `cap` nodes.
+    pub fn new(cap: usize) -> Self {
+        let mut next = Vec::with_capacity(cap);
+        next.resize_with(cap, || AtomicUsize::new(NIL));
+        FillArena {
+            rows: SharedBuf::new(cap),
+            vals: SharedBuf::new(cap),
+            next: next.into_boxed_slice(),
+            bump: Bump::new(cap),
+        }
+    }
+
+    /// Lock-free push of node `idx` (fields already written) onto the
+    /// list headed by `head` — the paper's "atomic exchange to preserve
+    /// the integrity of the linked-list".
+    #[inline]
+    pub fn push(&self, head: &AtomicUsize, idx: usize) {
+        loop {
+            let old = head.load(Ordering::Relaxed);
+            self.next[idx].store(old, Ordering::Relaxed);
+            if head
+                .compare_exchange_weak(old, idx, Ordering::Release, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn bump_respects_capacity() {
+        let b = Bump::new(10);
+        assert_eq!(b.alloc(4), Some(0));
+        assert_eq!(b.alloc(6), Some(4));
+        assert_eq!(b.alloc(1), None);
+        assert_eq!(b.used(), 10);
+    }
+
+    #[test]
+    fn shared_buf_roundtrip() {
+        let s: SharedBuf<u64> = SharedBuf::new(8);
+        unsafe {
+            s.write(3, 42);
+            assert_eq!(s.read(3), 42);
+            assert_eq!(s.read(0), 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_push_preserves_all_nodes() {
+        // 8 threads × 1000 pushes onto one list: all nodes must be
+        // reachable exactly once.
+        let threads = 8;
+        let per = 1000;
+        let arena = FillArena::new(threads * per);
+        let head = AtomicUsize::new(NIL);
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let arena = &arena;
+                let head = &head;
+                s.spawn(move || {
+                    for i in 0..per {
+                        let idx = arena.bump.alloc(1).unwrap();
+                        unsafe {
+                            arena.rows.write(idx, (t * per + i) as u32);
+                            arena.vals.write(idx, 1.0);
+                        }
+                        arena.push(head, idx);
+                    }
+                });
+            }
+        });
+        let mut seen = vec![false; threads * per];
+        let mut cur = head.load(Ordering::Acquire);
+        let mut count = 0;
+        while cur != NIL {
+            let r = unsafe { arena.rows.read(cur) } as usize;
+            assert!(!seen[r], "node {r} seen twice");
+            seen[r] = true;
+            count += 1;
+            cur = arena.next[cur].load(Ordering::Relaxed);
+        }
+        assert_eq!(count, threads * per);
+    }
+
+    #[test]
+    fn concurrent_bump_alloc_disjoint() {
+        let b = Bump::new(100_000);
+        let ranges: Vec<(usize, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local = Vec::new();
+                        for sz in 1..50 {
+                            if let Some(start) = b.alloc(sz) {
+                                local.push((start, sz));
+                            }
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let mut sorted = ranges.clone();
+        sorted.sort();
+        for w in sorted.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "overlapping allocations");
+        }
+    }
+}

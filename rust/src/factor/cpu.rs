@@ -1,0 +1,345 @@
+//! Parallel left-looking CPU engine — Algorithm 3.
+//!
+//! Workers claim positions in the dynamic job queue and eliminate ready
+//! vertices. Per elimination:
+//!
+//! 1. **Gather** (left-looking): read the vertex's original higher
+//!    neighbors from the input CSR and traverse its lock-free fill list,
+//!    then merge duplicates (sorted by `(row, val)` so float summation —
+//!    and therefore the factor — is schedule-independent).
+//! 2. **Sample**: sort merged neighbors by weight, run SampleClique with
+//!    the per-vertex RNG stream.
+//! 3. **Update**: push each sampled edge onto the smaller endpoint's
+//!    fill list (atomic-exchange push into the shared bump arena),
+//!    increment `dp[larger]`, then cut this vertex's edges
+//!    (`dp[v] -= multiplicity`) and enqueue anything that hit zero.
+//!
+//! Memory: one shared fill arena and one shared output arena, both
+//! bump-allocated (§5.2.1) — no malloc, no locks on the hot path.
+
+use super::chunk::{Bump, FillArena, SharedBuf, NIL};
+use super::depend::DepCounts;
+use super::ldl;
+use super::queue::JobQueue;
+use super::sample;
+use super::stats::{FactorStats, StatsCollector};
+use super::FactorError;
+use crate::sparse::{Csc, Csr};
+use crate::util::{default_threads, Timer};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Shared engine state (borrowed by every worker).
+struct Shared<'a> {
+    a: &'a Csr,
+    fills: FillArena,
+    heads: Box<[AtomicUsize]>,
+    out_rows: SharedBuf<u32>,
+    out_vals: SharedBuf<f64>,
+    out_bump: Bump,
+    col_meta: SharedBuf<(usize, u32)>,
+    diag: SharedBuf<f64>,
+    dp: DepCounts,
+    queue: JobQueue,
+    stats: StatsCollector,
+    seed: u64,
+    sort_by_weight: bool,
+    timing: bool,
+}
+
+/// Factor a (permuted) Laplacian CSR with `threads` workers (0 = auto).
+pub fn factorize_csr(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+    threads: usize,
+    arena_factor: f64,
+    stage_timing: bool,
+) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
+    let timer = Timer::start();
+    let n = a.nrows;
+    let threads = if threads == 0 { default_threads() } else { threads }.max(1).min(n.max(1));
+    let cap_fill = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
+    // Output: every merged column entry; bounded by original lower
+    // triangle + every fill node.
+    let cap_out = a.nnz() / 2 + cap_fill + n;
+
+    let (dp, ready) = DepCounts::init(a);
+    let queue = JobQueue::new(n);
+    for v in ready {
+        queue.push(v);
+    }
+    let mut heads = Vec::with_capacity(n);
+    heads.resize_with(n, || AtomicUsize::new(NIL));
+    let shared = Shared {
+        a,
+        fills: FillArena::new(cap_fill),
+        heads: heads.into_boxed_slice(),
+        out_rows: SharedBuf::new(cap_out),
+        out_vals: SharedBuf::new(cap_out),
+        out_bump: Bump::new(cap_out),
+        col_meta: SharedBuf::new(n),
+        diag: SharedBuf::new(n),
+        dp,
+        queue,
+        stats: StatsCollector::default(),
+        seed,
+        sort_by_weight,
+        timing: stage_timing,
+    };
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| worker(&shared));
+        }
+    });
+
+    if shared.queue.is_poisoned() {
+        return Err(FactorError::ArenaFull { capacity: cap_fill });
+    }
+    let (g, diag) = assemble(&shared, n);
+    let stats = shared.stats.snapshot(threads, timer.secs());
+    Ok((g, diag, stats))
+}
+
+/// Worker loop: claim → spin-wait → eliminate.
+fn worker(sh: &Shared<'_>) {
+    let mut raw: Vec<(u32, f64)> = Vec::new();
+    let mut merged: Vec<(u32, f64)> = Vec::new();
+    let mut mult: Vec<u32> = Vec::new();
+    let mut bysort: Vec<(u32, f64)> = Vec::new();
+    let mut cum: Vec<f64> = Vec::new();
+    let mut gather_ns = 0u64;
+    let mut sample_ns = 0u64;
+    let mut update_ns = 0u64;
+    let mut fills_count = 0u64;
+
+    while let Some(pos) = sh.queue.claim() {
+        let Ok(k) = sh.queue.wait(pos) else { break };
+        let k = k as usize;
+        let t0 = sh.timing.then(Instant::now);
+
+        // ---- Stage 1: gather + merge. ----
+        raw.clear();
+        for (&c, &v) in sh.a.row_indices(k).iter().zip(sh.a.row_data(k)) {
+            if (c as usize) > k && v < 0.0 {
+                raw.push((c, -v));
+            }
+        }
+        let mut node = sh.heads[k].load(Ordering::Acquire);
+        while node != NIL {
+            // SAFETY: node was fully written before being published to
+            // this list, and all pushes happen-before this elimination
+            // (dependency counters + queue release/acquire).
+            unsafe {
+                raw.push((sh.fills.rows.read(node), sh.fills.vals.read(node)));
+            }
+            node = sh.fills.next[node].load(Ordering::Relaxed);
+        }
+        if raw.is_empty() {
+            unsafe {
+                sh.diag.write(k, 0.0);
+                sh.col_meta.write(k, (0, 0));
+            }
+            if let Some(t0) = t0 {
+                gather_ns += t0.elapsed().as_nanos() as u64;
+            }
+            continue;
+        }
+        sample::merge_neighbors(&mut raw, &mut merged, &mut mult);
+        let lkk: f64 = merged.iter().map(|x| x.1).sum();
+        // Output column (merged is row-sorted).
+        let Some(start) = sh.out_bump.alloc(merged.len()) else {
+            sh.queue.poison();
+            break;
+        };
+        for (t, &(r, w)) in merged.iter().enumerate() {
+            // SAFETY: [start, start+len) was just reserved by this thread.
+            unsafe {
+                sh.out_rows.write(start + t, r);
+                sh.out_vals.write(start + t, -w / lkk);
+            }
+        }
+        unsafe {
+            sh.diag.write(k, lkk);
+            sh.col_meta.write(k, (start, merged.len() as u32));
+        }
+        let t1 = sh.timing.then(Instant::now);
+        if let (Some(a), Some(b)) = (t0, t1) {
+            gather_ns += (b - a).as_nanos() as u64;
+        }
+
+        // ---- Stage 2: weight sort + sampling. ----
+        bysort.clear();
+        bysort.extend_from_slice(&merged);
+        if sh.sort_by_weight {
+            sample::sort_by_weight(&mut bysort);
+        }
+        let mut rng = sample::pivot_rng(sh.seed, k as u32);
+        let nsamples = bysort.len().saturating_sub(1);
+        let base = if nsamples > 0 {
+            match sh.fills.bump.alloc(nsamples) {
+                Some(b) => b,
+                None => {
+                    sh.queue.poison();
+                    break;
+                }
+            }
+        } else {
+            0
+        };
+        let mut emitted = 0usize;
+        sample::sample_clique(&bysort, &mut cum, &mut rng, |i, j, w| {
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let idx = base + emitted;
+            emitted += 1;
+            // SAFETY: idx is inside this thread's reservation.
+            unsafe {
+                sh.fills.rows.write(idx, hi);
+                sh.fills.vals.write(idx, w);
+            }
+            // Publish: new smaller-neighbor dependency first, then the
+            // node itself.
+            sh.dp.inc(hi);
+            sh.fills.push(&sh.heads[lo as usize], idx);
+        });
+        fills_count += emitted as u64;
+        let t2 = sh.timing.then(Instant::now);
+        if let (Some(a), Some(b)) = (t1, t2) {
+            sample_ns += (b - a).as_nanos() as u64;
+        }
+
+        // ---- Stage 3: cut this vertex's edges, schedule ready ones. ----
+        for (&(v, _), &m) in merged.iter().zip(mult.iter()) {
+            if sh.dp.dec(v, m) {
+                sh.queue.push(v);
+            }
+        }
+        if let Some(t2) = t2 {
+            update_ns += t2.elapsed().as_nanos() as u64;
+        }
+    }
+
+    let st = &sh.stats;
+    st.fills.fetch_add(fills_count, Ordering::Relaxed);
+    st.stage_gather_ns.fetch_add(gather_ns, Ordering::Relaxed);
+    st.stage_sample_ns.fetch_add(sample_ns, Ordering::Relaxed);
+    st.stage_update_ns.fetch_add(update_ns, Ordering::Relaxed);
+}
+
+/// Collect the per-column slices into a CSC factor (single-threaded,
+/// O(nnz)).
+fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut total = 0usize;
+    for k in 0..n {
+        // SAFETY: all workers joined; engine writes happen-before.
+        let (_, len) = unsafe { sh.col_meta.read(k) };
+        total += len as usize;
+        colptr.push(total);
+    }
+    let mut rowidx = Vec::with_capacity(total);
+    let mut data = Vec::with_capacity(total);
+    let mut diag = Vec::with_capacity(n);
+    for k in 0..n {
+        let (start, len) = unsafe { sh.col_meta.read(k) };
+        for t in 0..len as usize {
+            unsafe {
+                rowidx.push(sh.out_rows.read(start + t));
+                data.push(sh.out_vals.read(start + t));
+            }
+        }
+        diag.push(unsafe { sh.diag.read(k) });
+    }
+    sh.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
+    sh.stats.arena_used.store(sh.fills.bump.used(), Ordering::Relaxed);
+    let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
+    (g, diag)
+}
+
+/// Re-exported for the engine-equivalence tests.
+pub use ldl::LdlFactor as _Factor;
+
+#[cfg(test)]
+mod tests {
+    use crate::factor::{factorize, Engine, ParacOptions};
+    use crate::graph::generators;
+    use crate::ordering::Ordering as Ord;
+    use crate::testing::prop::forall_seeds;
+
+    fn opts(engine: Engine, ordering: Ord, seed: u64) -> ParacOptions {
+        ParacOptions { engine, ordering, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn matches_sequential_engine_exactly() {
+        // The headline determinism property: cpu(T threads) ≡ seq for
+        // any thread count, ordering and seed.
+        forall_seeds(4, |seed| {
+            let l = generators::random_connected(300, 450, seed);
+            for threads in [1, 2, 4] {
+                let fs = factorize(&l, &opts(Engine::Seq, Ord::Natural, seed)).unwrap();
+                let fc =
+                    factorize(&l, &opts(Engine::Cpu { threads }, Ord::Natural, seed)).unwrap();
+                if fs.g != fc.g {
+                    return Err(format!("G mismatch at {threads} threads"));
+                }
+                if fs.diag != fc.diag {
+                    return Err(format!("D mismatch at {threads} threads"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_seq_on_suite_orderings() {
+        let l = generators::grid3d(8, 8, 8, generators::Coeff::Uniform, 0);
+        for ord in [Ord::Amd, Ord::NnzSort, Ord::Random] {
+            let fs = factorize(&l, &opts(Engine::Seq, ord, 11)).unwrap();
+            let fc = factorize(&l, &opts(Engine::Cpu { threads: 4 }, ord, 11)).unwrap();
+            assert_eq!(fs.g, fc.g, "ordering {ord:?}");
+            assert_eq!(fs.diag, fc.diag);
+        }
+    }
+
+    #[test]
+    fn factor_is_valid_on_larger_graph() {
+        let l = generators::grid2d(50, 50, generators::Coeff::Uniform, 1);
+        let f = factorize(&l, &opts(Engine::Cpu { threads: 4 }, Ord::NnzSort, 5)).unwrap();
+        f.validate().unwrap();
+        assert_eq!(f.n(), 2500);
+        assert!(f.stats.fills > 0);
+    }
+
+    #[test]
+    fn heavy_tail_graph_parallel() {
+        let l = generators::pref_attach(1200, 6, 2);
+        let f = factorize(&l, &opts(Engine::Cpu { threads: 4 }, Ord::NnzSort, 3)).unwrap();
+        f.validate().unwrap();
+        let fs = factorize(&l, &opts(Engine::Seq, Ord::NnzSort, 3)).unwrap();
+        assert_eq!(f.g, fs.g);
+    }
+
+    #[test]
+    fn arena_retry_recovers_from_small_estimate() {
+        let l = generators::complete(60); // dense: fills blow past a tiny arena
+        let mut o = opts(Engine::Cpu { threads: 4 }, Ord::Natural, 7);
+        o.arena_factor = 0.05;
+        let f = factorize(&l, &o).unwrap();
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn disconnected_graph_parallel() {
+        let l = crate::graph::Laplacian::from_edges(
+            10,
+            &[(0, 1, 1.0), (2, 3, 1.0), (4, 5, 1.0), (6, 7, 2.0)],
+            "forest",
+        );
+        let f = factorize(&l, &opts(Engine::Cpu { threads: 4 }, Ord::Natural, 1)).unwrap();
+        f.validate().unwrap();
+        assert_eq!(f.diag.iter().filter(|&&d| d == 0.0).count(), 6);
+    }
+}

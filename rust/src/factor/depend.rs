@@ -1,0 +1,131 @@
+//! Dynamic dependency tracking (§4.2) — the enabling idea of ParAC.
+//!
+//! `dp[i]` counts the multigraph edges from **live smaller-labeled**
+//! neighbors of `i`. A vertex is ready exactly when `dp[i] == 0`. During
+//! elimination of `k`:
+//! * every sampled fill `(i, j)` adds a live edge: `inc(max(i,j))`;
+//! * finishing `k` cuts its incident edges: `dec(v, multiplicity)` for
+//!   each merged neighbor `v`.
+//!
+//! Increments must precede the eliminator's own decrements (engines do
+//! this within each elimination) so `dp` can never transiently hit zero
+//! while a fill that makes `i` depend on a new smaller neighbor is still
+//! in flight — the invariant behind deadlock- and race-freedom.
+
+use crate::sparse::Csr;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Shared dependency counters.
+pub struct DepCounts {
+    dp: Box<[AtomicU32]>,
+}
+
+impl DepCounts {
+    /// Initialize from a (permuted) symmetric matrix: `dp[i] = |{j < i :
+    /// ℓ_ij ≠ 0}|`. Returns the counters and the initially-ready set in
+    /// ascending order.
+    pub fn init(a: &Csr) -> (DepCounts, Vec<u32>) {
+        let n = a.nrows;
+        let mut ready = Vec::new();
+        let mut dp = Vec::with_capacity(n);
+        for i in 0..n {
+            let count = a
+                .row_indices(i)
+                .iter()
+                .zip(a.row_data(i))
+                .filter(|(&c, &v)| (c as usize) < i && v < 0.0)
+                .count() as u32;
+            if count == 0 {
+                ready.push(i as u32);
+            }
+            dp.push(AtomicU32::new(count));
+        }
+        (DepCounts { dp: dp.into_boxed_slice() }, ready)
+    }
+
+    /// A new fill edge makes `v` depend on one more smaller neighbor.
+    #[inline]
+    pub fn inc(&self, v: u32) {
+        self.dp[v as usize].fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Cut `by` edges into `v`; returns `true` if `v` just became ready.
+    #[inline]
+    pub fn dec(&self, v: u32, by: u32) -> bool {
+        let prev = self.dp[v as usize].fetch_sub(by, Ordering::AcqRel);
+        debug_assert!(prev >= by, "dependency count underflow at {v}: {prev} - {by}");
+        prev == by
+    }
+
+    /// Current count (diagnostics).
+    pub fn get(&self, v: u32) -> u32 {
+        self.dp[v as usize].load(Ordering::Acquire)
+    }
+
+    /// Number of vertices tracked.
+    pub fn len(&self) -> usize {
+        self.dp.len()
+    }
+
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.dp.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn init_counts_smaller_neighbors() {
+        let l = generators::path(5);
+        let (dp, ready) = DepCounts::init(&l.matrix);
+        assert_eq!(ready, vec![0]);
+        assert_eq!(dp.get(0), 0);
+        for v in 1..5 {
+            assert_eq!(dp.get(v as u32), 1);
+        }
+    }
+
+    #[test]
+    fn star_hub_first_all_ready_after() {
+        // Star with hub = 0: every leaf has exactly one smaller neighbor.
+        let l = generators::star(6);
+        let (dp, ready) = DepCounts::init(&l.matrix);
+        assert_eq!(ready, vec![0]);
+        for v in 1..6u32 {
+            assert!(!dp.dec(v, 1) == false, "leaf {v} becomes ready");
+        }
+    }
+
+    #[test]
+    fn inc_then_dec_balances() {
+        let l = generators::path(3);
+        let (dp, _) = DepCounts::init(&l.matrix);
+        dp.inc(2);
+        assert_eq!(dp.get(2), 2);
+        assert!(!dp.dec(2, 1));
+        assert!(dp.dec(2, 1));
+    }
+
+    #[test]
+    fn concurrent_inc_dec_consistent() {
+        let l = generators::complete(4);
+        let (dp, _) = DepCounts::init(&l.matrix);
+        // vertex 3 starts with 3 smaller neighbors.
+        let rounds = 10_000u32;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let dp = &dp;
+                s.spawn(move || {
+                    for _ in 0..rounds {
+                        dp.inc(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(dp.get(3), 3 + 4 * rounds);
+    }
+}

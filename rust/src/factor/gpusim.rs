@@ -1,0 +1,327 @@
+//! Right-looking GPU-model engine — Algorithm 4 on the simulated
+//! persistent-kernel substrate (`crate::gpusim`).
+//!
+//! One OS thread plays one persistent *block*: it polls the shared job
+//! queue (cyclic claim), eliminates its vertex with block-level
+//! primitives (bitonic sort, flag/prefix-sum duplicate merge, CDF
+//! search), and pushes right-looking Schur updates into the
+//! linear-probing slot-state workspace `W` at
+//! `hash(target) + fill_in_count(target)`.
+//!
+//! Differences from the CPU engine (paper §5.3): fills live in the
+//! probing hash map, not per-vertex linked lists ("pointer jumping is
+//! unfriendly towards multithreading"), so updates are written *to the
+//! target's* storage immediately — right-looking. Dependency tracking,
+//! job queue, and sampling are shared, and the produced factor is
+//! bit-identical to the other engines.
+
+use super::chunk::{Bump, SharedBuf};
+use super::depend::DepCounts;
+use super::queue::JobQueue;
+use super::sample;
+use super::stats::{FactorStats, StatsCollector};
+use super::FactorError;
+use crate::gpusim::hashmap::{HashKind, Workspace};
+use crate::gpusim::primitives;
+use crate::sparse::{Csc, Csr};
+use crate::util::{default_threads, Timer};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Shared engine state.
+struct Shared<'a> {
+    a: &'a Csr,
+    w: Workspace,
+    out_rows: SharedBuf<u32>,
+    out_vals: SharedBuf<f64>,
+    out_bump: Bump,
+    col_meta: SharedBuf<(usize, u32)>,
+    diag: SharedBuf<f64>,
+    dp: DepCounts,
+    queue: JobQueue,
+    stats: StatsCollector,
+    seed: u64,
+    sort_by_weight: bool,
+    timing: bool,
+}
+
+/// Factor a (permuted) Laplacian CSR with `blocks` simulated persistent
+/// blocks (0 = auto). Uses random-permutation hashing.
+pub fn factorize_csr(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+    blocks: usize,
+    arena_factor: f64,
+    stage_timing: bool,
+) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
+    factorize_csr_hash(
+        a,
+        seed,
+        sort_by_weight,
+        blocks,
+        arena_factor,
+        HashKind::RandomPerm,
+        stage_timing,
+    )
+}
+
+/// [`factorize_csr`] with an explicit hash strategy (ablation hook).
+pub fn factorize_csr_hash(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+    blocks: usize,
+    arena_factor: f64,
+    hash: HashKind,
+    stage_timing: bool,
+) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
+    let timer = Timer::start();
+    let n = a.nrows;
+    let blocks = if blocks == 0 { default_threads() } else { blocks }.max(1).min(n.max(1));
+    let cap_w = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
+    let cap_out = a.nnz() / 2 + cap_w + n;
+
+    let (dp, ready) = DepCounts::init(a);
+    let queue = JobQueue::new(n);
+    for v in ready {
+        queue.push(v);
+    }
+    let shared = Shared {
+        a,
+        w: Workspace::new(cap_w, n, hash, seed),
+        out_rows: SharedBuf::new(cap_out),
+        out_vals: SharedBuf::new(cap_out),
+        out_bump: Bump::new(cap_out),
+        col_meta: SharedBuf::new(n),
+        diag: SharedBuf::new(n),
+        dp,
+        queue,
+        stats: StatsCollector::default(),
+        seed,
+        sort_by_weight,
+        timing: stage_timing,
+    };
+
+    std::thread::scope(|s| {
+        for _ in 0..blocks {
+            s.spawn(|| block_loop(&shared));
+        }
+    });
+
+    if shared.queue.is_poisoned() {
+        return Err(FactorError::WorkspaceFull { capacity: cap_w });
+    }
+    let (g, diag) = assemble(&shared, n);
+    let mut stats = shared.stats.snapshot(blocks, timer.secs());
+    stats.max_probe = shared.w.max_probe.load(Ordering::Relaxed);
+    stats.probe_steps = shared.w.probe_steps.load(Ordering::Relaxed);
+    Ok((g, diag, stats))
+}
+
+/// Persistent-block loop.
+fn block_loop(sh: &Shared<'_>) {
+    let mut raw: Vec<(u32, f64)> = Vec::new();
+    let mut merged: Vec<(u32, f64)> = Vec::new();
+    let mut mult: Vec<u32> = Vec::new();
+    let mut bysort: Vec<(u32, f64)> = Vec::new();
+    let mut cum: Vec<f64> = Vec::new();
+    let mut gather_ns = 0u64;
+    let mut sample_ns = 0u64;
+    let mut update_ns = 0u64;
+    let mut fills_count = 0u64;
+
+    while let Some(pos) = sh.queue.claim() {
+        let Ok(k) = sh.queue.wait(pos) else { break };
+        let k = k as usize;
+        let t0 = sh.timing.then(Instant::now);
+
+        // ---- Stage 1: gather from CSR + workspace, block-merge. ----
+        raw.clear();
+        for (&c, &v) in sh.a.row_indices(k).iter().zip(sh.a.row_data(k)) {
+            if (c as usize) > k && v < 0.0 {
+                raw.push((c, -v));
+            }
+        }
+        sh.w.gather(k as u32, &mut raw);
+        if raw.is_empty() {
+            unsafe {
+                sh.diag.write(k, 0.0);
+                sh.col_meta.write(k, (0, 0));
+            }
+            if let Some(t0) = t0 {
+                gather_ns += t0.elapsed().as_nanos() as u64;
+            }
+            continue;
+        }
+        // Block-level merge: bitonic sort by (row, val) then the
+        // flag/prefix-sum compaction (paper §5.3.2). (row, val) keying
+        // keeps float sums schedule-independent.
+        primitives::bitonic_sort_by(&mut raw, |&(r, v)| (r, v));
+        primitives::merge_sorted_by_flags(&raw, &mut merged, &mut mult);
+        let lkk: f64 = merged.iter().map(|x| x.1).sum();
+        let Some(start) = sh.out_bump.alloc(merged.len()) else {
+            sh.queue.poison();
+            break;
+        };
+        for (t, &(r, w)) in merged.iter().enumerate() {
+            // SAFETY: reserved region.
+            unsafe {
+                sh.out_rows.write(start + t, r);
+                sh.out_vals.write(start + t, -w / lkk);
+            }
+        }
+        unsafe {
+            sh.diag.write(k, lkk);
+            sh.col_meta.write(k, (start, merged.len() as u32));
+        }
+        let t1 = sh.timing.then(Instant::now);
+        if let (Some(a), Some(b)) = (t0, t1) {
+            gather_ns += (b - a).as_nanos() as u64;
+        }
+
+        // ---- Stage 2: weight sort (bitonic) + parallel-style sampling. ----
+        bysort.clear();
+        bysort.extend_from_slice(&merged);
+        if sh.sort_by_weight {
+            primitives::bitonic_sort_by(&mut bysort, |&(r, w)| (w, r));
+        }
+        let mut rng = sample::pivot_rng(sh.seed, k as u32);
+        let mut overflow = false;
+        sample::sample_clique(&bysort, &mut cum, &mut rng, |i, j, w| {
+            if overflow {
+                return;
+            }
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            // Right-looking: write straight into the target's workspace
+            // region (Algorithm 4 line 22), then the dependency.
+            sh.dp.inc(hi);
+            if sh.w.insert(lo, hi, w).is_err() {
+                overflow = true;
+                return;
+            }
+            fills_count += 1;
+        });
+        if overflow {
+            sh.queue.poison();
+            break;
+        }
+        let t2 = sh.timing.then(Instant::now);
+        if let (Some(a), Some(b)) = (t1, t2) {
+            sample_ns += (b - a).as_nanos() as u64;
+        }
+
+        // ---- Stage 3: cut edges, schedule ready vertices. ----
+        for (&(v, _), &m) in merged.iter().zip(mult.iter()) {
+            if sh.dp.dec(v, m) {
+                sh.queue.push(v);
+            }
+        }
+        if let Some(t2) = t2 {
+            update_ns += t2.elapsed().as_nanos() as u64;
+        }
+    }
+
+    let st = &sh.stats;
+    st.fills.fetch_add(fills_count, Ordering::Relaxed);
+    st.stage_gather_ns.fetch_add(gather_ns, Ordering::Relaxed);
+    st.stage_sample_ns.fetch_add(sample_ns, Ordering::Relaxed);
+    st.stage_update_ns.fetch_add(update_ns, Ordering::Relaxed);
+}
+
+/// Collect per-column slices into CSC (same as the CPU engine).
+fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut total = 0usize;
+    for k in 0..n {
+        let (_, len) = unsafe { sh.col_meta.read(k) };
+        total += len as usize;
+        colptr.push(total);
+    }
+    let mut rowidx = Vec::with_capacity(total);
+    let mut data = Vec::with_capacity(total);
+    let mut diag = Vec::with_capacity(n);
+    for k in 0..n {
+        let (start, len) = unsafe { sh.col_meta.read(k) };
+        for t in 0..len as usize {
+            unsafe {
+                rowidx.push(sh.out_rows.read(start + t));
+                data.push(sh.out_vals.read(start + t));
+            }
+        }
+        diag.push(unsafe { sh.diag.read(k) });
+    }
+    sh.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
+    sh.stats.arena_used.store(sh.out_bump.used(), Ordering::Relaxed);
+    (Csc { nrows: n, ncols: n, colptr, rowidx, data }, diag)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::factor::{factorize, Engine, ParacOptions};
+    use crate::graph::generators;
+    use crate::ordering::Ordering as Ord;
+    use crate::testing::prop::forall_seeds;
+
+    fn opts(engine: Engine, ordering: Ord, seed: u64) -> ParacOptions {
+        ParacOptions { engine, ordering, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn matches_sequential_engine_exactly() {
+        forall_seeds(4, |seed| {
+            let l = generators::random_connected(250, 380, seed);
+            for blocks in [1, 2, 4] {
+                let fs = factorize(&l, &opts(Engine::Seq, Ord::Natural, seed)).unwrap();
+                let fg =
+                    factorize(&l, &opts(Engine::GpuSim { blocks }, Ord::Natural, seed)).unwrap();
+                if fs.g != fg.g || fs.diag != fg.diag {
+                    return Err(format!("mismatch at {blocks} blocks"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_cpu_engine_on_orderings() {
+        let l = generators::grid3d(7, 7, 7, generators::Coeff::HighContrast(3.0), 0);
+        for ord in [Ord::Amd, Ord::NnzSort, Ord::Random] {
+            let fc = factorize(&l, &opts(Engine::Cpu { threads: 4 }, ord, 13)).unwrap();
+            let fg = factorize(&l, &opts(Engine::GpuSim { blocks: 4 }, ord, 13)).unwrap();
+            assert_eq!(fc.g, fg.g, "ordering {ord:?}");
+            assert_eq!(fc.diag, fg.diag);
+        }
+    }
+
+    #[test]
+    fn identity_hash_also_correct() {
+        use crate::factor::gpusim::factorize_csr_hash;
+        use crate::gpusim::hashmap::HashKind;
+        let l = generators::grid2d(20, 20, generators::Coeff::Uniform, 0);
+        let (g1, d1, _) = factorize_csr_hash(&l.matrix, 5, true, 4, 6.0, HashKind::Identity, false)
+            .unwrap();
+        let (g2, d2, _) =
+            factorize_csr_hash(&l.matrix, 5, true, 4, 6.0, HashKind::RandomPerm, false).unwrap();
+        assert_eq!(g1, g2, "hashing must not change the factor");
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn workspace_retry_on_overflow() {
+        let l = generators::complete(50);
+        let mut o = opts(Engine::GpuSim { blocks: 4 }, Ord::Natural, 3);
+        o.arena_factor = 0.05;
+        let f = factorize(&l, &o).unwrap();
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn road_graph_gpusim() {
+        let l = generators::road_like(30, 30, 0.15, 4);
+        let f = factorize(&l, &opts(Engine::GpuSim { blocks: 4 }, Ord::NnzSort, 9)).unwrap();
+        f.validate().unwrap();
+        assert!(f.stats.max_probe >= 1);
+    }
+}

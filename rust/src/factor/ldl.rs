@@ -1,0 +1,321 @@
+//! The `G D Gᵀ` factor object and its (sequential) preconditioner apply.
+
+use crate::ordering::perm;
+use crate::sparse::{Csc, Csr};
+
+use super::stats::FactorStats;
+
+/// An approximate `L ≈ G D Gᵀ` factorization.
+///
+/// `G` is unit-lower-triangular; only its strictly-lower part is stored
+/// (CSC, rows sorted). `diag` is `D`. If `perm` is set, the factor is of
+/// `P L Pᵀ` and solves permute in/out transparently.
+#[derive(Clone, Debug)]
+pub struct LdlFactor {
+    /// Strictly-lower part of `G` (unit diagonal implicit), CSC.
+    pub g: Csc,
+    /// The diagonal `D`; `0.0` marks skipped (empty-column / last)
+    /// pivots, applied pseudo-inversely.
+    pub diag: Vec<f64>,
+    /// Relabeling `perm[old] = new` used before factorization.
+    pub perm: Option<Vec<u32>>,
+    /// Engine statistics from construction.
+    pub stats: FactorStats,
+}
+
+impl LdlFactor {
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.diag.len()
+    }
+
+    /// Stored nonzeros of `G` (strictly lower).
+    pub fn nnz(&self) -> usize {
+        self.g.nnz()
+    }
+
+    /// Fill ratio `2·nnz(G) / nnz(L)` as reported under the paper's
+    /// Fig. 4 (`nnz(G)` counting the strictly-lower entries).
+    pub fn fill_ratio(&self, input_nnz: usize) -> f64 {
+        2.0 * self.g.nnz() as f64 / input_nnz as f64
+    }
+
+    /// Preconditioner apply: `z = (G D Gᵀ)⁺ r` (sequential solves,
+    /// zero-pivot rows skipped). Handles the stored permutation.
+    pub fn solve(&self, r: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(r.len(), n);
+        let mut y = match &self.perm {
+            Some(p) => perm::apply_vec(p, r),
+            None => r.to_vec(),
+        };
+        self.forward_inplace(&mut y);
+        for k in 0..n {
+            let d = self.diag[k];
+            y[k] = if d > 0.0 { y[k] / d } else { 0.0 };
+        }
+        self.backward_inplace(&mut y);
+        match &self.perm {
+            Some(p) => perm::unapply_vec(p, &y),
+            None => y,
+        }
+    }
+
+    /// Forward solve `G y = r` in place (unit diagonal; permuted index
+    /// space).
+    pub fn forward_inplace(&self, y: &mut [f64]) {
+        for k in 0..self.n() {
+            let yk = y[k];
+            if yk == 0.0 {
+                continue;
+            }
+            let rows = self.g.col_rows(k);
+            let vals = self.g.col_data(k);
+            for (&r, &v) in rows.iter().zip(vals) {
+                y[r as usize] -= v * yk;
+            }
+        }
+    }
+
+    /// Backward solve `Gᵀ z = y` in place (permuted index space).
+    pub fn backward_inplace(&self, y: &mut [f64]) {
+        for k in (0..self.n()).rev() {
+            let rows = self.g.col_rows(k);
+            let vals = self.g.col_data(k);
+            let mut acc = y[k];
+            for (&r, &v) in rows.iter().zip(vals) {
+                acc -= v * y[r as usize];
+            }
+            y[k] = acc;
+        }
+    }
+
+    /// Apply the operator `G D Gᵀ` to a vector (testing: `E[G D Gᵀ] = L`).
+    /// Operates in the *permuted* space if a permutation is stored,
+    /// mapping in/out like [`LdlFactor::solve`].
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut t = match &self.perm {
+            Some(p) => perm::apply_vec(p, x),
+            None => x.to_vec(),
+        };
+        // t = Gᵀ x  (unit diagonal + strictly-lower columns)
+        let mut gt = t.clone();
+        for k in 0..n {
+            let rows = self.g.col_rows(k);
+            let vals = self.g.col_data(k);
+            let mut acc = t[k];
+            for (&r, &v) in rows.iter().zip(vals) {
+                acc += v * t[r as usize];
+            }
+            gt[k] = acc;
+        }
+        // gt = D Gᵀ x
+        for k in 0..n {
+            gt[k] *= self.diag[k];
+        }
+        // t = G gt
+        t.copy_from_slice(&gt);
+        for k in (0..n).rev() {
+            let tk = gt[k];
+            if tk == 0.0 {
+                continue;
+            }
+            let rows = self.g.col_rows(k);
+            let vals = self.g.col_data(k);
+            for (&r, &v) in rows.iter().zip(vals) {
+                t[r as usize] += v * tk;
+            }
+        }
+        match &self.perm {
+            Some(p) => perm::unapply_vec(p, &t),
+            None => t,
+        }
+    }
+
+    /// Materialize `G D Gᵀ` as dense (tiny matrices; expectation tests).
+    pub fn product_dense(&self) -> Vec<Vec<f64>> {
+        let n = self.n();
+        assert!(n <= 2048, "product_dense is a testing helper");
+        let mut out = vec![vec![0.0; n]; n];
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = self.apply(&e);
+            for i in 0..n {
+                out[i][j] = col[i];
+            }
+        }
+        out
+    }
+
+    /// Drop the last row/column (the ground vertex of an SDD extension):
+    /// the truncated factor preconditions the original `N×N` SPD matrix.
+    pub fn truncate_last(&self) -> LdlFactor {
+        let n = self.n() - 1;
+        let ground = n as u32;
+        let mut colptr = Vec::with_capacity(n + 1);
+        let mut rowidx = Vec::with_capacity(self.g.nnz());
+        let mut data = Vec::with_capacity(self.g.nnz());
+        colptr.push(0usize);
+        for c in 0..n {
+            for (&r, &v) in self.g.col_rows(c).iter().zip(self.g.col_data(c)) {
+                if r != ground {
+                    rowidx.push(r);
+                    data.push(v);
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
+        let perm = self.perm.as_ref().map(|p| {
+            // Ground was pinned to label n (the last); dropping it keeps
+            // all other labels < n unchanged. Remove the ground's entry.
+            let mut q = Vec::with_capacity(n);
+            for (old, &new) in p.iter().enumerate() {
+                if new != ground {
+                    debug_assert!(old < n + 1);
+                    q.push(new);
+                }
+            }
+            q
+        });
+        LdlFactor { g, diag: self.diag[..n].to_vec(), perm, stats: self.stats.clone() }
+    }
+
+    /// Export `G` (including the unit diagonal) as CSR — for etree /
+    /// level-schedule analytics and MatrixMarket dumps.
+    pub fn g_with_diag_csr(&self) -> Csr {
+        let n = self.n();
+        let mut coo = crate::sparse::Coo::with_capacity(n, n, self.g.nnz() + n);
+        for c in 0..n {
+            coo.push(c as u32, c as u32, 1.0);
+            for (&r, &v) in self.g.col_rows(c).iter().zip(self.g.col_data(c)) {
+                coo.push(r, c as u32, v);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Structural sanity: strictly-lower, sorted, finite, diag ≥ 0.
+    pub fn validate(&self) -> Result<(), String> {
+        self.g.validate()?;
+        if !self.g.is_strictly_lower() {
+            return Err("G not strictly lower".into());
+        }
+        if self.g.ncols != self.diag.len() {
+            return Err("diag length mismatch".into());
+        }
+        if let Some(p) = &self.perm {
+            perm::validate(p)?;
+        }
+        for (k, &d) in self.diag.iter().enumerate() {
+            if !(d >= 0.0) || !d.is_finite() {
+                return Err(format!("diag[{k}] = {d}"));
+            }
+        }
+        if self.g.data.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite entry in G".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    /// Tiny hand-built factor: n=3, G = [[1,0,0],[-.5,1,0],[0,-1,1]],
+    /// D = diag(2, 1.5, 0).
+    fn tiny() -> LdlFactor {
+        let mut coo = Coo::new(3, 3);
+        coo.push(1, 0, -0.5);
+        coo.push(2, 1, -1.0);
+        LdlFactor {
+            g: Csc::from_csr(&coo.to_csr()),
+            diag: vec![2.0, 1.5, 0.0],
+            perm: None,
+            stats: FactorStats::default(),
+        }
+    }
+
+    #[test]
+    fn validates() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_matches_manual_product() {
+        let f = tiny();
+        // G D Gᵀ computed by hand:
+        // G = [[1,0,0],[-1/2,1,0],[0,-1,1]], D = diag(2,1.5,0)
+        // GD = [[2,0,0],[-1,1.5,0],[0,-1.5,0]]
+        // GDGᵀ = [[2,-1,0],[-1,2,-1.5],[0,-1.5,1.5]]
+        let want = [[2.0, -1.0, 0.0], [-1.0, 2.0, -1.5], [0.0, -1.5, 1.5]];
+        let got = f.product_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((got[i][j] - want[i][j]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_is_pseudo_inverse_of_apply() {
+        let f = tiny();
+        // For x ⊥ nullspace of GDGᵀ: solve(apply(x)) == x. The nullspace
+        // here is spanned by the vector with Gᵀ v = e_2-ish; easier:
+        // check apply(solve(r)) == apply(solve(apply(solve(r)))) — the
+        // projector property — plus exactness on a range vector.
+        let x = vec![1.0, -2.0, 0.5];
+        let r = f.apply(&x);
+        let z = f.solve(&r);
+        let r2 = f.apply(&z);
+        for (a, b) in r.iter().zip(&r2) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn permutation_roundtrip() {
+        let mut f = tiny();
+        // Relabel with p = [2,0,1]: factor is of P L Pᵀ; solve/apply on
+        // the original index space must still be a consistent pair.
+        f.perm = Some(vec![2, 0, 1]);
+        let x = vec![0.3, 0.7, -0.2];
+        let r = f.apply(&x);
+        let z = f.solve(&r);
+        let r2 = f.apply(&z);
+        for (a, b) in r.iter().zip(&r2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn truncate_drops_ground_rows() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(1, 0, -0.5);
+        coo.push(2, 0, -0.25); // row that must disappear
+        coo.push(2, 1, -1.0);
+        let f = LdlFactor {
+            g: Csc::from_csr(&coo.to_csr()),
+            diag: vec![2.0, 1.5, 1.0],
+            perm: Some(vec![0, 1, 2]),
+            stats: FactorStats::default(),
+        };
+        let t = f.truncate_last();
+        assert_eq!(t.n(), 2);
+        assert_eq!(t.nnz(), 1);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn g_with_diag_has_unit_diagonal() {
+        let g = tiny().g_with_diag_csr();
+        for i in 0..3 {
+            assert_eq!(g.get(i, i), 1.0);
+        }
+        assert_eq!(g.nnz(), 5);
+    }
+}

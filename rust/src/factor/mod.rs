@@ -1,0 +1,219 @@
+//! The randomized approximate Cholesky factorization — the paper's core.
+//!
+//! Produces `L ≈ G D Gᵀ` with `G` unit-lower-triangular and `D` diagonal
+//! (Algorithm 1), replacing each elimination's clique update with a
+//! sampled spanning tree (Algorithm 2, [`sample`]). Three engines share
+//! identical sampling logic and produce **bit-identical factors** for a
+//! given `(matrix, ordering, seed)` — sampling uses a per-vertex RNG
+//! stream and deterministic merge order, so parallel schedules cannot
+//! perturb the output (a stronger guarantee than the paper needs, and the
+//! backbone of the engine-equivalence tests):
+//!
+//! * [`seq`] — the sequential reference (Algorithms 1–2 verbatim).
+//! * [`cpu`] — parallel left-looking engine (Algorithm 3).
+//! * [`gpusim`] — parallel right-looking engine modeling the paper's
+//!   persistent-kernel GPU design (Algorithm 4).
+
+pub mod chunk;
+pub mod cpu;
+pub mod depend;
+pub mod gpusim;
+pub mod ldl;
+pub mod queue;
+pub mod sample;
+pub mod seq;
+pub mod stats;
+
+pub use ldl::LdlFactor;
+pub use stats::FactorStats;
+
+use crate::graph::{LapKind, Laplacian};
+use crate::ordering::Ordering;
+use crate::sparse::Csr;
+
+/// Which factorization engine to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Sequential reference implementation.
+    Seq,
+    /// Parallel left-looking CPU engine; `0` threads = auto.
+    Cpu { threads: usize },
+    /// Right-looking GPU-model engine; `0` blocks = auto.
+    GpuSim { blocks: usize },
+}
+
+impl Engine {
+    /// Parse a CLI name (`seq`, `cpu`, `cpu:8`, `gpusim`, `gpusim:64`).
+    pub fn parse(s: &str) -> Option<Engine> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, a.parse().ok()?),
+            None => (s, 0usize),
+        };
+        match name {
+            "seq" => Some(Engine::Seq),
+            "cpu" => Some(Engine::Cpu { threads: arg }),
+            "gpusim" | "gpu" => Some(Engine::GpuSim { blocks: arg }),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Seq => "seq",
+            Engine::Cpu { .. } => "cpu",
+            Engine::GpuSim { .. } => "gpusim",
+        }
+    }
+}
+
+/// Options for [`factorize`].
+#[derive(Clone, Debug)]
+pub struct ParacOptions {
+    /// Elimination ordering (paper §6 benchmarks AMD / nnz-sort / random).
+    pub ordering: Ordering,
+    /// Execution engine.
+    pub engine: Engine,
+    /// RNG seed; per-vertex streams are derived from it.
+    pub seed: u64,
+    /// Fill-arena capacity multiplier over `nnz + n` (paper §5.2.1:
+    /// allocate one large chunk estimated empirically; on overflow we
+    /// retry doubled).
+    pub arena_factor: f64,
+    /// Sort neighbors by |weight| before sampling (paper: improves
+    /// numerical quality; keep on unless running the ablation).
+    pub sort_by_weight: bool,
+    /// Collect per-stage wall times (≈5% overhead from clock reads on
+    /// the hot path; enable for stage-breakdown reports).
+    pub stage_timing: bool,
+}
+
+impl Default for ParacOptions {
+    fn default() -> Self {
+        ParacOptions {
+            ordering: Ordering::NnzSort,
+            engine: Engine::Cpu { threads: 0 },
+            seed: 0x9A9A,
+            arena_factor: 6.0,
+            sort_by_weight: true,
+            stage_timing: false,
+        }
+    }
+}
+
+/// Factorization failure modes.
+#[derive(Debug)]
+pub enum FactorError {
+    /// The shared fill arena filled up (estimate too small). `factorize`
+    /// retries internally; this escapes only after repeated doubling.
+    ArenaFull { capacity: usize },
+    /// The workspace hash map of the gpusim engine overflowed.
+    WorkspaceFull { capacity: usize },
+    /// Input is not a valid Laplacian.
+    BadInput(String),
+}
+
+impl std::fmt::Display for FactorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FactorError::ArenaFull { capacity } => write!(f, "fill arena full ({capacity} nodes)"),
+            FactorError::WorkspaceFull { capacity } => {
+                write!(f, "gpusim workspace full ({capacity} slots)")
+            }
+            FactorError::BadInput(m) => write!(f, "bad input: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FactorError {}
+
+/// Factor a Laplacian: compute the ordering, permute, run the engine
+/// (retrying with a larger arena if the fill estimate was too small), and
+/// wrap the result with its permutation.
+pub fn factorize(lap: &Laplacian, opts: &ParacOptions) -> Result<LdlFactor, FactorError> {
+    factorize_pinned(lap, opts, None)
+}
+
+/// [`factorize`] with an optional vertex pinned to the **last**
+/// elimination position — used to keep the ground vertex of an SDD
+/// extension out of the preconditioner block.
+pub fn factorize_pinned(
+    lap: &Laplacian,
+    opts: &ParacOptions,
+    pin_last: Option<u32>,
+) -> Result<LdlFactor, FactorError> {
+    let n = lap.n();
+    if n == 0 {
+        return Err(FactorError::BadInput("empty matrix".into()));
+    }
+    let mut p = opts.ordering.compute(lap, opts.seed);
+    if let Some(pin) = pin_last {
+        // Swap labels so `pin` gets label n-1.
+        let cur = p[pin as usize];
+        if cur != (n - 1) as u32 {
+            let holder = p.iter().position(|&x| x == (n - 1) as u32).unwrap();
+            p[holder] = cur;
+            p[pin as usize] = (n - 1) as u32;
+        }
+    }
+    let permuted = lap.matrix.permute_sym(&p);
+    let (g, diag, stats) = run_engine(&permuted, opts)?;
+    Ok(LdlFactor { g, diag, perm: Some(p), stats })
+}
+
+/// Dispatch to the selected engine with arena-overflow retry.
+fn run_engine(
+    a: &Csr,
+    opts: &ParacOptions,
+) -> Result<(crate::sparse::Csc, Vec<f64>, FactorStats), FactorError> {
+    let mut factor = opts.arena_factor;
+    // Double until either success or a generous hard ceiling (a dense
+    // 2^9×(nnz+n) arena means the input is far outside AC's regime).
+    while factor <= 512.0 {
+        let r = match opts.engine {
+            Engine::Seq => seq::factorize_csr(a, opts.seed, opts.sort_by_weight),
+            Engine::Cpu { threads } => cpu::factorize_csr(
+                a,
+                opts.seed,
+                opts.sort_by_weight,
+                threads,
+                factor,
+                opts.stage_timing,
+            ),
+            Engine::GpuSim { blocks } => gpusim::factorize_csr(
+                a,
+                opts.seed,
+                opts.sort_by_weight,
+                blocks,
+                factor,
+                opts.stage_timing,
+            ),
+        };
+        match r {
+            Err(FactorError::ArenaFull { .. }) | Err(FactorError::WorkspaceFull { .. }) => {
+                factor *= 2.0;
+                continue;
+            }
+            other => return other,
+        }
+    }
+    Err(FactorError::ArenaFull { capacity: (factor * (a.nnz() + a.nrows) as f64) as usize })
+}
+
+/// Factor an SPD SDD matrix `A` (e.g. a Dirichlet Poisson operator) by
+/// grounding it to an `(N+1)`-vertex Laplacian (rchol construction),
+/// factoring with the ground pinned last, and truncating the factor back
+/// to `N×N` — the resulting `LdlFactor` preconditions `A` directly.
+pub fn factorize_sdd(a: &Csr, opts: &ParacOptions) -> Result<LdlFactor, FactorError> {
+    let ext = Laplacian::ground_sdd(a, "sdd").map_err(FactorError::BadInput)?;
+    let ground = (ext.n() - 1) as u32;
+    let f = factorize_pinned(&ext, opts, Some(ground))?;
+    Ok(f.truncate_last())
+}
+
+/// Convenience: does this Laplacian type need grounding before
+/// factorization? (`Grounded` operators are SPD and already reduced.)
+pub fn needs_grounding(lap: &Laplacian) -> bool {
+    lap.kind == LapKind::Grounded
+}
+

@@ -1,0 +1,171 @@
+//! The dynamic job queue (Algorithm 3 line 7 / Algorithm 4 line 7).
+//!
+//! A fixed array of `n` slots filled monotonically by `push` as vertices
+//! become ready. Workers claim positions with a fetch-add cursor and
+//! **spin-wait** on their slot until it is filled — exactly the paper's
+//! `k ← q[id], spin wait on q[id] if necessary`. Progress is guaranteed
+//! because every vertex is eventually enqueued exactly once (dependency
+//! counters reach zero along any valid elimination order), so every
+//! claimed position `< n` is eventually written.
+//!
+//! `poison` unblocks all spinners when an engine must abort (arena
+//! overflow) — the retry loop in [`super::factorize`] then restarts with
+//! a bigger arena.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+
+const EMPTY: u32 = u32::MAX;
+
+/// Fixed-size single-use job queue.
+pub struct JobQueue {
+    slots: Box<[AtomicU32]>,
+    tail: AtomicUsize,
+    cursor: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+impl JobQueue {
+    /// Queue for `n` jobs.
+    pub fn new(n: usize) -> Self {
+        let mut slots = Vec::with_capacity(n);
+        slots.resize_with(n, || AtomicU32::new(EMPTY));
+        JobQueue {
+            slots: slots.into_boxed_slice(),
+            tail: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Enqueue a ready vertex. Each vertex must be pushed at most once.
+    #[inline]
+    pub fn push(&self, v: u32) {
+        let slot = self.tail.fetch_add(1, Ordering::Relaxed);
+        debug_assert!(slot < self.slots.len(), "queue overflow: vertex pushed twice?");
+        self.slots[slot].store(v, Ordering::Release);
+    }
+
+    /// Claim the next position to process; `None` once all positions are
+    /// claimed (worker should exit).
+    #[inline]
+    pub fn claim(&self) -> Option<usize> {
+        let pos = self.cursor.fetch_add(1, Ordering::Relaxed);
+        if pos < self.slots.len() {
+            Some(pos)
+        } else {
+            None
+        }
+    }
+
+    /// Spin-wait until position `pos` is filled; `Err(())` if poisoned.
+    ///
+    /// Backoff ladder: pure spin → `yield_now` → short sleeps. The
+    /// paper's GPU blocks spin for free; on an oversubscribed CPU
+    /// (threads > cores) unbounded spinning starves the one thread
+    /// doing useful work, so waiters progressively get out of the way.
+    #[inline]
+    pub fn wait(&self, pos: usize) -> Result<u32, ()> {
+        let slot = &self.slots[pos];
+        let mut spins = 0u32;
+        loop {
+            let v = slot.load(Ordering::Acquire);
+            if v != EMPTY {
+                return Ok(v);
+            }
+            if self.poisoned.load(Ordering::Relaxed) {
+                return Err(());
+            }
+            spins = spins.saturating_add(1);
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else if spins < 256 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Abort: unblock every spinning worker.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Relaxed);
+    }
+
+    /// Was the queue poisoned?
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Relaxed)
+    }
+
+    /// Number of jobs pushed so far.
+    pub fn pushed(&self) -> usize {
+        self.tail.load(Ordering::Relaxed).min(self.slots.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = JobQueue::new(4);
+        q.push(7);
+        q.push(3);
+        let p0 = q.claim().unwrap();
+        let p1 = q.claim().unwrap();
+        assert_eq!(q.wait(p0), Ok(7));
+        assert_eq!(q.wait(p1), Ok(3));
+    }
+
+    #[test]
+    fn claim_exhausts() {
+        let q = JobQueue::new(2);
+        assert!(q.claim().is_some());
+        assert!(q.claim().is_some());
+        assert!(q.claim().is_none());
+    }
+
+    #[test]
+    fn poison_unblocks_waiters() {
+        let q = JobQueue::new(2);
+        let pos = q.claim().unwrap();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.wait(pos));
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            q.poison();
+            assert_eq!(h.join().unwrap(), Err(()));
+        });
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let n = 10_000;
+        let q = JobQueue::new(n);
+        let seen = (0..n).map(|_| AtomicU32::new(0)).collect::<Vec<_>>();
+        std::thread::scope(|s| {
+            // 4 producers push disjoint ranges.
+            for t in 0..4 {
+                let q = &q;
+                s.spawn(move || {
+                    for v in (t..n).step_by(4) {
+                        q.push(v as u32);
+                    }
+                });
+            }
+            // 4 consumers claim+wait.
+            for _ in 0..4 {
+                let q = &q;
+                let seen = &seen;
+                s.spawn(move || {
+                    while let Some(pos) = q.claim() {
+                        let v = q.wait(pos).unwrap();
+                        seen[v as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        for (i, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "vertex {i}");
+        }
+    }
+}

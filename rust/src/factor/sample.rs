@@ -1,0 +1,253 @@
+//! SampleClique — Algorithm 2, the heart of the randomized factorization.
+//!
+//! Given the merged neighbors of the pivot `k` (pairs `(vertex, w)` with
+//! `w = -ℓ_kv > 0`), the classical Schur complement would create the full
+//! clique `w_i·w_j / ℓ_kk` over all pairs. AC instead samples a *spanning
+//! structure*: process neighbors in ascending-weight order; at position
+//! `i`, draw one partner `j > i` with probability `w_j / Σ_{t>i} w_t` and
+//! assign the edge weight `w_i · Σ_{t>i} w_t / ℓ_kk`. Every clique pair's
+//! expectation is preserved: `E[w(i,j)] = w_i·w_j / ℓ_kk`.
+//!
+//! Sampling uses inverse-CDF binary search over the prefix-sum array —
+//! the same primitive the paper's GPU kernel evaluates with a parallel
+//! block search, and the computation the Pallas kernel
+//! (`python/compile/kernels/sample_clique.py`) reproduces batched.
+//!
+//! Determinism: ties in the weight sort are broken by vertex id and the
+//! RNG stream is derived from `(seed, pivot)` — so every engine (seq /
+//! cpu / gpusim / PJRT-offloaded) produces the same samples.
+
+use crate::rng::Rng;
+
+/// Derive the sampling RNG for a pivot vertex. All engines must use this
+/// so factors are engine-independent.
+#[inline]
+pub fn pivot_rng(seed: u64, pivot: u32) -> Rng {
+    Rng::stream(seed, 0x5A3F_0000_0000_0000 | pivot as u64)
+}
+
+/// Sort merged neighbors `(vertex, w)` ascending by `(w, vertex)` —
+/// the paper's quality-improving elimination order within a pivot.
+#[inline]
+pub fn sort_by_weight(nbrs: &mut [(u32, f64)]) {
+    nbrs.sort_unstable_by(|a, b| {
+        a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+    });
+}
+
+/// Run Algorithm 2 over merged neighbors (weights positive). `nbrs` must
+/// already be in the desired processing order (sorted by weight unless
+/// running the no-sort ablation). `cum` is scratch for prefix sums
+/// (resized as needed). Emits `(vertex_i, vertex_j, new_weight)` for each
+/// sampled fill edge — `m − 1` edges for `m` neighbors.
+pub fn sample_clique(
+    nbrs: &[(u32, f64)],
+    cum: &mut Vec<f64>,
+    rng: &mut Rng,
+    mut emit: impl FnMut(u32, u32, f64),
+) {
+    let m = nbrs.len();
+    if m < 2 {
+        return;
+    }
+    // Inclusive prefix sums: cum[t] = w_0 + … + w_t.
+    cum.clear();
+    cum.reserve(m);
+    let mut acc = 0.0;
+    for &(_, w) in nbrs {
+        debug_assert!(w > 0.0, "neighbor weights must be positive");
+        acc += w;
+        cum.push(acc);
+    }
+    let total = acc; // = ℓ_kk
+    for i in 0..m - 1 {
+        let below = cum[i]; // Σ_{t ≤ i} w_t
+        let rest = total - below; // Σ_{t > i} w_t
+        if rest <= 0.0 {
+            break; // numerically exhausted tail
+        }
+        // Inverse-CDF draw over the suffix (i, m): u ∈ [below, total).
+        let u = below + rng.next_f64() * rest;
+        let j = partition_point(cum, u).min(m - 1).max(i + 1);
+        let w_new = nbrs[i].1 * rest / total;
+        emit(nbrs[i].0, nbrs[j].0, w_new);
+    }
+}
+
+/// First index `t` with `cum[t] > u` (binary search — the paper's
+/// weight-based parallel search).
+#[inline]
+fn partition_point(cum: &[f64], u: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = cum.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if cum[mid] <= u {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Merge raw gathered entries `(vertex, w)` in place: sort by
+/// `(vertex, w)` (value in the key keeps float summation order — and
+/// therefore the factor — schedule-independent), then fold duplicates,
+/// summing weights and counting multiplicity. Returns `(merged, mult)`
+/// lengths via the output vectors.
+pub fn merge_neighbors(
+    raw: &mut Vec<(u32, f64)>,
+    merged: &mut Vec<(u32, f64)>,
+    mult: &mut Vec<u32>,
+) {
+    raw.sort_unstable_by(|a, b| {
+        a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    merged.clear();
+    mult.clear();
+    let mut i = 0;
+    while i < raw.len() {
+        let v = raw[i].0;
+        let mut w = raw[i].1;
+        let mut c = 1u32;
+        let mut j = i + 1;
+        while j < raw.len() && raw[j].0 == v {
+            w += raw[j].1;
+            c += 1;
+            j += 1;
+        }
+        merged.push((v, w));
+        mult.push(c);
+        i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::forall_rngs;
+
+    #[test]
+    fn emits_m_minus_1_edges() {
+        let nbrs: Vec<(u32, f64)> = (0..10).map(|i| (i as u32, 1.0 + i as f64)).collect();
+        let mut cum = Vec::new();
+        let mut rng = Rng::new(1);
+        let mut count = 0;
+        sample_clique(&nbrs, &mut cum, &mut rng, |_, _, _| count += 1);
+        assert_eq!(count, 9);
+    }
+
+    #[test]
+    fn partner_always_later_in_order() {
+        forall_rngs(64, |rng| {
+            let m = 2 + rng.below(30);
+            let mut nbrs: Vec<(u32, f64)> =
+                (0..m).map(|i| (i as u32, rng.range_f64(0.1, 10.0))).collect();
+            sort_by_weight(&mut nbrs);
+            let pos: std::collections::HashMap<u32, usize> =
+                nbrs.iter().enumerate().map(|(p, &(v, _))| (v, p)).collect();
+            let mut cum = Vec::new();
+            let mut bad = None;
+            sample_clique(&nbrs, &mut cum, rng, |i, j, w| {
+                if pos[&j] <= pos[&i] || w <= 0.0 {
+                    bad = Some(format!("edge ({i},{j},{w})"));
+                }
+            });
+            bad.map_or(Ok(()), Err)
+        });
+    }
+
+    #[test]
+    fn expectation_matches_clique() {
+        // Pair (i,j) expectation must equal w_i w_j / total. Use 3
+        // neighbors and many trials.
+        let nbrs = vec![(0u32, 1.0), (1u32, 2.0), (2u32, 3.0)];
+        let total = 6.0;
+        let trials = 200_000;
+        let mut sums = std::collections::HashMap::new();
+        for t in 0..trials {
+            let mut rng = Rng::new(1000 + t);
+            let mut cum = Vec::new();
+            sample_clique(&nbrs, &mut cum, &mut rng, |i, j, w| {
+                *sums.entry((i.min(j), i.max(j))).or_insert(0.0) += w;
+            });
+        }
+        for (&(i, j), &s) in &sums {
+            let want = nbrs[i as usize].1 * nbrs[j as usize].1 / total;
+            let got = s / trials as f64;
+            assert!(
+                (got - want).abs() < 0.02 * want.max(0.1),
+                "pair ({i},{j}): got {got}, want {want}"
+            );
+        }
+        // Total expectation over all pairs = Σ_{i<j} w_i w_j / total.
+        let want_total: f64 = (1.0 * 2.0 + 1.0 * 3.0 + 2.0 * 3.0) / total;
+        let got_total: f64 = sums.values().sum::<f64>() / trials as f64;
+        assert!((got_total - want_total).abs() < 0.02 * want_total);
+    }
+
+    #[test]
+    fn sampled_weights_conserve_tail_mass() {
+        // Each step i emits exactly w_i · rest / total; sum over i is a
+        // fixed deterministic quantity independent of the random draws.
+        forall_rngs(32, |rng| {
+            let m = 2 + rng.below(20);
+            let mut nbrs: Vec<(u32, f64)> =
+                (0..m).map(|i| (i as u32, rng.range_f64(0.1, 5.0))).collect();
+            sort_by_weight(&mut nbrs);
+            let total: f64 = nbrs.iter().map(|x| x.1).sum();
+            let mut cum = Vec::new();
+            let mut got = 0.0;
+            sample_clique(&nbrs, &mut cum, rng, |_, _, w| got += w);
+            let mut below = 0.0;
+            let mut want = 0.0;
+            for t in 0..m - 1 {
+                below += nbrs[t].1;
+                want += nbrs[t].1 * (total - below) / total;
+            }
+            if (got - want).abs() > 1e-9 * want.max(1.0) {
+                return Err(format!("mass {got} vs {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_sums_and_counts() {
+        let mut raw = vec![(3u32, 1.0), (1u32, 2.0), (3u32, 0.5), (1u32, 1.0), (2u32, 4.0)];
+        let mut merged = Vec::new();
+        let mut mult = Vec::new();
+        merge_neighbors(&mut raw, &mut merged, &mut mult);
+        assert_eq!(merged, vec![(1, 3.0), (2, 4.0), (3, 1.5)]);
+        assert_eq!(mult, vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic_per_pivot_rng() {
+        let nbrs = vec![(5u32, 1.0), (9u32, 2.0), (11u32, 0.5), (2u32, 4.0)];
+        let run = || {
+            let mut r = pivot_rng(42, 17);
+            let mut cum = Vec::new();
+            let mut out = Vec::new();
+            sample_clique(&nbrs, &mut cum, &mut r, |i, j, w| out.push((i, j, w)));
+            out
+        };
+        assert_eq!(run(), run());
+        let mut r2 = pivot_rng(42, 18);
+        let mut cum = Vec::new();
+        let mut out2 = Vec::new();
+        sample_clique(&nbrs, &mut cum, &mut r2, |i, j, w| out2.push((i, j, w)));
+        assert_ne!(run(), out2);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let mut cum = Vec::new();
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        sample_clique(&[], &mut cum, &mut rng, |_, _, _| n += 1);
+        sample_clique(&[(0, 1.0)], &mut cum, &mut rng, |_, _, _| n += 1);
+        assert_eq!(n, 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Sequential randomized Cholesky — Algorithms 1–2 verbatim.
+//!
+//! The reference implementation every parallel engine is tested against
+//! (factors are bit-identical by construction — see [`super::sample`]).
+//! Uses a simple list-of-lists working structure: live edges `(a,b)`,
+//! `a < b`, are stored in `a`'s list; eliminating `k` consumes `list[k]`
+//! plus `k`'s original higher neighbors and pushes sampled fills into the
+//! list of each new edge's smaller endpoint.
+
+use super::sample;
+use super::stats::FactorStats;
+use super::FactorError;
+use crate::sparse::{Csc, Csr};
+use crate::util::Timer;
+
+/// Factor a (permuted) Laplacian CSR matrix sequentially.
+/// Returns `(G strictly-lower CSC, D, stats)`.
+pub fn factorize_csr(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
+    let timer = Timer::start();
+    let n = a.nrows;
+    // Fill lists: fills[v] = sampled edges (u, w) with v < u.
+    let mut fills: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    let mut diag = vec![0.0f64; n];
+    let mut colptr = Vec::with_capacity(n + 1);
+    let mut rowidx: Vec<u32> = Vec::new();
+    let mut data: Vec<f64> = Vec::new();
+    colptr.push(0usize);
+
+    let mut raw: Vec<(u32, f64)> = Vec::new();
+    let mut merged: Vec<(u32, f64)> = Vec::new();
+    let mut mult: Vec<u32> = Vec::new();
+    let mut bysort: Vec<(u32, f64)> = Vec::new();
+    let mut cum: Vec<f64> = Vec::new();
+    let mut n_fills = 0u64;
+
+    for k in 0..n {
+        // ---- Stage 1: gather + merge the live column of k. ----
+        raw.clear();
+        for (&c, &v) in a.row_indices(k).iter().zip(a.row_data(k)) {
+            if (c as usize) > k && v < 0.0 {
+                raw.push((c, -v));
+            }
+        }
+        raw.append(&mut fills[k]);
+        fills[k].shrink_to_fit();
+        if raw.is_empty() {
+            diag[k] = 0.0;
+            colptr.push(rowidx.len());
+            continue;
+        }
+        sample::merge_neighbors(&mut raw, &mut merged, &mut mult);
+        let lkk: f64 = merged.iter().map(|x| x.1).sum();
+        diag[k] = lkk;
+        // G(:,k) = L(:,k)/ℓ_kk — off-diagonals are −w/ℓ_kk, rows sorted.
+        for &(r, w) in &merged {
+            rowidx.push(r);
+            data.push(-w / lkk);
+        }
+        colptr.push(rowidx.len());
+
+        // ---- Stage 2: order by weight, sample the spanning structure. ----
+        bysort.clear();
+        bysort.extend_from_slice(&merged);
+        if sort_by_weight {
+            sample::sort_by_weight(&mut bysort);
+        }
+        let mut rng = sample::pivot_rng(seed, k as u32);
+        // ---- Stage 3: push fills to the smaller endpoint's list. ----
+        sample::sample_clique(&bysort, &mut cum, &mut rng, |i, j, w| {
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            fills[lo as usize].push((hi, w));
+            n_fills += 1;
+        });
+    }
+
+    let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
+    let stats = FactorStats {
+        fills: n_fills,
+        out_entries: g.nnz() as u64,
+        workers: 1,
+        wall_secs: timer.secs(),
+        ..FactorStats::default()
+    };
+    Ok((g, diag, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::{factorize, Engine, ParacOptions};
+    use crate::graph::generators;
+    use crate::ordering::Ordering;
+    use crate::testing::prop::forall_seeds;
+
+    fn opts_seq() -> ParacOptions {
+        ParacOptions { engine: Engine::Seq, ordering: Ordering::Natural, ..Default::default() }
+    }
+
+    #[test]
+    fn path_graph_factors_exactly() {
+        // A path has no clique bigger than an edge: AC is *exact* on
+        // trees — G D Gᵀ must equal L precisely.
+        let l = generators::path(20);
+        let f = factorize(&l, &opts_seq()).unwrap();
+        f.validate().unwrap();
+        let got = f.product_dense();
+        let want = l.matrix.to_dense();
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((got[i][j] - want[i][j]).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_factorization_is_exact_leaf_first() {
+        // AC is exact whenever every pivot has ≤ 2 live neighbors — on a
+        // tree, any leaf-pruning order (which minimum degree produces)
+        // guarantees exactly one live neighbor per elimination.
+        forall_seeds(10, |seed| {
+            let l = generators::random_tree(40, seed);
+            let mut o = opts_seq();
+            o.ordering = Ordering::Amd;
+            let f = factorize(&l, &o).unwrap();
+            f.validate().map_err(|e| e.to_string())?;
+            let got = f.product_dense();
+            let want = l.matrix.to_dense();
+            for i in 0..40 {
+                for j in 0..40 {
+                    if (got[i][j] - want[i][j]).abs() > 1e-9 * want[i][i].max(1.0) {
+                        return Err(format!("mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn expectation_over_seeds_approaches_l() {
+        // E[G D Gᵀ] = L (Kyng–Sachdeva). Average many seeds on a small
+        // graph with real cliques and check convergence.
+        let l = generators::complete(8);
+        let n = l.n();
+        let trials = 3000;
+        let mut acc = vec![vec![0.0; n]; n];
+        for t in 0..trials {
+            let mut o = opts_seq();
+            o.seed = 5000 + t;
+            let f = factorize(&l, &o).unwrap();
+            let p = f.product_dense();
+            for i in 0..n {
+                for j in 0..n {
+                    acc[i][j] += p[i][j] / trials as f64;
+                }
+            }
+        }
+        let want = l.matrix.to_dense();
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (acc[i][j] - want[i][j]).abs() < 0.25,
+                    "E[GDGᵀ]({i},{j}) = {} vs {}",
+                    acc[i][j],
+                    want[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diag_positive_and_last_zero_for_connected() {
+        let l = generators::random_connected(60, 60, 3);
+        let f = factorize(&l, &opts_seq()).unwrap();
+        for k in 0..59 {
+            assert!(f.diag[k] > 0.0, "diag[{k}] = {}", f.diag[k]);
+        }
+        assert_eq!(f.diag[59], 0.0, "last pivot of a connected Laplacian is empty");
+    }
+
+    #[test]
+    fn fill_stays_near_linear() {
+        // AC samples ≤ m−1 edges per pivot: nnz(G) ≤ nnz(L)/2 + fills,
+        // and fills should stay O(M log N) — sanity: below 4× edges.
+        let l = generators::grid2d(30, 30, generators::Coeff::Uniform, 0);
+        let edges = l.num_edges();
+        let f = factorize(&l, &opts_seq()).unwrap();
+        assert!(
+            (f.stats.fills as f64) < 4.0 * edges as f64,
+            "fills {} vs edges {edges}",
+            f.stats.fills
+        );
+    }
+
+    #[test]
+    fn disconnected_graph_zero_pivots_per_component() {
+        let l = crate::graph::Laplacian::from_edges(6, &[(0, 1, 1.0), (2, 3, 2.0)], "f");
+        let f = factorize(&l, &opts_seq()).unwrap();
+        // Components {0,1}, {2,3}, {4}, {5}: one zero pivot each (the
+        // component's last-eliminated vertex) → 4 zero pivots.
+        let zeros = f.diag.iter().filter(|&&d| d == 0.0).count();
+        assert_eq!(zeros, 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let l = generators::random_connected(80, 120, 9);
+        let f1 = factorize(&l, &opts_seq()).unwrap();
+        let f2 = factorize(&l, &opts_seq()).unwrap();
+        assert_eq!(f1.g, f2.g);
+        assert_eq!(f1.diag, f2.diag);
+    }
+}

@@ -1,0 +1,110 @@
+//! Factorization statistics — the instrumentation behind the paper's
+//! stage breakdown (§5.1) and the §Perf iteration log in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+
+/// Snapshot of one factorization run.
+#[derive(Clone, Debug, Default)]
+pub struct FactorStats {
+    /// Fill edges sampled (Schur-complement spanning-tree edges).
+    pub fills: u64,
+    /// Entries written to the output factor.
+    pub out_entries: u64,
+    /// Nodes consumed from the shared fill arena.
+    pub arena_used: usize,
+    /// gpusim only: worst linear-probe distance observed in the
+    /// workspace hash map.
+    pub max_probe: u64,
+    /// gpusim only: total probe steps (insert + gather).
+    pub probe_steps: u64,
+    /// Time (ns) in stage 1 — gather + merge fill-ins.
+    pub stage_gather_ns: u64,
+    /// Time (ns) in stage 2 — weight sort + sampling.
+    pub stage_sample_ns: u64,
+    /// Time (ns) in stage 3 — Schur update + dependency/queue work.
+    pub stage_update_ns: u64,
+    /// Worker threads (or simulated blocks) used.
+    pub workers: usize,
+    /// Wall-clock seconds of the engine run (excludes ordering +
+    /// permutation).
+    pub wall_secs: f64,
+}
+
+impl FactorStats {
+    /// Pretty one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "fills={} out={} workers={} wall={:.1}ms stages(g/s/u)={:.0}/{:.0}/{:.0}ms probes(max={})",
+            self.fills,
+            self.out_entries,
+            self.workers,
+            self.wall_secs * 1e3,
+            self.stage_gather_ns as f64 / 1e6,
+            self.stage_sample_ns as f64 / 1e6,
+            self.stage_update_ns as f64 / 1e6,
+            self.max_probe,
+        )
+    }
+}
+
+/// Thread-shared accumulator the engines update with relaxed atomics.
+#[derive(Default)]
+pub struct StatsCollector {
+    /// See [`FactorStats::fills`].
+    pub fills: AtomicU64,
+    /// See [`FactorStats::out_entries`].
+    pub out_entries: AtomicU64,
+    /// See [`FactorStats::arena_used`].
+    pub arena_used: AtomicUsize,
+    /// See [`FactorStats::max_probe`].
+    pub max_probe: AtomicU64,
+    /// See [`FactorStats::probe_steps`].
+    pub probe_steps: AtomicU64,
+    /// See [`FactorStats::stage_gather_ns`].
+    pub stage_gather_ns: AtomicU64,
+    /// See [`FactorStats::stage_sample_ns`].
+    pub stage_sample_ns: AtomicU64,
+    /// See [`FactorStats::stage_update_ns`].
+    pub stage_update_ns: AtomicU64,
+}
+
+impl StatsCollector {
+    /// Raise `max_probe` to at least `p`.
+    pub fn probe_max(&self, p: u64) {
+        self.max_probe.fetch_max(p, Relaxed);
+    }
+
+    /// Finalize into a snapshot.
+    pub fn snapshot(&self, workers: usize, wall_secs: f64) -> FactorStats {
+        FactorStats {
+            fills: self.fills.load(Relaxed),
+            out_entries: self.out_entries.load(Relaxed),
+            arena_used: self.arena_used.load(Relaxed),
+            max_probe: self.max_probe.load(Relaxed),
+            probe_steps: self.probe_steps.load(Relaxed),
+            stage_gather_ns: self.stage_gather_ns.load(Relaxed),
+            stage_sample_ns: self.stage_sample_ns.load(Relaxed),
+            stage_update_ns: self.stage_update_ns.load(Relaxed),
+            workers,
+            wall_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_snapshot() {
+        let c = StatsCollector::default();
+        c.fills.fetch_add(10, Relaxed);
+        c.probe_max(5);
+        c.probe_max(3);
+        let s = c.snapshot(4, 0.5);
+        assert_eq!(s.fills, 10);
+        assert_eq!(s.max_probe, 5);
+        assert_eq!(s.workers, 4);
+        assert!(s.summary().contains("fills=10"));
+    }
+}

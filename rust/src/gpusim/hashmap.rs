@@ -1,0 +1,265 @@
+//! The right-looking fill workspace `W` (§5.3, Algorithm 4).
+//!
+//! A linear-probing, array-based hash map whose entries carry one of
+//! three states — **free**, **busy**, **occupied** — exactly as the
+//! paper describes: busy means a block is mid-write and others
+//! spin-wait. Fills for vertex `a` are inserted starting at
+//! `hash(a) + fill_in_count(a)` (the paper's probe-shortening
+//! heuristic); gathering scans from `hash(a)` until the expected count
+//! is found, freeing slots for reuse.
+//!
+//! `hash` is a **random permutation** of the vertex ids stretched over
+//! the table (§5.3.4: maximizing the minimum distance between any pair
+//! of hash codes; "setting σ to a random permutation works great in
+//! practice") — the identity mapping is kept for the ablation bench.
+
+use crate::factor::chunk::SharedBuf;
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+const FREE: u32 = 0;
+const BUSY: u32 = 1;
+const OCCUPIED: u32 = 2;
+
+/// Hash-code generation strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashKind {
+    /// Random permutation σ stretched over the table (paper default).
+    RandomPerm,
+    /// Identity mapping (paper: "the default permutation may cause slow
+    /// down" — kept for the ablation).
+    Identity,
+}
+
+/// The concurrent slot-state workspace.
+pub struct Workspace {
+    state: Box<[AtomicU32]>,
+    owner: SharedBuf<u32>,
+    row: SharedBuf<u32>,
+    val: SharedBuf<f64>,
+    /// Per-vertex fill count (exact number of pending fills owned by v).
+    fill_count: Box<[AtomicU32]>,
+    /// hash(v): start slot per vertex.
+    base: Vec<usize>,
+    cap: usize,
+    /// Total probe steps + max probe distance (perf counters).
+    pub probe_steps: AtomicU64,
+    pub max_probe: AtomicU64,
+}
+
+impl Workspace {
+    /// Build a workspace of `cap` slots for `n` vertices.
+    pub fn new(cap: usize, n: usize, kind: HashKind, seed: u64) -> Workspace {
+        let cap = cap.max(n.max(16));
+        let mut state = Vec::with_capacity(cap);
+        state.resize_with(cap, || AtomicU32::new(FREE));
+        let mut fill_count = Vec::with_capacity(n);
+        fill_count.resize_with(n, || AtomicU32::new(0));
+        let sigma: Vec<u32> = match kind {
+            HashKind::RandomPerm => Rng::new(seed ^ 0x4A54_A5A5).permutation(n),
+            HashKind::Identity => (0..n as u32).collect(),
+        };
+        let base = sigma
+            .iter()
+            .map(|&s| ((s as u128 * cap as u128) / n.max(1) as u128) as usize)
+            .collect();
+        Workspace {
+            state: state.into_boxed_slice(),
+            owner: SharedBuf::new(cap),
+            row: SharedBuf::new(cap),
+            val: SharedBuf::new(cap),
+            fill_count: fill_count.into_boxed_slice(),
+            base,
+            cap,
+            probe_steps: AtomicU64::new(0),
+            max_probe: AtomicU64::new(0),
+        }
+    }
+
+    /// Insert a fill `(row, val)` owned by vertex `v` (right-looking
+    /// Schur update, Algorithm 4 line 22). Returns `Err(())` if the
+    /// table is full.
+    pub fn insert(&self, v: u32, row: u32, val: f64) -> Result<(), ()> {
+        let hint = self.fill_count[v as usize].load(Ordering::Relaxed) as usize;
+        let start = self.base[v as usize] + hint;
+        let mut probes = 0u64;
+        for step in 0..self.cap {
+            let slot = (start + step) % self.cap;
+            probes += 1;
+            let st = &self.state[slot];
+            if st.load(Ordering::Relaxed) == FREE
+                && st
+                    .compare_exchange(FREE, BUSY, Ordering::Acquire, Ordering::Relaxed)
+                    .is_ok()
+            {
+                // SAFETY: BUSY state gives this thread exclusive access.
+                unsafe {
+                    self.owner.write(slot, v);
+                    self.row.write(slot, row);
+                    self.val.write(slot, val);
+                }
+                st.store(OCCUPIED, Ordering::Release);
+                self.fill_count[v as usize].fetch_add(1, Ordering::AcqRel);
+                self.probe_steps.fetch_add(probes, Ordering::Relaxed);
+                self.max_probe.fetch_max(probes, Ordering::Relaxed);
+                return Ok(());
+            }
+        }
+        Err(())
+    }
+
+    /// Gather and free all fills owned by `v` (stage 1 of Algorithm 4).
+    /// All inserts for `v` must happen-before (dependency protocol).
+    /// Appends `(row, val)` pairs to `out`.
+    pub fn gather(&self, v: u32, out: &mut Vec<(u32, f64)>) {
+        let expected = self.fill_count[v as usize].load(Ordering::Acquire);
+        if expected == 0 {
+            return;
+        }
+        let start = self.base[v as usize];
+        let mut found = 0u32;
+        let mut probes = 0u64;
+        let mut step = 0usize;
+        while found < expected {
+            debug_assert!(
+                step < 2 * self.cap,
+                "workspace scan overran: vertex {v}, expected {expected}, found {found}"
+            );
+            let slot = (start + step) % self.cap;
+            probes += 1;
+            let st = &self.state[slot];
+            match st.load(Ordering::Acquire) {
+                OCCUPIED => {
+                    // SAFETY: OCCUPIED published with Release.
+                    let o = unsafe { self.owner.read(slot) };
+                    if o == v {
+                        let r = unsafe { self.row.read(slot) };
+                        let w = unsafe { self.val.read(slot) };
+                        out.push((r, w));
+                        st.store(FREE, Ordering::Release);
+                        found += 1;
+                    }
+                    step += 1;
+                }
+                BUSY => {
+                    // Another block is mid-insert here — it might be for
+                    // a different owner; spin until resolved (yield so
+                    // the writer can finish on oversubscribed CPUs).
+                    std::thread::yield_now();
+                }
+                _ => {
+                    step += 1;
+                }
+            }
+        }
+        self.fill_count[v as usize].store(0, Ordering::Relaxed);
+        self.probe_steps.fetch_add(probes, Ordering::Relaxed);
+        self.max_probe.fetch_max(probes, Ordering::Relaxed);
+    }
+
+    /// Current number of pending fills for `v`.
+    pub fn pending(&self, v: u32) -> u32 {
+        self.fill_count[v as usize].load(Ordering::Relaxed)
+    }
+
+    /// Table capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_then_gather_roundtrip() {
+        let w = Workspace::new(64, 8, HashKind::RandomPerm, 1);
+        w.insert(3, 10, 1.5).unwrap();
+        w.insert(3, 11, 2.5).unwrap();
+        w.insert(5, 12, 3.5).unwrap();
+        let mut out = Vec::new();
+        w.gather(3, &mut out);
+        out.sort_by_key(|x| x.0);
+        assert_eq!(out, vec![(10, 1.5), (11, 2.5)]);
+        assert_eq!(w.pending(3), 0);
+        assert_eq!(w.pending(5), 1);
+    }
+
+    #[test]
+    fn slots_are_reusable_after_gather() {
+        let w = Workspace::new(16, 4, HashKind::Identity, 0);
+        for round in 0..20 {
+            for i in 0..10 {
+                w.insert(1, i, round as f64).unwrap();
+            }
+            let mut out = Vec::new();
+            w.gather(1, &mut out);
+            assert_eq!(out.len(), 10, "round {round}");
+        }
+    }
+
+    #[test]
+    fn full_table_reports_error() {
+        let w = Workspace::new(16, 4, HashKind::Identity, 0);
+        for i in 0..16 {
+            w.insert(0, i, 1.0).unwrap();
+        }
+        assert!(w.insert(0, 99, 1.0).is_err());
+    }
+
+    #[test]
+    fn concurrent_inserts_distinct_owners() {
+        let n = 8u32;
+        let per = 500;
+        let w = Workspace::new(16 * 1024, n as usize, HashKind::RandomPerm, 7);
+        std::thread::scope(|s| {
+            for v in 0..n {
+                let w = &w;
+                s.spawn(move || {
+                    for i in 0..per {
+                        w.insert(v, i, v as f64 + i as f64).unwrap();
+                    }
+                });
+            }
+        });
+        for v in 0..n {
+            let mut out = Vec::new();
+            w.gather(v, &mut out);
+            assert_eq!(out.len(), per as usize, "owner {v}");
+            assert!(out.iter().all(|&(r, val)| val == v as f64 + r as f64));
+        }
+    }
+
+    #[test]
+    fn concurrent_insert_while_gathering_other_owner() {
+        let w = Workspace::new(4096, 2, HashKind::RandomPerm, 3);
+        for i in 0..200 {
+            w.insert(0, i, 1.0).unwrap();
+        }
+        std::thread::scope(|s| {
+            let w0 = &w;
+            s.spawn(move || {
+                for i in 0..200 {
+                    w0.insert(1, i, 2.0).unwrap();
+                }
+            });
+            let mut out = Vec::new();
+            w.gather(0, &mut out);
+            assert_eq!(out.len(), 200);
+        });
+        let mut out = Vec::new();
+        w.gather(1, &mut out);
+        assert_eq!(out.len(), 200);
+    }
+
+    #[test]
+    fn random_perm_spreads_bases() {
+        let w = Workspace::new(1000, 100, HashKind::RandomPerm, 9);
+        // All bases distinct (permutation property).
+        let mut bases = w.base.clone();
+        bases.sort_unstable();
+        bases.dedup();
+        assert_eq!(bases.len(), 100);
+    }
+}

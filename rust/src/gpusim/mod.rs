@@ -1,0 +1,18 @@
+//! GPU execution-model substrate.
+//!
+//! The paper's GPU engine (§5.3) runs a *persistent kernel*: every block
+//! stays resident, polls the job queue, and eliminates one vertex at a
+//! time using block-level primitives (CUB scans, custom odd-even /
+//! bitonic sorts, parallel binary-search sampling) and a linear-probing
+//! hash workspace with free/busy/occupied slot states.
+//!
+//! No GPU is available in this environment, so this module reproduces
+//! the *execution model* faithfully on CPU (see DESIGN.md
+//! §Hardware-Adaptation): [`primitives`] implements the block-level
+//! collectives as explicit lane-step loops — the exact data movement a
+//! warp would perform — and [`hashmap`] implements the slot-state
+//! workspace with the same CAS protocol a CUDA implementation uses.
+//! `factor::gpusim` drives them with one OS thread per simulated block.
+
+pub mod hashmap;
+pub mod primitives;

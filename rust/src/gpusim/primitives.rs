@@ -1,0 +1,289 @@
+//! Block-level collective primitives, modeled as lane-step loops.
+//!
+//! Each function mirrors a CUDA block collective the paper's kernel
+//! uses; the lane loop (`for lane in 0..width`) stands in for the
+//! warp's simultaneous execution, and the *step structure* (compare
+//! distances, scan offsets) is identical to the device versions:
+//!
+//! * [`odd_even_sort_by`] / [`bitonic_sort_by`] — the paper's custom
+//!   block sorts, "which can handle an arbitrary number of elements"
+//!   (§5.3.2: CUB's block sort needs a compile-time size).
+//! * [`exclusive_prefix_sum`] — Blelloch up/down-sweep scan.
+//! * [`suffix_sums_f64`] — the sampling CDF (Algorithm 4 line 18).
+//! * [`merge_sorted_by_flags`] — the paper's "mark 1 if different from
+//!   left neighbor, prefix-sum for new indices" duplicate merge.
+
+/// Odd–even transposition sort (stable network for small `n`).
+/// `key` maps an element to its comparison key.
+pub fn odd_even_sort_by<T: Copy, K: PartialOrd>(xs: &mut [T], key: impl Fn(&T) -> K) {
+    let n = xs.len();
+    for step in 0..n {
+        let start = step % 2;
+        // "Lanes" compare-exchange disjoint pairs simultaneously.
+        let mut lane = start;
+        while lane + 1 < n {
+            if key(&xs[lane + 1]) < key(&xs[lane]) {
+                xs.swap(lane, lane + 1);
+            }
+            lane += 2;
+        }
+    }
+}
+
+/// Bitonic sort for arbitrary `n`: the power-of-two network run over a
+/// buffer padded with copies of the maximum element (the padding sorts
+/// to the tail and is bit-identical to real maxima, so truncation is
+/// exact) — the same strategy a device kernel uses with sentinel keys
+/// in shared memory.
+pub fn bitonic_sort_by<T: Copy, K: PartialOrd>(xs: &mut [T], key: impl Fn(&T) -> K) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    let m = n.next_power_of_two();
+    // Pad with the max element.
+    let mut buf: Vec<T> = Vec::with_capacity(m);
+    buf.extend_from_slice(xs);
+    if m > n {
+        let mut max_i = 0;
+        for i in 1..n {
+            if key(&xs[i]) > key(&xs[max_i]) {
+                max_i = i;
+            }
+        }
+        buf.resize(m, xs[max_i]);
+    }
+    let mut k = 2;
+    while k <= m {
+        let mut j = k / 2;
+        while j > 0 {
+            for lane in 0..m {
+                let partner = lane ^ j;
+                if partner > lane {
+                    let ascending = lane & k == 0;
+                    let a = key(&buf[lane]);
+                    let b = key(&buf[partner]);
+                    if (b < a) == ascending {
+                        buf.swap(lane, partner);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    xs.copy_from_slice(&buf[..n]);
+}
+
+/// Exclusive prefix sum (Blelloch two-phase scan shape). Returns the
+/// total.
+pub fn exclusive_prefix_sum(xs: &mut [u32]) -> u32 {
+    let n = xs.len();
+    if n == 0 {
+        return 0;
+    }
+    let m = n.next_power_of_two();
+    let mut buf = vec![0u32; m];
+    buf[..n].copy_from_slice(xs);
+    // Up-sweep.
+    let mut d = 1;
+    while d < m {
+        let mut lane = 2 * d - 1;
+        while lane < m {
+            buf[lane] += buf[lane - d];
+            lane += 2 * d;
+        }
+        d *= 2;
+    }
+    let total = buf[m - 1];
+    buf[m - 1] = 0;
+    // Down-sweep.
+    d = m / 2;
+    while d >= 1 {
+        let mut lane = 2 * d - 1;
+        while lane < m {
+            let t = buf[lane - d];
+            buf[lane - d] = buf[lane];
+            buf[lane] += t;
+            lane += 2 * d;
+        }
+        if d == 1 {
+            break;
+        }
+        d /= 2;
+    }
+    xs.copy_from_slice(&buf[..n]);
+    total
+}
+
+/// Inclusive suffix sums of `f64` weights: `out[i] = Σ_{t ≥ i} w_t`
+/// (Algorithm 4's parallel suffix sum; serial reference shape here
+/// because float scans must stay deterministic anyway).
+pub fn suffix_sums_f64(ws: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(ws.len(), 0.0);
+    let mut acc = 0.0;
+    for i in (0..ws.len()).rev() {
+        acc += ws[i];
+        out[i] = acc;
+    }
+}
+
+/// The paper's GPU duplicate-merge (§5.3.2): input sorted by key; flag
+/// each element that differs from its left neighbor; exclusive prefix
+/// sum of flags gives output indices; accumulate values and
+/// multiplicities. Returns merged `(key, value)` pairs + multiplicity.
+pub fn merge_sorted_by_flags(
+    sorted: &[(u32, f64)],
+    merged: &mut Vec<(u32, f64)>,
+    mult: &mut Vec<u32>,
+) {
+    merged.clear();
+    mult.clear();
+    let n = sorted.len();
+    if n == 0 {
+        return;
+    }
+    // Flags: 1 where a new run starts.
+    let flags: Vec<u32> = (0..n)
+        .map(|i| if i == 0 || sorted[i].0 != sorted[i - 1].0 { 1 } else { 0 })
+        .collect();
+    // Output slot = inclusive_scan(flags) − 1 = exclusive + own flag − 1.
+    let mut scan = flags.clone();
+    let total = exclusive_prefix_sum(&mut scan);
+    merged.resize(total as usize, (0, 0.0));
+    mult.resize(total as usize, 0);
+    for i in 0..n {
+        let slot = (scan[i] + flags[i] - 1) as usize;
+        let (k, v) = sorted[i];
+        merged[slot].0 = k;
+        merged[slot].1 += v;
+        mult[slot] += 1;
+    }
+}
+
+/// Parallel weighted draw (Algorithm 4 line 20): binary search over the
+/// inclusive-prefix CDF — each lane would search independently on the
+/// device; the search itself is identical.
+pub fn block_search_cdf(cum: &[f64], u: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = cum.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if cum[mid] <= u {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::forall_rngs;
+
+    #[test]
+    fn odd_even_sorts() {
+        forall_rngs(32, |rng| {
+            let n = rng.below(64);
+            let mut xs: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32 % 100).collect();
+            let mut want = xs.clone();
+            want.sort_unstable();
+            odd_even_sort_by(&mut xs, |&x| x);
+            if xs != want {
+                return Err(format!("odd-even failed on {n} elems"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bitonic_sorts_arbitrary_sizes() {
+        forall_rngs(48, |rng| {
+            let n = rng.below(130); // crosses powers of two
+            let mut xs: Vec<(u32, f64)> =
+                (0..n).map(|i| ((rng.next_u64() % 1000) as u32, i as f64)).collect();
+            let mut want = xs.clone();
+            want.sort_by_key(|x| x.0);
+            bitonic_sort_by(&mut xs, |x| x.0);
+            let got: Vec<u32> = xs.iter().map(|x| x.0).collect();
+            let exp: Vec<u32> = want.iter().map(|x| x.0).collect();
+            if got != exp {
+                return Err(format!("bitonic failed on {n} elems"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefix_sum_matches_serial() {
+        forall_rngs(32, |rng| {
+            let n = rng.below(70);
+            let xs: Vec<u32> = (0..n).map(|_| (rng.next_u64() % 10) as u32).collect();
+            let mut got = xs.clone();
+            let total = exclusive_prefix_sum(&mut got);
+            let mut acc = 0u32;
+            for i in 0..n {
+                if got[i] != acc {
+                    return Err(format!("prefix[{i}] = {} want {acc}", got[i]));
+                }
+                acc += xs[i];
+            }
+            if total != acc {
+                return Err(format!("total {total} want {acc}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn suffix_sums() {
+        let mut out = Vec::new();
+        suffix_sums_f64(&[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, vec![6.0, 5.0, 3.0]);
+        suffix_sums_f64(&[], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn flag_merge_equals_reference_merge() {
+        forall_rngs(32, |rng| {
+            let n = rng.below(50);
+            let mut raw: Vec<(u32, f64)> = (0..n)
+                .map(|_| ((rng.next_u64() % 8) as u32, rng.range_f64(0.1, 2.0)))
+                .collect();
+            // Reference path.
+            let mut m_ref = Vec::new();
+            let mut c_ref = Vec::new();
+            let mut raw2 = raw.clone();
+            crate::factor::sample::merge_neighbors(&mut raw2, &mut m_ref, &mut c_ref);
+            // GPU path: sort by (key, val) then flag-merge.
+            raw.sort_unstable_by(|a, b| {
+                a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap())
+            });
+            let mut m_gpu = Vec::new();
+            let mut c_gpu = Vec::new();
+            merge_sorted_by_flags(&raw, &mut m_gpu, &mut c_gpu);
+            if m_ref.len() != m_gpu.len() || c_ref != c_gpu {
+                return Err("structure mismatch".into());
+            }
+            for (a, b) in m_ref.iter().zip(&m_gpu) {
+                if a.0 != b.0 || (a.1 - b.1).abs() > 1e-12 {
+                    return Err(format!("{a:?} vs {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cdf_search() {
+        let cum = [1.0, 3.0, 6.0];
+        assert_eq!(block_search_cdf(&cum, 0.5), 0);
+        assert_eq!(block_search_cdf(&cum, 1.0), 1);
+        assert_eq!(block_search_cdf(&cum, 2.9), 1);
+        assert_eq!(block_search_cdf(&cum, 5.9), 2);
+    }
+}

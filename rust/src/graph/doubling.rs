@@ -1,0 +1,199 @@
+//! The doubling reduction: SDD matrices with **positive** off-diagonals
+//! (not M-matrices, so [`super::laplacian::Laplacian::ground_sdd`] alone
+//! does not apply) reduce to a graph Laplacian of twice the size via the
+//! bipartite double cover (Gremban's construction, used by rchol):
+//!
+//! For `A = D + A_n + A_p` (diagonal, negative off-diag, positive
+//! off-diag), the `2N × 2N` matrix
+//!
+//! ```text
+//!   Â = [ D + A_n      -A_p    ]   acting on (x⁺, x⁻)
+//!       [ -A_p       D + A_n   ]
+//! ```
+//!
+//! is SDD with non-positive off-diagonals; grounding it yields a
+//! Laplacian. A solve of `A x = b` maps to `Â (x, −x) = (b, −b)`, so the
+//! preconditioner apply averages the two halves:
+//! `z = (ẑ⁺ − ẑ⁻) / 2`.
+
+use super::laplacian::Laplacian;
+use crate::sparse::{Coo, Csr};
+
+/// Build the `2N` double-cover SDD M-matrix of `a` (entries mirrored per
+/// the Gremban construction). Fails if `a` is not SDD.
+pub fn double_cover(a: &Csr) -> Result<Csr, String> {
+    let n = a.nrows;
+    let mut coo = Coo::with_capacity(2 * n, 2 * n, 2 * a.nnz());
+    for r in 0..n {
+        let mut offsum = 0.0;
+        let mut diag = 0.0;
+        for (&c, &v) in a.row_indices(r).iter().zip(a.row_data(r)) {
+            let c = c as usize;
+            if c == r {
+                diag = v;
+                continue;
+            }
+            offsum += v.abs();
+            if v < 0.0 {
+                // Negative edge stays within each copy.
+                coo.push(r as u32, c as u32, v);
+                coo.push((r + n) as u32, (c + n) as u32, v);
+            } else {
+                // Positive edge crosses between the copies, negated.
+                coo.push(r as u32, (c + n) as u32, -v);
+                coo.push((r + n) as u32, c as u32, -v);
+            }
+        }
+        if diag + 1e-9 * diag.abs() < offsum {
+            return Err(format!("row {r} not diagonally dominant"));
+        }
+        coo.push(r as u32, r as u32, diag);
+        coo.push((r + n) as u32, (r + n) as u32, diag);
+    }
+    Ok(coo.to_csr())
+}
+
+/// A preconditioner for a general SDD matrix built by factoring the
+/// grounded double cover with ParAC.
+pub struct DoubledSddPrecond {
+    factor: crate::factor::LdlFactor,
+    n: usize,
+}
+
+impl DoubledSddPrecond {
+    /// Ground + factor the double cover of `a`.
+    pub fn new(a: &Csr, opts: &crate::factor::ParacOptions) -> Result<Self, String> {
+        let doubled = double_cover(a)?;
+        let factor =
+            crate::factor::factorize_sdd(&doubled, opts).map_err(|e| e.to_string())?;
+        Ok(DoubledSddPrecond { factor, n: a.nrows })
+    }
+
+    /// The underlying `2N` factor.
+    pub fn factor(&self) -> &crate::factor::LdlFactor {
+        &self.factor
+    }
+}
+
+impl crate::precond::Preconditioner for DoubledSddPrecond {
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        // Â (x, −x) = (r, −r): solve on the cover, fold back.
+        let mut rhat = vec![0.0; 2 * self.n];
+        rhat[..self.n].copy_from_slice(r);
+        for i in 0..self.n {
+            rhat[self.n + i] = -r[i];
+        }
+        let z = self.factor.solve(&rhat);
+        (0..self.n).map(|i| 0.5 * (z[i] - z[self.n + i])).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "parac-doubled"
+    }
+
+    fn nnz(&self) -> usize {
+        self.factor.nnz() + 2 * self.n
+    }
+}
+
+/// Kept for parity with the Laplacian module: whether `a` needs the
+/// doubling reduction (any positive off-diagonal).
+pub fn needs_doubling(a: &Csr) -> bool {
+    (0..a.nrows).any(|r| {
+        a.row_indices(r)
+            .iter()
+            .zip(a.row_data(r))
+            .any(|(&c, &v)| c as usize != r && v > 1e-14)
+    })
+}
+
+/// Convenience: `Laplacian`-typed view of the grounded double cover
+/// (diagnostics / tests).
+pub fn doubled_laplacian(a: &Csr, name: &str) -> Result<Laplacian, String> {
+    Laplacian::ground_sdd(&double_cover(a)?, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ParacOptions;
+    use crate::precond::Preconditioner;
+    use crate::solve::pcg::{self, PcgOptions};
+
+    /// SDD test matrix with mixed-sign off-diagonals: a ring where every
+    /// third edge has a positive coupling.
+    fn mixed_sign_sdd(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            let j = (i + 1) % n;
+            let v = if i % 3 == 0 { 0.8 } else { -1.0 };
+            coo.push_sym(i as u32, j as u32, v);
+        }
+        for i in 0..n {
+            coo.push(i as u32, i as u32, 2.2); // strictly dominant
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn double_cover_is_m_matrix_sdd() {
+        let a = mixed_sign_sdd(24);
+        assert!(needs_doubling(&a));
+        let d = double_cover(&a).unwrap();
+        assert_eq!(d.nrows, 48);
+        assert!(d.is_symmetric(1e-12));
+        // All off-diagonals non-positive, rows dominant.
+        for r in 0..48 {
+            for (&c, &v) in d.row_indices(r).iter().zip(d.row_data(r)) {
+                if c as usize != r {
+                    assert!(v <= 0.0, "positive off-diag survived at ({r},{c})");
+                }
+            }
+        }
+        let lap = doubled_laplacian(&a, "cover").unwrap();
+        lap.validate().unwrap();
+    }
+
+    #[test]
+    fn doubled_precond_solves_mixed_sign_system() {
+        let a = mixed_sign_sdd(60);
+        let pre = DoubledSddPrecond::new(&a, &ParacOptions::default()).unwrap();
+        let mut rng = crate::rng::Rng::new(4);
+        let xs: Vec<f64> = (0..60).map(|_| rng.next_normal()).collect();
+        let b = a.mul_vec(&xs);
+        let o = PcgOptions { project: false, tol: 1e-10, max_iter: 300, ..Default::default() };
+        let out = pcg::solve(&a, &b, &pre, &o);
+        assert!(out.converged, "rel={}", out.rel_residual);
+        for (got, want) in out.x.iter().zip(&xs) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn doubled_precond_beats_jacobi() {
+        let a = mixed_sign_sdd(120);
+        let pre = DoubledSddPrecond::new(&a, &ParacOptions::default()).unwrap();
+        let jac = crate::precond::JacobiPrecond::new(&a);
+        let b: Vec<f64> = (0..120).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+        let o = PcgOptions { project: false, tol: 1e-9, max_iter: 500, ..Default::default() };
+        let with = pcg::solve(&a, &b, &pre, &o);
+        let without = pcg::solve(&a, &b, &jac, &o);
+        assert!(with.converged);
+        assert!(with.iters <= without.iters, "{} vs {}", with.iters, without.iters);
+    }
+
+    #[test]
+    fn rejects_non_sdd() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 0.5);
+        coo.push(1, 1, 0.5);
+        coo.push_sym(0, 1, 1.0);
+        assert!(double_cover(&coo.to_csr()).is_err());
+    }
+
+    #[test]
+    fn pure_m_matrix_needs_no_doubling() {
+        let lap = crate::graph::generators::grid2d(5, 5, crate::graph::generators::Coeff::Uniform, 0);
+        assert!(!needs_doubling(&lap.matrix));
+    }
+}

@@ -1,0 +1,425 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates on SuiteSparse matrices, SPE reservoir benchmarks,
+//! OSM road networks, and Laplacians.jl 3D Poisson problems (Table 1).
+//! None of those datasets ship with this environment, so each *class* is
+//! reproduced by a generator that matches the structural properties ParAC
+//! is sensitive to — degree distribution, locality, conditioning —
+//! per the substitution policy in DESIGN.md:
+//!
+//! | paper matrix              | generator here                           |
+//! |---------------------------|------------------------------------------|
+//! | parabolic_fem / ecology*  | [`grid2d`] (5-point mesh)                |
+//! | apache2 / venturiLevel3   | [`grid3d`] (7-point mesh)                |
+//! | G3_circuit                | [`grid2d`] + high-contrast weights       |
+//! | GAP-road / *_osm          | [`road_like`] (tree + sparse shortcuts)  |
+//! | com-LiveJournal           | [`pref_attach`] (heavy-tail social net)  |
+//! | delaunay_n24              | [`delaunay_like`] (triangulated grid)    |
+//! | 3D poisson variants       | [`grid3d`] with [`Coeff`] variants       |
+//! | spe16m                    | [`grid3d`] aniso + extreme contrast      |
+
+use super::laplacian::Laplacian;
+use crate::rng::Rng;
+
+/// Coefficient field for mesh generators — selects the paper's uniform /
+/// anisotropic / high-contrast Poisson variants.
+#[derive(Clone, Copy, Debug)]
+pub enum Coeff {
+    /// Unit weight on every edge.
+    Uniform,
+    /// Direction-scaled weights `(ax, ay, az)` (az ignored in 2D).
+    Anisotropic(f64, f64, f64),
+    /// Per-cell coefficient `10^U(0, log10_ratio)`; edge weight is the
+    /// harmonic mean of its two cells — the classic high-contrast medium.
+    HighContrast(f64),
+}
+
+impl Coeff {
+    fn tag(&self) -> String {
+        match self {
+            Coeff::Uniform => "uniform".into(),
+            Coeff::Anisotropic(x, y, z) => format!("aniso({x},{y},{z})"),
+            Coeff::HighContrast(r) => format!("contrast(1e{r})"),
+        }
+    }
+}
+
+#[inline]
+fn harmonic(a: f64, b: f64) -> f64 {
+    2.0 * a * b / (a + b)
+}
+
+/// 5-point 2D grid Laplacian (`nx·ny` vertices).
+pub fn grid2d(nx: usize, ny: usize, coeff: Coeff, seed: u64) -> Laplacian {
+    let mut rng = Rng::new(seed);
+    let cell: Vec<f64> = match coeff {
+        Coeff::HighContrast(r) => (0..nx * ny).map(|_| 10f64.powf(rng.range_f64(0.0, r))).collect(),
+        _ => Vec::new(),
+    };
+    let (ax, ay) = match coeff {
+        Coeff::Anisotropic(x, y, _) => (x, y),
+        _ => (1.0, 1.0),
+    };
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let w = |a: u32, b: u32, dirw: f64| -> f64 {
+        if cell.is_empty() {
+            dirw
+        } else {
+            harmonic(cell[a as usize], cell[b as usize])
+        }
+    };
+    let mut edges = Vec::with_capacity(2 * nx * ny);
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                let (a, b) = (id(x, y), id(x + 1, y));
+                edges.push((a, b, w(a, b, ax)));
+            }
+            if y + 1 < ny {
+                let (a, b) = (id(x, y), id(x, y + 1));
+                edges.push((a, b, w(a, b, ay)));
+            }
+        }
+    }
+    Laplacian::from_edges(nx * ny, &edges, &format!("grid2d({nx}x{ny},{})", coeff.tag()))
+}
+
+/// 7-point 3D grid Laplacian (`nx·ny·nz` vertices) — the paper's "3D
+/// poisson" family.
+pub fn grid3d(nx: usize, ny: usize, nz: usize, coeff: Coeff, seed: u64) -> Laplacian {
+    let mut rng = Rng::new(seed);
+    let n = nx * ny * nz;
+    let cell: Vec<f64> = match coeff {
+        Coeff::HighContrast(r) => (0..n).map(|_| 10f64.powf(rng.range_f64(0.0, r))).collect(),
+        _ => Vec::new(),
+    };
+    let (ax, ay, az) = match coeff {
+        Coeff::Anisotropic(x, y, z) => (x, y, z),
+        _ => (1.0, 1.0, 1.0),
+    };
+    let id = |x: usize, y: usize, z: usize| (z * ny * nx + y * nx + x) as u32;
+    let w = |a: u32, b: u32, dirw: f64| -> f64 {
+        if cell.is_empty() {
+            dirw
+        } else {
+            harmonic(cell[a as usize], cell[b as usize])
+        }
+    };
+    let mut edges = Vec::with_capacity(3 * n);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                if x + 1 < nx {
+                    let (a, b) = (id(x, y, z), id(x + 1, y, z));
+                    edges.push((a, b, w(a, b, ax)));
+                }
+                if y + 1 < ny {
+                    let (a, b) = (id(x, y, z), id(x, y + 1, z));
+                    edges.push((a, b, w(a, b, ay)));
+                }
+                if z + 1 < nz {
+                    let (a, b) = (id(x, y, z), id(x, y, z + 1));
+                    edges.push((a, b, w(a, b, az)));
+                }
+            }
+        }
+    }
+    Laplacian::from_edges(n, &edges, &format!("grid3d({nx}x{ny}x{nz},{})", coeff.tag()))
+}
+
+/// Road-network analogue: a random spanning tree over a 2D grid plus a
+/// small fraction of local "shortcut" edges. Average degree ≈ 2.2–2.6,
+/// huge diameter — the properties that make GAP-road / europe_osm behave
+/// the way they do in Tables 2–3.
+pub fn road_like(nx: usize, ny: usize, extra_frac: f64, seed: u64) -> Laplacian {
+    let n = nx * ny;
+    let mut rng = Rng::new(seed);
+    let id = |x: usize, y: usize| y * nx + x;
+    // Random spanning tree via randomized DFS over the grid.
+    let mut visited = vec![false; n];
+    let mut edges: Vec<(u32, u32, f64)> = Vec::with_capacity(n + (extra_frac * n as f64) as usize);
+    let mut stack = vec![id(rng.below(nx), rng.below(ny))];
+    visited[stack[0]] = true;
+    let mut nbrs = Vec::with_capacity(4);
+    while let Some(&u) = stack.last() {
+        let (x, y) = (u % nx, u / nx);
+        nbrs.clear();
+        if x > 0 && !visited[id(x - 1, y)] {
+            nbrs.push(id(x - 1, y));
+        }
+        if x + 1 < nx && !visited[id(x + 1, y)] {
+            nbrs.push(id(x + 1, y));
+        }
+        if y > 0 && !visited[id(x, y - 1)] {
+            nbrs.push(id(x, y - 1));
+        }
+        if y + 1 < ny && !visited[id(x, y + 1)] {
+            nbrs.push(id(x, y + 1));
+        }
+        if nbrs.is_empty() {
+            stack.pop();
+            continue;
+        }
+        let v = nbrs[rng.below(nbrs.len())];
+        visited[v] = true;
+        edges.push((u as u32, v as u32, rng.range_f64(0.5, 2.0)));
+        stack.push(v);
+    }
+    // Shortcuts: re-add a fraction of unused grid edges.
+    let n_extra = (extra_frac * n as f64) as usize;
+    for _ in 0..n_extra {
+        let x = rng.below(nx - 1);
+        let y = rng.below(ny - 1);
+        let (a, b) = if rng.below(2) == 0 {
+            (id(x, y), id(x + 1, y))
+        } else {
+            (id(x, y), id(x, y + 1))
+        };
+        edges.push((a as u32, b as u32, rng.range_f64(0.5, 2.0)));
+    }
+    Laplacian::from_edges(n, &edges, &format!("road_like({nx}x{ny},+{extra_frac})"))
+}
+
+/// Barabási–Albert preferential attachment: heavy-tailed degree
+/// distribution, high density — the com-LiveJournal analogue.
+pub fn pref_attach(n: usize, m: usize, seed: u64) -> Laplacian {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    // Target list: each edge endpoint appears once → sampling ∝ degree.
+    let mut targets: Vec<u32> = Vec::with_capacity(2 * n * m);
+    let mut edges: Vec<(u32, u32, f64)> = Vec::with_capacity(n * m);
+    // Seed clique on m+1 vertices.
+    for a in 0..=(m as u32) {
+        for b in 0..a {
+            edges.push((b, a, 1.0));
+            targets.push(a);
+            targets.push(b);
+        }
+    }
+    for v in (m as u32 + 1)..(n as u32) {
+        let mut chosen = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = targets[rng.below(targets.len())];
+            if t != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            edges.push((t, v, 1.0));
+            targets.push(v);
+            targets.push(t);
+        }
+    }
+    Laplacian::from_edges(n, &edges, &format!("pref_attach({n},m={m})"))
+}
+
+/// Triangulated grid: each unit cell gets one of its two diagonals at
+/// random — a planar triangulation with delaunay_n24-like structure.
+pub fn delaunay_like(nx: usize, ny: usize, seed: u64) -> Laplacian {
+    let mut rng = Rng::new(seed);
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    let mut edges = Vec::with_capacity(3 * nx * ny);
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                edges.push((id(x, y), id(x + 1, y), 1.0));
+            }
+            if y + 1 < ny {
+                edges.push((id(x, y), id(x, y + 1), 1.0));
+            }
+            if x + 1 < nx && y + 1 < ny {
+                if rng.below(2) == 0 {
+                    edges.push((id(x, y), id(x + 1, y + 1), 1.0));
+                } else {
+                    edges.push((id(x + 1, y), id(x, y + 1), 1.0));
+                }
+            }
+        }
+    }
+    Laplacian::from_edges(nx * ny, &edges, &format!("delaunay_like({nx}x{ny})"))
+}
+
+/// Erdős–Rényi `G(n, p)` with `p = avg_deg / (n−1)` (irregular sparsity,
+/// no locality at all — a stress test for the orderings).
+pub fn erdos_renyi(n: usize, avg_deg: f64, seed: u64) -> Laplacian {
+    let mut rng = Rng::new(seed);
+    let p = avg_deg / (n as f64 - 1.0);
+    let mut edges = Vec::with_capacity((n as f64 * avg_deg / 2.0) as usize);
+    // Geometric skipping over the upper-triangular pair sequence.
+    let ln_q = (1.0 - p).ln();
+    let mut a = 0usize;
+    let mut b = 0usize;
+    loop {
+        let u = 1.0 - rng.next_f64();
+        let skip = (u.ln() / ln_q).floor() as usize + 1;
+        b += skip;
+        while b >= n {
+            a += 1;
+            b = a + 1 + (b - n);
+            if a >= n - 1 {
+                return Laplacian::from_edges(
+                    n,
+                    &edges,
+                    &format!("erdos_renyi({n},deg={avg_deg})"),
+                );
+            }
+        }
+        edges.push((a as u32, b as u32, 1.0));
+    }
+}
+
+/// Path graph (worst-case sequential chain — critical-path stress test).
+pub fn path(n: usize) -> Laplacian {
+    let edges: Vec<_> = (0..n as u32 - 1).map(|i| (i, i + 1, 1.0)).collect();
+    Laplacian::from_edges(n, &edges, &format!("path({n})"))
+}
+
+/// Star graph (single high-degree hub — clique-sampling stress test).
+pub fn star(n: usize) -> Laplacian {
+    let edges: Vec<_> = (1..n as u32).map(|i| (0, i, 1.0)).collect();
+    Laplacian::from_edges(n, &edges, &format!("star({n})"))
+}
+
+/// Complete graph on `n` vertices (dense limit, tiny `n` only).
+pub fn complete(n: usize) -> Laplacian {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n as u32 {
+        for b in 0..a {
+            edges.push((b, a, 1.0));
+        }
+    }
+    Laplacian::from_edges(n, &edges, &format!("complete({n})"))
+}
+
+/// Uniform random tree on `n` vertices (random attachment).
+pub fn random_tree(n: usize, seed: u64) -> Laplacian {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n - 1);
+    for v in 1..n as u32 {
+        let parent = rng.below(v as usize) as u32;
+        edges.push((parent, v, rng.range_f64(0.5, 2.0)));
+    }
+    Laplacian::from_edges(n, &edges, &format!("random_tree({n})"))
+}
+
+/// A small connected random graph with random weights — the property-test
+/// workhorse (connected by construction: random tree + extra edges).
+pub fn random_connected(n: usize, extra_edges: usize, seed: u64) -> Laplacian {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n - 1 + extra_edges);
+    for v in 1..n as u32 {
+        let parent = rng.below(v as usize) as u32;
+        edges.push((parent, v, rng.range_f64(0.1, 10.0)));
+    }
+    for _ in 0..extra_edges {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b {
+            edges.push((a.min(b), a.max(b), rng.range_f64(0.1, 10.0)));
+        }
+    }
+    Laplacian::from_edges(n, &edges, &format!("random_connected({n},+{extra_edges})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_structure() {
+        let l = grid2d(4, 3, Coeff::Uniform, 0);
+        l.validate().unwrap();
+        assert_eq!(l.n(), 12);
+        assert_eq!(l.num_edges(), 3 * 3 + 4 * 2); // nx-1 per row * ny + ny-1 per col * nx
+        let (_, ncomp) = l.components();
+        assert_eq!(ncomp, 1);
+    }
+
+    #[test]
+    fn grid3d_structure() {
+        let l = grid3d(3, 3, 3, Coeff::Uniform, 0);
+        l.validate().unwrap();
+        assert_eq!(l.n(), 27);
+        assert_eq!(l.num_edges(), 3 * (2 * 3 * 3)); // 3 directions × 2·3·3 edges
+        // Interior vertex degree 6.
+        assert_eq!(l.matrix.get(13, 13), 6.0);
+    }
+
+    #[test]
+    fn anisotropic_weights() {
+        let l = grid2d(3, 3, Coeff::Anisotropic(10.0, 0.1, 1.0), 0);
+        l.validate().unwrap();
+        assert_eq!(l.matrix.get(0, 1), -10.0); // x-edge
+        assert_eq!(l.matrix.get(0, 3), -0.1); // y-edge
+    }
+
+    #[test]
+    fn high_contrast_range() {
+        let l = grid3d(4, 4, 4, Coeff::HighContrast(4.0), 7);
+        l.validate().unwrap();
+        let ws: Vec<f64> = l.edges().iter().map(|e| e.2).collect();
+        let lo = ws.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ws.iter().cloned().fold(0.0, f64::max);
+        assert!(hi / lo > 10.0, "expected contrast, got {lo}..{hi}");
+    }
+
+    #[test]
+    fn road_like_is_connected_and_sparse() {
+        let l = road_like(20, 20, 0.15, 3);
+        l.validate().unwrap();
+        let (_, ncomp) = l.components();
+        assert_eq!(ncomp, 1);
+        let avg_deg = 2.0 * l.num_edges() as f64 / l.n() as f64;
+        assert!(avg_deg < 3.0, "road networks must stay sparse, got {avg_deg}");
+    }
+
+    #[test]
+    fn pref_attach_heavy_tail() {
+        let l = pref_attach(500, 4, 1);
+        l.validate().unwrap();
+        let (_, ncomp) = l.components();
+        assert_eq!(ncomp, 1);
+        let max_deg = (0..l.n())
+            .map(|r| l.matrix.row_indices(r).len() - 1)
+            .max()
+            .unwrap();
+        assert!(max_deg > 20, "hub degree {max_deg} too small for BA graph");
+    }
+
+    #[test]
+    fn delaunay_has_diagonals() {
+        let l = delaunay_like(5, 5, 2);
+        l.validate().unwrap();
+        assert_eq!(l.num_edges(), 4 * 5 * 2 + 16);
+    }
+
+    #[test]
+    fn erdos_renyi_degree() {
+        let l = erdos_renyi(2000, 6.0, 5);
+        l.validate().unwrap();
+        let avg = 2.0 * l.num_edges() as f64 / l.n() as f64;
+        assert!((avg - 6.0).abs() < 0.6, "avg degree {avg}");
+    }
+
+    #[test]
+    fn special_graphs() {
+        path(10).validate().unwrap();
+        star(10).validate().unwrap();
+        complete(8).validate().unwrap();
+        assert_eq!(complete(8).num_edges(), 28);
+        let t = random_tree(64, 9);
+        t.validate().unwrap();
+        assert_eq!(t.num_edges(), 63);
+        let (_, nc) = t.components();
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = random_connected(100, 50, 42);
+        let b = random_connected(100, 50, 42);
+        assert_eq!(a.matrix, b.matrix);
+        let c = random_connected(100, 50, 43);
+        assert_ne!(a.matrix, c.matrix);
+    }
+}

@@ -1,0 +1,269 @@
+//! Graph Laplacian construction and SDD grounding.
+//!
+//! A weighted undirected graph `G = (V, E, w)` has Laplacian
+//! `L = Σ_{(i,j)∈E} w_ij (e_i−e_j)(e_i−e_j)ᵀ` (paper Def. 2.1): diagonal
+//! `ℓ_ii = Σ_j w_ij`, off-diagonal `ℓ_ij = −w_ij`. `L` is singular with
+//! nullspace `span{1}` per connected component.
+//!
+//! SPD SDD M-matrices (e.g. Poisson with Dirichlet boundary) are handled
+//! by the rchol grounding construction: extend to an `(N+1)`-vertex
+//! Laplacian whose extra "ground" vertex absorbs each row's diagonal
+//! excess; factor that, and use the leading `N×N` block as the
+//! preconditioner.
+
+use crate::sparse::{Coo, Csr};
+
+/// What kind of operator this Laplacian-like matrix is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LapKind {
+    /// A true graph Laplacian: zero row sums, singular (nullspace = 1 per
+    /// component).
+    Graph,
+    /// A grounded Laplacian: the leading block of a graph Laplacian with
+    /// its ground vertex row/column removed — SPD.
+    Grounded,
+}
+
+/// A Laplacian (or grounded-Laplacian) operator plus metadata.
+#[derive(Clone, Debug)]
+pub struct Laplacian {
+    /// The `N×N` matrix, both triangles stored.
+    pub matrix: Csr,
+    /// Singular graph Laplacian or SPD grounded block.
+    pub kind: LapKind,
+    /// Human-readable provenance (generator name + parameters).
+    pub name: String,
+}
+
+impl Laplacian {
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.matrix.nrows
+    }
+
+    /// Number of undirected edges (off-diagonal nnz / 2).
+    pub fn num_edges(&self) -> usize {
+        (self.matrix.nnz() - self.matrix.diag().iter().filter(|d| **d != 0.0).count()) / 2
+    }
+
+    /// Build a Laplacian from an undirected weighted edge list.
+    /// Duplicate edges are merged (weights summed); self-loops ignored.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)], name: &str) -> Laplacian {
+        let mut coo = Coo::with_capacity(n, n, edges.len() * 4);
+        let mut deg = vec![0.0f64; n];
+        for &(a, b, w) in edges {
+            if a == b {
+                continue;
+            }
+            debug_assert!(w > 0.0, "edge weights must be positive");
+            coo.push(a, b, -w);
+            coo.push(b, a, -w);
+            deg[a as usize] += w;
+            deg[b as usize] += w;
+        }
+        for (i, &d) in deg.iter().enumerate() {
+            if d != 0.0 {
+                coo.push(i as u32, i as u32, d);
+            }
+        }
+        Laplacian { matrix: coo.to_csr(), kind: LapKind::Graph, name: name.to_string() }
+    }
+
+    /// Check the Laplacian invariants: symmetry, non-positive
+    /// off-diagonals, and (for `Graph` kind) zero row sums.
+    pub fn validate(&self) -> Result<(), String> {
+        self.matrix.validate()?;
+        if !self.matrix.is_symmetric(1e-12) {
+            return Err("not symmetric".into());
+        }
+        for r in 0..self.n() {
+            let mut sum = 0.0;
+            for (&c, &v) in self.matrix.row_indices(r).iter().zip(self.matrix.row_data(r)) {
+                if (c as usize) != r && v > 1e-14 {
+                    return Err(format!("positive off-diagonal at ({r},{c})"));
+                }
+                sum += v;
+            }
+            match self.kind {
+                LapKind::Graph => {
+                    let scale = self.matrix.get(r, r).max(1.0);
+                    if sum.abs() > 1e-9 * scale {
+                        return Err(format!("row {r} sum {sum} not zero"));
+                    }
+                }
+                LapKind::Grounded => {
+                    if sum < -1e-9 {
+                        return Err(format!("row {r} sum {sum} negative (not SDD)"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the weighted edge list (lower triangle, `a < b` pairs).
+    pub fn edges(&self) -> Vec<(u32, u32, f64)> {
+        let mut out = Vec::with_capacity(self.matrix.nnz() / 2);
+        for r in 0..self.n() {
+            for (&c, &v) in self.matrix.row_indices(r).iter().zip(self.matrix.row_data(r)) {
+                if (c as usize) > r && v < 0.0 {
+                    out.push((r as u32, c, -v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Ground vertex extension (rchol): turn an SDD M-matrix `A` into the
+    /// `(N+1)`-vertex graph Laplacian whose last vertex absorbs each
+    /// row's excess `a_ii − Σ_{j≠i}|a_ij|`. Returns an exact `Graph`
+    /// Laplacian; factoring it and truncating to `N×N` preconditions `A`.
+    pub fn ground_sdd(a: &Csr, name: &str) -> Result<Laplacian, String> {
+        let n = a.nrows;
+        let g = n as u32; // ground vertex index
+        let mut edges: Vec<(u32, u32, f64)> = Vec::with_capacity(a.nnz() / 2 + n);
+        for r in 0..n {
+            let mut excess = 0.0;
+            for (&c, &v) in a.row_indices(r).iter().zip(a.row_data(r)) {
+                let c = c as usize;
+                if c == r {
+                    excess += v;
+                } else {
+                    if v > 1e-14 {
+                        return Err(format!(
+                            "positive off-diagonal at ({r},{c}); doubling reduction not applied"
+                        ));
+                    }
+                    excess += v; // v negative
+                    if c > r {
+                        edges.push((r as u32, c as u32, -v));
+                    }
+                }
+            }
+            if excess < -1e-9 {
+                return Err(format!("row {r} not diagonally dominant (excess {excess})"));
+            }
+            if excess > 1e-14 {
+                edges.push((r as u32, g, excess));
+            }
+        }
+        Ok(Laplacian::from_edges(n + 1, &edges, name))
+    }
+
+    /// The grounded SPD block: remove the **last** vertex's row/column.
+    /// Inverse of [`Laplacian::ground_sdd`] when the ground is vertex `N`.
+    pub fn drop_ground(&self) -> Laplacian {
+        let n = self.n() - 1;
+        let mut coo = Coo::with_capacity(n, n, self.matrix.nnz());
+        for r in 0..n {
+            for (&c, &v) in self.matrix.row_indices(r).iter().zip(self.matrix.row_data(r)) {
+                if (c as usize) < n {
+                    coo.push(r as u32, c, v);
+                }
+            }
+        }
+        Laplacian {
+            matrix: coo.to_csr(),
+            kind: LapKind::Grounded,
+            name: format!("{}/grounded", self.name),
+        }
+    }
+
+    /// Connected components (BFS); returns the component id of each
+    /// vertex and the number of components.
+    pub fn components(&self) -> (Vec<u32>, usize) {
+        let n = self.n();
+        let mut comp = vec![u32::MAX; n];
+        let mut ncomp = 0u32;
+        let mut stack = Vec::new();
+        for s in 0..n {
+            if comp[s] != u32::MAX {
+                continue;
+            }
+            comp[s] = ncomp;
+            stack.push(s);
+            while let Some(u) = stack.pop() {
+                for (&c, &v) in self.matrix.row_indices(u).iter().zip(self.matrix.row_data(u)) {
+                    let c = c as usize;
+                    if c != u && v < 0.0 && comp[c] == u32::MAX {
+                        comp[c] = ncomp;
+                        stack.push(c);
+                    }
+                }
+            }
+            ncomp += 1;
+        }
+        (comp, ncomp as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Laplacian {
+        Laplacian::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (0, 2, 3.0)], "tri")
+    }
+
+    #[test]
+    fn laplacian_row_sums_zero() {
+        let l = triangle();
+        l.validate().unwrap();
+        assert_eq!(l.matrix.get(0, 0), 4.0);
+        assert_eq!(l.matrix.get(1, 1), 3.0);
+        assert_eq!(l.matrix.get(2, 2), 5.0);
+        assert_eq!(l.matrix.get(0, 1), -1.0);
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let l = triangle();
+        let mut e = l.edges();
+        e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(e, vec![(0, 1, 1.0), (0, 2, 3.0), (1, 2, 2.0)]);
+    }
+
+    #[test]
+    fn duplicate_edges_merge() {
+        let l = Laplacian::from_edges(2, &[(0, 1, 1.0), (1, 0, 2.5)], "dup");
+        assert_eq!(l.matrix.get(0, 1), -3.5);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn ground_and_drop_roundtrip() {
+        // SPD tridiagonal SDD matrix: diag 2.5, offdiag -1.
+        let mut coo = Coo::new(4, 4);
+        for i in 0..4u32 {
+            coo.push(i, i, 2.5);
+        }
+        for i in 0..3u32 {
+            coo.push_sym(i, i + 1, -1.0);
+        }
+        let a = coo.to_csr();
+        let lap = Laplacian::ground_sdd(&a, "sdd").unwrap();
+        assert_eq!(lap.n(), 5);
+        lap.validate().unwrap();
+        let back = lap.drop_ground();
+        assert_eq!(back.matrix.to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn ground_rejects_non_sdd() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 0.5);
+        coo.push(1, 1, 0.5);
+        coo.push_sym(0, 1, -1.0);
+        assert!(Laplacian::ground_sdd(&coo.to_csr(), "bad").is_err());
+    }
+
+    #[test]
+    fn components_counts() {
+        let l = Laplacian::from_edges(5, &[(0, 1, 1.0), (2, 3, 1.0)], "forest");
+        let (comp, n) = l.components();
+        assert_eq!(n, 3); // {0,1}, {2,3}, {4}
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Graph / Laplacian substrate: Laplacian construction and validation,
+//! SDD→Laplacian grounding, synthetic workload generators mirroring the
+//! paper's matrix suite (Table 1), and the named benchmark suite.
+
+pub mod doubling;
+pub mod generators;
+pub mod laplacian;
+pub mod suite;
+
+pub use laplacian::{Laplacian, LapKind};

@@ -1,0 +1,209 @@
+//! The named benchmark suite — scaled analogues of the paper's Table 1.
+//!
+//! Every experiment driver (Tables 2–3, Figures 3–4) iterates this suite
+//! so rows line up with the paper's. `Scale` trades fidelity for runtime;
+//! `Medium` is the default for benches, `Tiny` for unit tests.
+
+use super::generators::{self, Coeff};
+use super::laplacian::Laplacian;
+
+/// Problem size multiplier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// ~1–3k vertices — unit tests.
+    Tiny,
+    /// ~10–30k vertices — integration tests / quick repro.
+    Small,
+    /// ~60–260k vertices — the bench default.
+    Medium,
+}
+
+impl Scale {
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "tiny" => Some(Scale::Tiny),
+            "small" => Some(Scale::Small),
+            "medium" => Some(Scale::Medium),
+            _ => None,
+        }
+    }
+}
+
+/// One suite entry: the paper's matrix it stands in for, and a generator.
+pub struct SuiteEntry {
+    /// Identifier used in reports (matches the paper's matrix name).
+    pub name: &'static str,
+    /// What class of problem this is (mesh / road / social / …).
+    pub class: &'static str,
+    /// Build the scaled instance.
+    pub build: fn(Scale) -> Laplacian,
+}
+
+fn dims(scale: Scale, tiny: usize, small: usize, medium: usize) -> usize {
+    match scale {
+        Scale::Tiny => tiny,
+        Scale::Small => small,
+        Scale::Medium => medium,
+    }
+}
+
+/// The full suite, in the paper's Table 1 order.
+pub const SUITE: &[SuiteEntry] = &[
+    SuiteEntry {
+        name: "parabolic_fem",
+        class: "2D mesh",
+        build: |s| {
+            let d = dims(s, 40, 130, 360);
+            generators::grid2d(d, d, Coeff::Uniform, 101)
+        },
+    },
+    SuiteEntry {
+        name: "ecology1",
+        class: "2D mesh",
+        build: |s| {
+            let d = dims(s, 45, 160, 420);
+            generators::grid2d(d, d, Coeff::Uniform, 102)
+        },
+    },
+    SuiteEntry {
+        name: "apache2",
+        class: "3D mesh",
+        build: |s| {
+            let d = dims(s, 12, 28, 62);
+            generators::grid3d(d, d, d, Coeff::Uniform, 103)
+        },
+    },
+    SuiteEntry {
+        name: "G3_circuit",
+        class: "circuit",
+        build: |s| {
+            let d = dims(s, 45, 170, 450);
+            generators::grid2d(d, d, Coeff::HighContrast(3.0), 104)
+        },
+    },
+    SuiteEntry {
+        name: "GAP-road",
+        class: "road",
+        build: |s| {
+            let d = dims(s, 50, 180, 510);
+            generators::road_like(d, d, 0.15, 105)
+        },
+    },
+    SuiteEntry {
+        name: "com-LiveJournal",
+        class: "social",
+        build: |s| {
+            let n = dims(s, 1200, 9000, 36000);
+            generators::pref_attach(n, 8, 106)
+        },
+    },
+    SuiteEntry {
+        name: "delaunay_n24",
+        class: "triangulation",
+        build: |s| {
+            let d = dims(s, 40, 150, 400);
+            generators::delaunay_like(d, d, 107)
+        },
+    },
+    SuiteEntry {
+        name: "venturiLevel3",
+        class: "2D mesh",
+        build: |s| {
+            let d = dims(s, 40, 140, 380);
+            generators::grid2d(d, d, Coeff::Anisotropic(1.0, 4.0, 1.0), 108)
+        },
+    },
+    SuiteEntry {
+        name: "europe_osm",
+        class: "road",
+        build: |s| {
+            let d = dims(s, 55, 190, 520);
+            generators::road_like(d, d, 0.08, 109)
+        },
+    },
+    SuiteEntry {
+        name: "belgium_osm",
+        class: "road",
+        build: |s| {
+            let d = dims(s, 35, 110, 300);
+            generators::road_like(d, d, 0.10, 110)
+        },
+    },
+    SuiteEntry {
+        name: "uniform_3d_poisson",
+        class: "3D poisson",
+        build: |s| {
+            let d = dims(s, 12, 30, 64);
+            generators::grid3d(d, d, d, Coeff::Uniform, 111)
+        },
+    },
+    SuiteEntry {
+        name: "aniso_3d_poisson",
+        class: "3D poisson",
+        build: |s| {
+            let d = dims(s, 12, 30, 64);
+            generators::grid3d(d, d, d, Coeff::Anisotropic(1.0, 1.0, 25.0), 112)
+        },
+    },
+    SuiteEntry {
+        name: "contrast_3d_poisson",
+        class: "3D poisson",
+        build: |s| {
+            let d = dims(s, 12, 30, 64);
+            generators::grid3d(d, d, d, Coeff::HighContrast(4.0), 113)
+        },
+    },
+    SuiteEntry {
+        name: "spe16m",
+        class: "reservoir",
+        build: |s| {
+            let d = dims(s, 12, 30, 60);
+            // SPE10-like: strong vertical anisotropy + extreme contrast is
+            // approximated by layering contrast over anisotropy: generate
+            // contrast field, then scale z-edges down.
+            generators::grid3d(d, d, d / 2 + 1, Coeff::HighContrast(5.0), 114)
+        },
+    },
+];
+
+/// Look up a suite entry by name.
+pub fn by_name(name: &str) -> Option<&'static SuiteEntry> {
+    SUITE.iter().find(|e| e.name == name)
+}
+
+/// Names of all suite entries.
+pub fn names() -> Vec<&'static str> {
+    SUITE.iter().map(|e| e.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_entries_build_tiny_and_validate() {
+        for e in SUITE {
+            let l = (e.build)(Scale::Tiny);
+            l.validate().unwrap_or_else(|err| panic!("{}: {err}", e.name));
+            assert!(l.n() > 500, "{} too small: {}", e.name, l.n());
+            let (_, ncomp) = l.components();
+            assert_eq!(ncomp, 1, "{} must be connected", e.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("GAP-road").is_some());
+        assert!(by_name("nonexistent").is_none());
+        assert_eq!(names().len(), SUITE.len());
+    }
+
+    #[test]
+    fn scales_are_monotone() {
+        let e = by_name("apache2").unwrap();
+        let t = (e.build)(Scale::Tiny).n();
+        let s = (e.build)(Scale::Small).n();
+        assert!(t < s);
+    }
+}

@@ -1,0 +1,43 @@
+//! # ParAC — Parallel Randomized Approximate Cholesky Preconditioners
+//!
+//! Reproduction of *"Parallel GPU-Accelerated Randomized Construction of
+//! Approximate Cholesky Preconditioners"* (Liang et al., CS.DC 2025).
+//!
+//! The library constructs an incomplete `G D Gᵀ` factorization of a graph
+//! Laplacian (or SDD matrix) by randomized clique sub-sampling during
+//! Gaussian elimination (the AC algorithm of Kyng–Sachdeva /
+//! Gao–Kyng–Spielman), parallelized with **dynamic dependency tracking**:
+//! no nested dissection, no symbolic factorization — ready vertices are
+//! discovered on the fly from per-vertex dependency counters over the
+//! evolving multigraph.
+//!
+//! Two parallel engines are provided, mirroring the paper:
+//! * [`factor::cpu`] — left-looking CPU engine (linked-list fill-in
+//!   aggregation, atomic-exchange insertion, bump-allocated arena).
+//! * [`factor::gpusim`] — right-looking engine modeling the paper's
+//!   persistent-kernel GPU design (linear-probing slot-state workspace,
+//!   `hash(v) + fill_count(v)` insertion, random-permutation hashing,
+//!   block-level sort/scan primitives).
+//!
+//! Alongside the core contribution the crate ships every substrate the
+//! paper's evaluation depends on: sparse kernels, graph generators
+//! mirroring the paper's matrix suite, orderings (AMD, nnz-sort, random,
+//! RCM), elimination-tree analytics, PCG with level-scheduled triangular
+//! solves, and baseline preconditioners (IC(0), ICT, smoothed-aggregation
+//! AMG, Jacobi). A PJRT runtime loads AOT-compiled JAX/Pallas artifacts
+//! for the L1/L2 layers (see `python/compile/`).
+
+pub mod cli;
+pub mod coordinator;
+pub mod etree;
+pub mod factor;
+pub mod gpusim;
+pub mod graph;
+pub mod ordering;
+pub mod precond;
+pub mod rng;
+pub mod runtime;
+pub mod solve;
+pub mod sparse;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,168 @@
+//! `parac` CLI — factor, solve, and reproduce the paper's experiments.
+
+use parac::cli::args::Args;
+use parac::coordinator::pipeline::{self, Method};
+use parac::coordinator::report::{sci, secs, Table};
+use parac::factor::{Engine, ParacOptions};
+use parac::graph::suite::{self, Scale};
+use parac::ordering::Ordering;
+use parac::solve::pcg::PcgOptions;
+use parac::util::fmt_count;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "factor" => factor_cmd(&args),
+        "solve" => solve_cmd(&args),
+        "suite" => suite_cmd(&args),
+        "repro" => repro_cmd(&args),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!(
+        "parac — parallel randomized approximate Cholesky preconditioners
+
+USAGE:
+  parac info                               PJRT platform + artifact inventory
+  parac suite [--scale tiny|small|medium]  list the benchmark suite
+  parac factor --matrix NAME [--engine seq|cpu[:T]|gpusim[:B]]
+               [--ordering amd|nnz|random|natural|rcm] [--seed S]
+  parac solve  --matrix NAME [--method parac|ichol0|icholt|amg|jacobi]
+               [--tol 1e-8] [--max-iter 1000] [engine/ordering flags]
+  parac repro table2|table3|fig3|fig4 [--scale small|medium] [--threads T]
+"
+    );
+}
+
+fn scale(args: &Args) -> Scale {
+    Scale::parse(args.get("scale", "small")).unwrap_or(Scale::Small)
+}
+
+fn build_matrix(args: &Args) -> parac::graph::Laplacian {
+    let name = args.get("matrix", "uniform_3d_poisson");
+    match suite::by_name(name) {
+        Some(e) => (e.build)(scale(args)),
+        None => {
+            eprintln!("unknown matrix {name}; use `parac suite` to list");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parac_opts(args: &Args) -> ParacOptions {
+    ParacOptions {
+        ordering: Ordering::parse(args.get("ordering", "nnz")).unwrap_or(Ordering::NnzSort),
+        engine: Engine::parse(args.get("engine", "cpu")).unwrap_or(Engine::Cpu { threads: 0 }),
+        seed: args.get_parse("seed", 0x9A9Au64),
+        ..Default::default()
+    }
+}
+
+fn info(_args: &Args) {
+    match parac::runtime::Artifacts::open_default() {
+        Ok(arts) => {
+            println!("PJRT platform: {}", arts.platform());
+            println!("artifacts: {:?}", arts.available());
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    println!("default threads: {}", parac::util::default_threads());
+}
+
+fn suite_cmd(args: &Args) {
+    let sc = scale(args);
+    let mut t = Table::new(&["matrix", "class", "columns", "nonzeros"]);
+    for e in suite::SUITE {
+        let l = (e.build)(sc);
+        t.row(vec![
+            e.name.into(),
+            e.class.into(),
+            fmt_count(l.n()),
+            fmt_count(l.matrix.nnz()),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn factor_cmd(args: &Args) {
+    let lap = build_matrix(args);
+    let opts = parac_opts(args);
+    let (f, dt) = parac::util::timed(|| parac::factor::factorize(&lap, &opts).unwrap());
+    println!(
+        "{}: n={} nnz={} engine={} ordering={}",
+        lap.name,
+        fmt_count(lap.n()),
+        fmt_count(lap.matrix.nnz()),
+        opts.engine.name(),
+        opts.ordering.name()
+    );
+    println!(
+        "factor: {:.3}s  nnz(G)={}  fill-ratio={:.2}  {}",
+        dt,
+        fmt_count(f.nnz()),
+        f.fill_ratio(lap.matrix.nnz()),
+        f.stats.summary()
+    );
+    let rep = parac::etree::report(&lap.matrix, &f.g);
+    println!(
+        "etree: classical={} actual={} critical-path={}",
+        rep.classical_height, rep.actual_height, rep.critical_path
+    );
+}
+
+fn solve_cmd(args: &Args) {
+    let lap = build_matrix(args);
+    let pcg_opts = PcgOptions {
+        tol: args.get_parse("tol", 1e-8f64),
+        max_iter: args.get_parse("max-iter", 1000usize),
+        ..Default::default()
+    };
+    let method = match args.get("method", "parac") {
+        "parac" => Method::Parac { opts: parac_opts(args), level_threads: 0 },
+        "ichol0" => Method::Ichol0,
+        "icholt" => Method::IcholT {
+            droptol: Some(args.get_parse("droptol", 1e-3f64)),
+            fill_target: None,
+        },
+        "amg" => Method::Amg,
+        "jacobi" => Method::Jacobi,
+        other => {
+            eprintln!("unknown method {other}");
+            std::process::exit(2);
+        }
+    };
+    let r = pipeline::run(&lap, &method, &pcg_opts, args.get_parse("rhs-seed", 7u64));
+    let mut t = Table::new(&["method", "setup (s)", "solve (s)", "iters", "rel residual"]);
+    t.row(vec![
+        r.method.into(),
+        secs(r.setup_secs),
+        secs(r.solve_secs),
+        r.iters.to_string(),
+        sci(r.rel_residual),
+    ]);
+    print!("{}", t.render());
+    if !r.converged {
+        println!("(did not converge)");
+    }
+}
+
+fn repro_cmd(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let sc = scale(args);
+    let threads = args.get_parse("threads", 0usize);
+    match which {
+        "table2" => parac::coordinator::repro::table2(sc, threads),
+        "table3" => parac::coordinator::repro::table3(sc, threads),
+        "fig3" => parac::coordinator::repro::fig3(sc, threads),
+        "fig4" => parac::coordinator::repro::fig4(sc, threads),
+        "hash" => parac::coordinator::repro::hash_ablation(sc, threads),
+        _ => {
+            eprintln!("usage: parac repro table2|table3|fig3|fig4|hash");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Elimination orderings.
+//!
+//! The paper evaluates three orderings (§6): **AMD** (best on the CPU
+//! engine — locality), **nnz-sort** (degree-sort with random tie-break;
+//! best on the GPU engine — short critical paths), and **random**. RCM
+//! is included as an extra locality baseline, and `Natural` as control.
+//!
+//! A permutation here is a map `perm[old] = new`; applying it relabels
+//! vertex `old` as `new` before factorization (`L' = P L Pᵀ`).
+
+pub mod amd;
+pub mod nnz_sort;
+pub mod perm;
+pub mod random;
+pub mod rcm;
+
+use crate::graph::Laplacian;
+use crate::rng::Rng;
+
+/// Ordering strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ordering {
+    /// Identity (input order).
+    Natural,
+    /// Uniformly random permutation.
+    Random,
+    /// Sort by initial degree ascending, random tie-break (the paper's
+    /// GPU default).
+    NnzSort,
+    /// Approximate minimum degree (the paper's CPU default).
+    Amd,
+    /// Reverse Cuthill–McKee (bandwidth/locality baseline).
+    Rcm,
+}
+
+impl Ordering {
+    /// Compute `perm[old] = new` for this strategy.
+    pub fn compute(&self, lap: &Laplacian, seed: u64) -> Vec<u32> {
+        match self {
+            Ordering::Natural => (0..lap.n() as u32).collect(),
+            Ordering::Random => Rng::new(seed ^ 0x5EED_0DE5).permutation(lap.n()),
+            Ordering::NnzSort => nnz_sort::nnz_sort(lap, seed),
+            Ordering::Amd => amd::amd(&lap.matrix),
+            Ordering::Rcm => rcm::rcm(&lap.matrix),
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Ordering> {
+        match s.to_ascii_lowercase().as_str() {
+            "natural" => Some(Ordering::Natural),
+            "random" => Some(Ordering::Random),
+            "nnz" | "nnz-sort" | "nnz_sort" => Some(Ordering::NnzSort),
+            "amd" => Some(Ordering::Amd),
+            "rcm" => Some(Ordering::Rcm),
+            _ => None,
+        }
+    }
+
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ordering::Natural => "natural",
+            Ordering::Random => "random",
+            Ordering::NnzSort => "nnz-sort",
+            Ordering::Amd => "AMD",
+            Ordering::Rcm => "RCM",
+        }
+    }
+
+    /// The three orderings the paper benchmarks.
+    pub fn paper_set() -> [Ordering; 3] {
+        [Ordering::Amd, Ordering::NnzSort, Ordering::Random]
+    }
+}

@@ -1,0 +1,93 @@
+//! Permutation utilities.
+//!
+//! Convention: `perm[old] = new` (a relabeling map). `inverse(perm)[new]
+//! = old` gives the elimination sequence: the vertex eliminated at step
+//! `k` is `inverse(perm)[k]`.
+
+/// Invert a permutation.
+pub fn inverse(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        inv[new as usize] = old as u32;
+    }
+    inv
+}
+
+/// Compose: `(a ∘ b)[i] = a[b[i]]` — apply `b` first, then `a`.
+pub fn compose(a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len());
+    b.iter().map(|&i| a[i as usize]).collect()
+}
+
+/// Check that `perm` is a bijection on `0..n`.
+pub fn validate(perm: &[u32]) -> Result<(), String> {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    for (i, &p) in perm.iter().enumerate() {
+        let p = p as usize;
+        if p >= n {
+            return Err(format!("perm[{i}] = {p} out of range"));
+        }
+        if seen[p] {
+            return Err(format!("perm[{i}] = {p} duplicated"));
+        }
+        seen[p] = true;
+    }
+    Ok(())
+}
+
+/// Apply to a vector: `out[perm[i]] = x[i]`.
+pub fn apply_vec(perm: &[u32], x: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; x.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        out[p as usize] = x[i];
+    }
+    out
+}
+
+/// Undo on a vector: `out[i] = x[perm[i]]`.
+pub fn unapply_vec(perm: &[u32], x: &[f64]) -> Vec<f64> {
+    perm.iter().map(|&p| x[p as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::forall_rngs;
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        forall_rngs(32, |rng| {
+            let n = 1 + rng.below(200);
+            let p = rng.permutation(n);
+            let inv = inverse(&p);
+            let id = compose(&p, &inv);
+            for (i, &v) in id.iter().enumerate() {
+                if v as usize != i {
+                    return Err(format!("compose(p, inv)[{i}] = {v}"));
+                }
+            }
+            validate(&p).map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vec_apply_roundtrip() {
+        forall_rngs(16, |rng| {
+            let n = 1 + rng.below(100);
+            let p = rng.permutation(n);
+            let x: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+            let y = apply_vec(&p, &x);
+            let back = unapply_vec(&p, &y);
+            crate::testing::prop::assert_close(&x, &back, 0.0, "roundtrip")
+        });
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(validate(&[0, 0]).is_err());
+        assert!(validate(&[0, 5]).is_err());
+        assert!(validate(&[1, 0]).is_ok());
+    }
+}

@@ -1,0 +1,349 @@
+//! Smoothed-aggregation algebraic multigrid — the HyPre / AmgX stand-in
+//! of Tables 2–3 (see DESIGN.md substitutions). Strong multilevel
+//! baseline: wins on PDE meshes, degrades on irregular graph Laplacians,
+//! which is exactly the behaviour the paper's comparison turns on.
+//!
+//! Setup: strength filtering → greedy aggregation → piecewise-constant
+//! tentative prolongator → Jacobi smoothing of `P` → Galerkin coarse
+//! operator `Pᵀ A P`, recursively until the coarse grid is tiny. Apply:
+//! one V-cycle (weighted-Jacobi pre/post smoothing, dense pseudo-inverse
+//! Cholesky on the coarsest level).
+
+use super::Preconditioner;
+use crate::sparse::ops::{dense_cholesky, dense_cholesky_solve, rap, spgemm};
+use crate::sparse::{Coo, Csr};
+
+/// One multigrid level.
+struct Level {
+    a: Csr,
+    p: Csr,
+    inv_diag: Vec<f64>,
+    /// Weighted-Jacobi relaxation factor.
+    omega: f64,
+}
+
+/// AMG setup options.
+#[derive(Clone, Debug)]
+pub struct AmgOptions {
+    /// Strength threshold θ: keep `|a_ij| ≥ θ·√(a_ii·a_jj)`.
+    pub theta: f64,
+    /// Stop coarsening below this size.
+    pub coarse_size: usize,
+    /// Maximum number of levels.
+    pub max_levels: usize,
+    /// Pre/post smoothing sweeps.
+    pub sweeps: usize,
+}
+
+impl Default for AmgOptions {
+    fn default() -> Self {
+        AmgOptions { theta: 0.08, coarse_size: 64, max_levels: 12, sweeps: 1 }
+    }
+}
+
+/// Smoothed-aggregation AMG V-cycle preconditioner.
+pub struct AmgPrecond {
+    levels: Vec<Level>,
+    coarse_chol: Vec<f64>,
+    coarse_n: usize,
+    sweeps: usize,
+    /// Total operator complexity Σ nnz(A_l) / nnz(A_0).
+    pub operator_complexity: f64,
+    /// Setup wall-clock seconds.
+    pub setup_secs: f64,
+}
+
+impl AmgPrecond {
+    /// Run the setup phase.
+    pub fn new(a: &Csr, opts: &AmgOptions) -> AmgPrecond {
+        let timer = crate::util::Timer::start();
+        let mut levels: Vec<Level> = Vec::new();
+        let mut cur = a.clone();
+        let nnz0 = a.nnz() as f64;
+        let mut nnz_total = a.nnz() as f64;
+        while cur.nrows > opts.coarse_size && levels.len() + 1 < opts.max_levels {
+            let agg = aggregate(&cur, opts.theta);
+            let ncoarse = agg.iter().copied().max().map_or(0, |m| m as usize + 1);
+            if ncoarse == 0 || ncoarse as f64 > 0.9 * cur.nrows as f64 {
+                break; // coarsening stalled
+            }
+            let t = tentative_prolongator(&agg, ncoarse);
+            let (p, omega, inv_diag) = smooth_prolongator(&cur, &t);
+            let coarse = rap(&p, &cur).drop_zeros(1e-14);
+            nnz_total += coarse.nnz() as f64;
+            levels.push(Level { a: cur, p, inv_diag, omega });
+            cur = coarse;
+        }
+        // Coarsest: dense Cholesky with zero-pivot pinning.
+        let n = cur.nrows;
+        let mut dense = vec![0.0f64; n * n];
+        for r in 0..n {
+            for (&c, &v) in cur.row_indices(r).iter().zip(cur.row_data(r)) {
+                dense[r * n + c as usize] += v;
+            }
+        }
+        dense_cholesky(&mut dense, n);
+        AmgPrecond {
+            levels,
+            coarse_chol: dense,
+            coarse_n: n,
+            sweeps: opts.sweeps,
+            operator_complexity: nnz_total / nnz0,
+            setup_secs: timer.secs(),
+        }
+    }
+
+    /// Number of levels (including the coarsest).
+    pub fn num_levels(&self) -> usize {
+        self.levels.len() + 1
+    }
+
+    fn vcycle(&self, lvl: usize, b: &[f64]) -> Vec<f64> {
+        if lvl == self.levels.len() {
+            return dense_cholesky_solve(&self.coarse_chol, self.coarse_n, b);
+        }
+        let l = &self.levels[lvl];
+        let n = l.a.nrows;
+        // Pre-smooth (weighted Jacobi from zero initial guess).
+        let mut x = vec![0.0f64; n];
+        for s in 0..self.sweeps {
+            if s == 0 {
+                for i in 0..n {
+                    x[i] = l.omega * l.inv_diag[i] * b[i];
+                }
+            } else {
+                let ax = l.a.mul_vec(&x);
+                for i in 0..n {
+                    x[i] += l.omega * l.inv_diag[i] * (b[i] - ax[i]);
+                }
+            }
+        }
+        // Coarse correction.
+        let ax = l.a.mul_vec(&x);
+        let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let rc = mul_transpose_vec(&l.p, &r);
+        let xc = self.vcycle(lvl + 1, &rc);
+        let corr = l.p.mul_vec(&xc);
+        for (xi, ci) in x.iter_mut().zip(&corr) {
+            *xi += ci;
+        }
+        // Post-smooth.
+        for _ in 0..self.sweeps {
+            let ax = l.a.mul_vec(&x);
+            for i in 0..n {
+                x[i] += l.omega * l.inv_diag[i] * (b[i] - ax[i]);
+            }
+        }
+        x
+    }
+}
+
+impl Preconditioner for AmgPrecond {
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        self.vcycle(0, r)
+    }
+    fn name(&self) -> &'static str {
+        "amg"
+    }
+    fn nnz(&self) -> usize {
+        self.levels.iter().map(|l| l.a.nnz() + l.p.nnz()).sum::<usize>()
+            + self.coarse_n * self.coarse_n
+    }
+}
+
+/// `y = Pᵀ x` without materializing the transpose.
+fn mul_transpose_vec(p: &Csr, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; p.ncols];
+    for r in 0..p.nrows {
+        let xr = x[r];
+        if xr == 0.0 {
+            continue;
+        }
+        for (&c, &v) in p.row_indices(r).iter().zip(p.row_data(r)) {
+            y[c as usize] += v * xr;
+        }
+    }
+    y
+}
+
+/// Greedy strength-based aggregation. Returns `agg[i]` = aggregate id
+/// (every vertex assigned).
+fn aggregate(a: &Csr, theta: f64) -> Vec<u32> {
+    let n = a.nrows;
+    let diag = a.diag();
+    let strong = |i: usize, j: usize, v: f64| -> bool {
+        i != j && v.abs() >= theta * (diag[i].abs() * diag[j].abs()).sqrt()
+    };
+    let mut agg = vec![u32::MAX; n];
+    let mut next_id = 0u32;
+    // Pass 1: seed aggregates around untouched vertices.
+    for i in 0..n {
+        if agg[i] != u32::MAX {
+            continue;
+        }
+        let nbrs: Vec<usize> = a
+            .row_indices(i)
+            .iter()
+            .zip(a.row_data(i))
+            .filter(|(&c, &v)| strong(i, c as usize, v))
+            .map(|(&c, _)| c as usize)
+            .collect();
+        if nbrs.iter().all(|&j| agg[j] == u32::MAX) {
+            agg[i] = next_id;
+            for &j in &nbrs {
+                agg[j] = next_id;
+            }
+            next_id += 1;
+        }
+    }
+    // Pass 2: attach stragglers to their most strongly connected
+    // aggregate.
+    for i in 0..n {
+        if agg[i] != u32::MAX {
+            continue;
+        }
+        let mut best = (0.0f64, u32::MAX);
+        for (&c, &v) in a.row_indices(i).iter().zip(a.row_data(i)) {
+            let j = c as usize;
+            if j != i && agg[j] != u32::MAX && v.abs() > best.0 {
+                best = (v.abs(), agg[j]);
+            }
+        }
+        if best.1 != u32::MAX {
+            agg[i] = best.1;
+        } else {
+            agg[i] = next_id; // isolated singleton
+            next_id += 1;
+        }
+    }
+    agg
+}
+
+/// Piecewise-constant tentative prolongator, columns normalized.
+fn tentative_prolongator(agg: &[u32], ncoarse: usize) -> Csr {
+    let n = agg.len();
+    let mut sizes = vec![0usize; ncoarse];
+    for &a in agg {
+        sizes[a as usize] += 1;
+    }
+    let mut coo = Coo::with_capacity(n, ncoarse, n);
+    for (i, &a) in agg.iter().enumerate() {
+        coo.push(i as u32, a, 1.0 / (sizes[a as usize] as f64).sqrt());
+    }
+    coo.to_csr()
+}
+
+/// Jacobi-smoothed prolongator `P = (I − ω D⁻¹ A) T`; also returns the
+/// level's `ω` and `D⁻¹` for the V-cycle smoother.
+fn smooth_prolongator(a: &Csr, t: &Csr) -> (Csr, f64, Vec<f64>) {
+    let n = a.nrows;
+    let inv_diag: Vec<f64> =
+        a.diag().into_iter().map(|d| if d > 0.0 { 1.0 / d } else { 0.0 }).collect();
+    // Spectral radius of D⁻¹A by power iteration.
+    let mut v: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 + 0.1).collect();
+    let mut rho = 1.0f64;
+    for _ in 0..10 {
+        let av = a.mul_vec(&v);
+        let mut w: Vec<f64> = av.iter().zip(&inv_diag).map(|(x, d)| x * d).collect();
+        let nrm = crate::sparse::ops::nrm2(&w).max(1e-30);
+        rho = nrm / crate::sparse::ops::nrm2(&v).max(1e-30);
+        for wi in w.iter_mut() {
+            *wi /= nrm;
+        }
+        v = w;
+    }
+    let omega_p = 4.0 / (3.0 * rho.max(1e-12));
+    // P = T − ω D⁻¹ A T.
+    let at = spgemm(a, t);
+    let mut scaled = at;
+    for r in 0..n {
+        let d = inv_diag[r] * omega_p;
+        for idx in scaled.indptr[r]..scaled.indptr[r + 1] {
+            scaled.data[idx] *= -d;
+        }
+    }
+    let p = add_csr(t, &scaled).drop_zeros(1e-14);
+    // Jacobi relaxation weight for the V-cycle.
+    let omega = 2.0 / (3.0 * rho.max(1e-12)) * 2.0; // ≈ 4/(3ρ) conservative
+    (p, omega.min(1.0), inv_diag)
+}
+
+/// Sparse matrix addition.
+fn add_csr(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!((a.nrows, a.ncols), (b.nrows, b.ncols));
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz() + b.nnz());
+    for r in 0..a.nrows {
+        for (&c, &v) in a.row_indices(r).iter().zip(a.row_data(r)) {
+            coo.push(r as u32, c, v);
+        }
+        for (&c, &v) in b.row_indices(r).iter().zip(b.row_data(r)) {
+            coo.push(r as u32, c, v);
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::precond::IdentityPrecond;
+    use crate::solve::pcg;
+
+    #[test]
+    fn builds_hierarchy_on_grid() {
+        let l = generators::grid2d(32, 32, generators::Coeff::Uniform, 0);
+        let amg = AmgPrecond::new(&l.matrix, &AmgOptions::default());
+        assert!(amg.num_levels() >= 2, "expected real coarsening");
+        assert!(amg.operator_complexity < 3.0, "complexity {}", amg.operator_complexity);
+    }
+
+    #[test]
+    fn amg_crushes_iteration_count_on_mesh() {
+        let l = generators::grid2d(32, 32, generators::Coeff::Uniform, 0);
+        let amg = AmgPrecond::new(&l.matrix, &AmgOptions::default());
+        let b = pcg::random_rhs(&l, 1);
+        let o = pcg::PcgOptions { max_iter: 2000, ..Default::default() };
+        let with = pcg::solve(&l.matrix, &b, &amg, &o);
+        let without = pcg::solve(&l.matrix, &b, &IdentityPrecond, &o);
+        assert!(with.converged, "rel={}", with.rel_residual);
+        assert!(
+            with.iters * 3 < without.iters.max(3),
+            "amg {} vs plain {}",
+            with.iters,
+            without.iters
+        );
+    }
+
+    #[test]
+    fn handles_3d_anisotropy() {
+        let l = generators::grid3d(10, 10, 10, generators::Coeff::Anisotropic(1.0, 1.0, 20.0), 0);
+        let amg = AmgPrecond::new(&l.matrix, &AmgOptions::default());
+        let b = pcg::random_rhs(&l, 2);
+        let o = pcg::PcgOptions { max_iter: 2000, ..Default::default() };
+        let out = pcg::solve(&l.matrix, &b, &amg, &o);
+        assert!(out.converged);
+    }
+
+    #[test]
+    fn aggregation_covers_all_vertices() {
+        let l = generators::road_like(15, 15, 0.1, 3);
+        let agg = aggregate(&l.matrix, 0.08);
+        assert!(agg.iter().all(|&a| a != u32::MAX));
+    }
+
+    #[test]
+    fn tentative_prolongator_partition_of_unity() {
+        let agg = vec![0u32, 0, 1, 1, 1];
+        let t = tentative_prolongator(&agg, 2);
+        // Columns have unit 2-norm.
+        for c in 0..2 {
+            let mut s = 0.0;
+            for r in 0..5 {
+                let v = t.get(r, c);
+                s += v * v;
+            }
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+}

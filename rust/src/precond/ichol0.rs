@@ -1,0 +1,192 @@
+//! Zero fill-in incomplete Cholesky — IC(0), the cuSPARSE `csric02`
+//! stand-in of Table 3: cheapest construction, weakest preconditioning.
+//!
+//! Computes `L` with exactly the sparsity of the lower triangle of `A`
+//! (including the diagonal). For singular Laplacians a tiny diagonal
+//! shift is applied automatically on pivot breakdown, mirroring the
+//! usual shifted-IC practice.
+
+use super::Preconditioner;
+use crate::sparse::Csr;
+
+/// IC(0) factor `A ≈ L Lᵀ` with `pattern(L) = pattern(tril(A))`.
+pub struct Ichol0 {
+    /// Lower-triangular factor rows (CSR, diagonal last entry per row).
+    l: Csr,
+    /// Diagonal shift applied (0.0 if none was needed).
+    pub shift: f64,
+}
+
+impl Ichol0 {
+    /// Build IC(0); retries with growing diagonal shifts on breakdown.
+    pub fn new(a: &Csr) -> Ichol0 {
+        let base: f64 = {
+            let d = a.diag();
+            d.iter().cloned().fold(0.0, f64::max)
+        };
+        let mut shift = 0.0;
+        loop {
+            match Self::attempt(a, shift) {
+                Some(l) => return Ichol0 { l, shift },
+                None => {
+                    shift = if shift == 0.0 { 1e-8 * base.max(1.0) } else { shift * 10.0 };
+                    assert!(
+                        shift < base.max(1.0),
+                        "IC(0) breakdown not recoverable (shift {shift})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// One construction attempt with `A + shift·I`.
+    fn attempt(a: &Csr, shift: f64) -> Option<Csr> {
+        let n = a.nrows;
+        let lower = a.tril(false);
+        let mut l = lower.clone();
+        // Row-by-row up-looking IC(0) on the fixed pattern:
+        // l_ij = (a_ij − Σ_{k<j} l_ik l_jk) / l_jj  for j < i in pattern,
+        // l_ii = sqrt(a_ii + shift − Σ_{k<i} l_ik²).
+        for i in 0..n {
+            let (lo, hi) = (l.indptr[i], l.indptr[i + 1]);
+            for idx in lo..hi {
+                let j = l.indices[idx] as usize;
+                let mut sum = l.data[idx] + if i == j { shift } else { 0.0 };
+                // Sparse dot of rows i and j over columns < j.
+                let (ilo, jlo) = (l.indptr[i], l.indptr[j]);
+                let (mut p, mut q) = (ilo, jlo);
+                let iend = idx; // entries of row i with col < j
+                let jend = l.indptr[j + 1] - 1; // skip diag of row j
+                while p < iend && q < jend {
+                    let cp = l.indices[p];
+                    let cq = l.indices[q];
+                    match cp.cmp(&cq) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            sum -= l.data[p] * l.data[q];
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        // Singular tail pivot (last vertex of a connected
+                        // Laplacian): pin if negligible, else fail.
+                        let scale = l.data[idx].abs().max(1.0);
+                        if sum.abs() <= 1e-10 * scale {
+                            l.data[idx] = 0.0;
+                            continue;
+                        }
+                        return None;
+                    }
+                    l.data[idx] = sum.sqrt();
+                } else {
+                    let djj = l.data[l.indptr[j + 1] - 1];
+                    l.data[idx] = if djj > 0.0 { sum / djj } else { 0.0 };
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Access the factor (testing).
+    pub fn factor(&self) -> &Csr {
+        &self.l
+    }
+}
+
+impl Preconditioner for Ichol0 {
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        let n = self.l.nrows;
+        let l = &self.l;
+        // Forward solve L y = r (rows; diagonal is last entry per row).
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let (lo, hi) = (l.indptr[i], l.indptr[i + 1]);
+            let d = l.data[hi - 1];
+            if d == 0.0 {
+                y[i] = 0.0;
+                continue;
+            }
+            let mut acc = r[i];
+            for idx in lo..hi - 1 {
+                acc -= l.data[idx] * y[l.indices[idx] as usize];
+            }
+            y[i] = acc / d;
+        }
+        // Backward solve Lᵀ z = y (column sweep over rows).
+        let mut z = y;
+        for i in (0..n).rev() {
+            let (lo, hi) = (l.indptr[i], l.indptr[i + 1]);
+            let d = l.data[hi - 1];
+            if d == 0.0 {
+                z[i] = 0.0;
+                continue;
+            }
+            z[i] /= d;
+            let zi = z[i];
+            for idx in lo..hi - 1 {
+                z[l.indices[idx] as usize] -= l.data[idx] * zi;
+            }
+        }
+        z
+    }
+
+    fn name(&self) -> &'static str {
+        "ichol0"
+    }
+
+    fn nnz(&self) -> usize {
+        self.l.nnz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::precond::IdentityPrecond;
+    use crate::solve::pcg;
+
+    #[test]
+    fn exact_on_tridiagonal_spd() {
+        // Grounded path → tridiagonal SPD with no fill: IC(0) is the
+        // exact Cholesky, so PCG converges in one iteration.
+        let l = generators::path(32);
+        let mut coo = crate::sparse::Coo::new(32, 32);
+        for r in 0..32 {
+            for (&c, &v) in l.matrix.row_indices(r).iter().zip(l.matrix.row_data(r)) {
+                coo.push(r as u32, c, v);
+            }
+            coo.push(r as u32, r as u32, 0.01); // ground every vertex a bit
+        }
+        let a = coo.to_csr();
+        let ic = Ichol0::new(&a);
+        let b: Vec<f64> = (0..32).map(|i| (i as f64 * 0.3).sin()).collect();
+        let o = pcg::PcgOptions { project: false, ..Default::default() };
+        let out = pcg::solve(&a, &b, &ic, &o);
+        assert!(out.iters <= 2, "IC(0) must be exact on tridiagonal, took {}", out.iters);
+    }
+
+    #[test]
+    fn preconditioners_laplacian_with_projection() {
+        let l = generators::grid2d(16, 16, generators::Coeff::Uniform, 0);
+        let ic = Ichol0::new(&l.matrix);
+        let b = pcg::random_rhs(&l, 7);
+        let o = pcg::PcgOptions { max_iter: 2000, ..Default::default() };
+        let out = pcg::solve(&l.matrix, &b, &ic, &o);
+        assert!(out.converged, "rel={}", out.rel_residual);
+        let plain = pcg::solve(&l.matrix, &b, &IdentityPrecond, &o);
+        assert!(out.iters < plain.iters, "ic0 {} vs plain {}", out.iters, plain.iters);
+    }
+
+    #[test]
+    fn pattern_matches_lower_triangle() {
+        let l = generators::grid2d(6, 6, generators::Coeff::Uniform, 0);
+        let ic = Ichol0::new(&l.matrix);
+        assert_eq!(ic.factor().nnz(), l.matrix.tril(false).nnz());
+        assert_eq!(ic.shift, 0.0);
+    }
+}

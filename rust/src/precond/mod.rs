@@ -1,0 +1,99 @@
+//! Preconditioners: the ParAC factor plus every baseline the paper
+//! compares against (Tables 2–3).
+//!
+//! | paper baseline            | here                                  |
+//! |---------------------------|---------------------------------------|
+//! | ParAC `G D Gᵀ`            | [`LdlPrecond`]                        |
+//! | MATLAB `ichol('ict')`     | [`icholt::IcholT`] (threshold drop)   |
+//! | cuSPARSE `csric02` (IC0)  | [`ichol0::Ichol0`] (zero fill-in)     |
+//! | HyPre / AmgX (AMG)        | [`amg::AmgPrecond`] (smoothed aggr.)  |
+//! | –                         | [`JacobiPrecond`], [`IdentityPrecond`]|
+
+pub mod amg;
+pub mod ichol0;
+pub mod ssor;
+pub mod icholt;
+pub mod ldl_precond;
+
+pub use amg::AmgPrecond;
+pub use ichol0::Ichol0;
+pub use icholt::IcholT;
+pub use ldl_precond::LdlPrecond;
+pub use ssor::Ssor;
+
+use crate::sparse::Csr;
+
+/// A symmetric preconditioner application `z = M⁻¹ r`.
+pub trait Preconditioner: Sync {
+    /// Apply the preconditioner to a residual.
+    fn apply(&self, r: &[f64]) -> Vec<f64>;
+
+    /// Short display name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Stored nonzeros (for fill comparisons); 0 if not applicable.
+    fn nnz(&self) -> usize {
+        0
+    }
+}
+
+/// No preconditioning (plain CG).
+pub struct IdentityPrecond;
+
+impl Preconditioner for IdentityPrecond {
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        r.to_vec()
+    }
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Diagonal (Jacobi) preconditioner.
+pub struct JacobiPrecond {
+    inv_diag: Vec<f64>,
+}
+
+impl JacobiPrecond {
+    /// Extract `diag(A)⁻¹` (zero diagonals pass through unchanged).
+    pub fn new(a: &Csr) -> JacobiPrecond {
+        let inv_diag = a
+            .diag()
+            .into_iter()
+            .map(|d| if d > 0.0 { 1.0 / d } else { 1.0 })
+            .collect();
+        JacobiPrecond { inv_diag }
+    }
+}
+
+impl Preconditioner for JacobiPrecond {
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        r.iter().zip(&self.inv_diag).map(|(x, d)| x * d).collect()
+    }
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+    fn nnz(&self) -> usize {
+        self.inv_diag.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn identity_is_identity() {
+        let r = vec![1.0, -2.0, 3.0];
+        assert_eq!(IdentityPrecond.apply(&r), r);
+    }
+
+    #[test]
+    fn jacobi_scales_by_diag() {
+        let l = generators::path(4); // diag [1,2,2,1]
+        let p = JacobiPrecond::new(&l.matrix);
+        let z = p.apply(&[2.0, 2.0, 4.0, 3.0]);
+        assert_eq!(z, vec![2.0, 1.0, 2.0, 3.0]);
+    }
+}

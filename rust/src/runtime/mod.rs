@@ -1,0 +1,9 @@
+//! PJRT runtime — loads the HLO-text artifacts produced by the python
+//! compile path (`python/compile/aot.py`) and executes them on the CPU
+//! PJRT client. Python never runs at solve time; the rust binary is
+//! self-contained once `make artifacts` has produced `artifacts/`.
+
+pub mod pjrt;
+pub mod sampler;
+
+pub use pjrt::{Artifacts, LoadedExec};

@@ -1,0 +1,159 @@
+//! HLO-text artifact loading and execution via the `xla` crate's PJRT
+//! CPU client.
+//!
+//! Interchange format is HLO **text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! DESIGN.md and /opt/xla-example/README.md). All artifacts are lowered
+//! with `return_tuple=True`, so outputs unwrap as tuples.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A typed input buffer for [`LoadedExec::run_mixed`].
+pub enum Input<'a> {
+    /// f32 tensor with shape.
+    F32(&'a [f32], &'a [usize]),
+    /// i32 tensor with shape.
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// A compiled executable plus its artifact name.
+pub struct LoadedExec {
+    /// Artifact stem (e.g. `sample_b64_k16`).
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExec {
+    /// Execute with f32 buffers; returns the flat f32 contents of each
+    /// tuple element.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let wrapped: Vec<Input> = inputs.iter().map(|&(d, s)| Input::F32(d, s)).collect();
+        self.run_mixed(&wrapped)
+    }
+
+    /// Execute with mixed f32/i32 inputs; returns each tuple element's
+    /// flat contents as f32 (i32 outputs are converted).
+    pub fn run_mixed(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let (lit, shape): (xla::Literal, &[usize]) = match inp {
+                    Input::F32(d, s) => (xla::Literal::vec1(d), s),
+                    Input::I32(d, s) => (xla::Literal::vec1(d), s),
+                };
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e}", self.name))?;
+        let elems = out.decompose_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        elems
+            .into_iter()
+            .map(|l| {
+                // Outputs may be f32 or i32; surface both as f32 for the
+                // caller (indices round-trip exactly below 2^24).
+                match l.ty().map_err(|e| anyhow!("{e}"))? {
+                    xla::ElementType::F32 => l.to_vec::<f32>().map_err(|e| anyhow!("{e}")),
+                    xla::ElementType::S32 => Ok(l
+                        .to_vec::<i32>()
+                        .map_err(|e| anyhow!("{e}"))?
+                        .into_iter()
+                        .map(|v| v as f32)
+                        .collect()),
+                    other => Err(anyhow!("unsupported output type {other:?}")),
+                }
+            })
+            .collect()
+    }
+}
+
+/// A directory of compiled artifacts, keyed by file stem.
+pub struct Artifacts {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, LoadedExec>,
+}
+
+impl Artifacts {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Artifacts { client, dir: dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$PARAC_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Artifacts> {
+        let dir = std::env::var("PARAC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Platform string of the PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact stems available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.extension().map_or(false, |x| x == "txt") {
+                    if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                        v.push(stem.trim_end_matches(".hlo").to_string());
+                    }
+                }
+            }
+        }
+        v.sort();
+        v
+    }
+
+    /// Load (compile + cache) an artifact by stem.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedExec> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.cache
+                .insert(name.to_string(), LoadedExec { name: name.to_string(), exe });
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The PJRT round-trip is exercised by `rust/tests/hlo_roundtrip.rs`
+    // (integration test — requires `make artifacts` to have run) and by
+    // the `hlo_pcg` example. Unit scope here is limited to path logic.
+    use super::*;
+
+    #[test]
+    fn available_lists_hlo_stems() {
+        let dir = std::env::temp_dir().join("parac_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("bar.json"), "{}").unwrap();
+        let arts = Artifacts::open(&dir).unwrap();
+        let names = arts.available();
+        assert!(names.contains(&"foo".to_string()));
+        assert!(!names.iter().any(|n| n.contains("bar")));
+    }
+}

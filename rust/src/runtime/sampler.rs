@@ -1,0 +1,144 @@
+//! Bucketed batch executor for the AOT-compiled Pallas clique-sampling
+//! kernel (`sample_b{B}_k{K}` artifacts).
+//!
+//! PJRT executables have static shapes, so ready vertices are grouped
+//! into padded buckets: a vertex with `m ≤ K` merged neighbors goes to
+//! the width-`K` bucket, weights **front-padded** with zeros (keeping
+//! the ascending sort valid). The kernel returns, per slot `i`, the
+//! sampled partner index and new edge weight; this module scatters the
+//! results back into `(u, v, w)` fill edges.
+//!
+//! The uniform draws are generated host-side from the same per-pivot
+//! RNG stream as the native engines, so the offloaded samples are
+//! bit-compatible in distribution (identical draws feed an identical
+//! inverse-CDF; tiny f32-vs-f64 CDF rounding can pick a different
+//! partner only when two cumulative weights collide at f32 precision).
+
+use super::pjrt::Artifacts;
+use crate::factor::sample;
+use anyhow::{anyhow, Result};
+
+/// Supported bucket widths (must match `python/compile/aot.py`).
+pub const BUCKET_WIDTHS: [usize; 3] = [16, 64, 256];
+/// Batch size per kernel launch (must match aot.py).
+pub const BATCH: usize = 64;
+
+/// One vertex's sampling task: merged neighbors sorted ascending by
+/// weight.
+#[derive(Clone, Debug)]
+pub struct SampleTask {
+    /// Pivot vertex id (for RNG stream derivation).
+    pub pivot: u32,
+    /// Merged neighbors `(vertex, weight)` sorted ascending by weight.
+    pub nbrs: Vec<(u32, f64)>,
+}
+
+/// A sampled fill edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FillEdge {
+    /// Smaller-position endpoint's vertex id.
+    pub u: u32,
+    /// Partner vertex id.
+    pub v: u32,
+    /// New edge weight.
+    pub w: f64,
+}
+
+/// Batched sampler over the PJRT artifacts.
+pub struct HloSampler<'a> {
+    arts: &'a mut Artifacts,
+    seed: u64,
+}
+
+impl<'a> HloSampler<'a> {
+    /// Wrap an artifact store.
+    pub fn new(arts: &'a mut Artifacts, seed: u64) -> Self {
+        HloSampler { arts, seed }
+    }
+
+    /// Pick the smallest bucket width ≥ `m` (None: too wide, caller
+    /// falls back to the native path).
+    pub fn bucket_for(m: usize) -> Option<usize> {
+        BUCKET_WIDTHS.iter().copied().find(|&k| m <= k)
+    }
+
+    /// Run one bucket batch: all tasks must fit width `k`. Emits fill
+    /// edges for every task. Tasks beyond [`BATCH`] are chunked.
+    pub fn run_bucket(&mut self, k: usize, tasks: &[SampleTask]) -> Result<Vec<FillEdge>> {
+        if !BUCKET_WIDTHS.contains(&k) {
+            return Err(anyhow!("unknown bucket width {k}"));
+        }
+        let name = format!("sample_b{BATCH}_k{k}");
+        let mut out = Vec::new();
+        for chunk in tasks.chunks(BATCH) {
+            // Front-padded weights + host-generated uniforms.
+            let mut w = vec![0f32; BATCH * k];
+            let mut u = vec![0f32; BATCH * k];
+            for (b, t) in chunk.iter().enumerate() {
+                let m = t.nbrs.len();
+                assert!(m <= k, "task too wide for bucket");
+                let off = k - m;
+                for (i, &(_, wt)) in t.nbrs.iter().enumerate() {
+                    w[b * k + off + i] = wt as f32;
+                }
+                let mut rng = sample::pivot_rng(self.seed, t.pivot);
+                for i in 0..m.saturating_sub(1) {
+                    u[b * k + off + i] = rng.next_f64() as f32;
+                }
+            }
+            let exe = self.arts.load(&name)?;
+            let res = exe.run_f32(&[(&w, &[BATCH, k]), (&u, &[BATCH, k])])?;
+            let (j_idx, w_new) = (&res[0], &res[1]);
+            for (b, t) in chunk.iter().enumerate() {
+                let m = t.nbrs.len();
+                let off = k - m;
+                for i in 0..m.saturating_sub(1) {
+                    let j = j_idx[b * k + off + i] as i64 as usize;
+                    let wn = w_new[b * k + off + i] as f64;
+                    if j < k && wn > 0.0 {
+                        let jj = j - off;
+                        out.push(FillEdge { u: t.nbrs[i].0, v: t.nbrs[jj].0, w: wn });
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Pure-rust reference of the batched kernel semantics (used by tests
+/// and by the `bench_sample_kernel` comparison): identical to
+/// [`sample::sample_clique`] driven by the same RNG stream.
+pub fn native_reference(seed: u64, task: &SampleTask) -> Vec<FillEdge> {
+    let mut rng = sample::pivot_rng(seed, task.pivot);
+    let mut cum = Vec::new();
+    let mut out = Vec::new();
+    sample::sample_clique(&task.nbrs, &mut cum, &mut rng, |a, b, w| {
+        out.push(FillEdge { u: a, v: b, w });
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(HloSampler::bucket_for(3), Some(16));
+        assert_eq!(HloSampler::bucket_for(16), Some(16));
+        assert_eq!(HloSampler::bucket_for(17), Some(64));
+        assert_eq!(HloSampler::bucket_for(300), None);
+    }
+
+    #[test]
+    fn native_reference_emits_m_minus_one() {
+        let t = SampleTask {
+            pivot: 5,
+            nbrs: vec![(1, 0.5), (2, 1.0), (3, 2.0)],
+        };
+        let edges = native_reference(42, &t);
+        assert_eq!(edges.len(), 2);
+        assert!(edges.iter().all(|e| e.w > 0.0));
+    }
+}

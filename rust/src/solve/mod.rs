@@ -1,0 +1,5 @@
+//! Iterative solvers: preconditioned conjugate gradients and (level-
+//! scheduled) sparse triangular solves.
+
+pub mod pcg;
+pub mod trisolve;

@@ -1,0 +1,166 @@
+//! Triplet (COO) format — the mutable builder format.
+//!
+//! All generators assemble matrices as triplets; [`Coo::to_csr`] sorts,
+//! deduplicates (summing duplicates) and compresses.
+
+use super::csr::Csr;
+
+/// A coordinate-format sparse matrix builder.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row indices of entries.
+    pub rows: Vec<u32>,
+    /// Column indices of entries.
+    pub cols: Vec<u32>,
+    /// Entry values; duplicates are summed on conversion.
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// An empty `nrows × ncols` builder.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// With pre-reserved capacity for `nnz` entries.
+    pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(nnz),
+            cols: Vec::with_capacity(nnz),
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// Number of stored (pre-dedup) entries.
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Append one entry.
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f64) {
+        debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
+        self.rows.push(r);
+        self.cols.push(c);
+        self.vals.push(v);
+    }
+
+    /// Append both `(r,c,v)` and `(c,r,v)` — convenience for symmetric
+    /// assembly from an edge list.
+    #[inline]
+    pub fn push_sym(&mut self, r: u32, c: u32, v: f64) {
+        self.push(r, c, v);
+        if r != c {
+            self.push(c, r, v);
+        }
+    }
+
+    /// Convert to CSR, summing duplicate entries and dropping exact zeros
+    /// produced by cancellation only if `drop_zeros` is requested by the
+    /// caller via [`Csr::drop_zeros`] afterwards (kept here for clarity).
+    pub fn to_csr(&self) -> Csr {
+        let n = self.nrows;
+        // Counting sort by row.
+        let mut row_counts = vec![0usize; n + 1];
+        for &r in &self.rows {
+            row_counts[r as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_counts[i + 1] += row_counts[i];
+        }
+        let mut order: Vec<u32> = vec![0; self.nnz()];
+        {
+            let mut next = row_counts.clone();
+            for (k, &r) in self.rows.iter().enumerate() {
+                let slot = next[r as usize];
+                order[slot] = k as u32;
+                next[r as usize] += 1;
+            }
+        }
+        // Per-row: sort by column, merge duplicates.
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(self.nnz());
+        let mut data: Vec<f64> = Vec::with_capacity(self.nnz());
+        indptr.push(0usize);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..n {
+            scratch.clear();
+            for &k in &order[row_counts[r]..row_counts[r + 1]] {
+                scratch.push((self.cols[k as usize], self.vals[k as usize]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let c = scratch[i].0;
+                let mut v = scratch[i].1;
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                data.push(v);
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, indptr, indices, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_sums_duplicates() {
+        let mut c = Coo::new(3, 3);
+        c.push(0, 1, 1.0);
+        c.push(0, 1, 2.5);
+        c.push(2, 0, -1.0);
+        c.push(1, 1, 4.0);
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(0, 1), 3.5);
+        assert_eq!(m.get(2, 0), -1.0);
+        assert_eq!(m.get(1, 1), 4.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn symmetric_push() {
+        let mut c = Coo::new(4, 4);
+        c.push_sym(0, 3, 2.0);
+        c.push_sym(1, 1, 5.0); // diagonal: inserted once
+        let m = c.to_csr();
+        assert_eq!(m.get(0, 3), 2.0);
+        assert_eq!(m.get(3, 0), 2.0);
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn rows_sorted_by_column() {
+        let mut c = Coo::new(2, 5);
+        for &col in &[4u32, 0, 2, 3, 1] {
+            c.push(0, col, col as f64);
+        }
+        let m = c.to_csr();
+        let row: Vec<u32> = m.row_indices(0).to_vec();
+        assert_eq!(row, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let c = Coo::new(5, 5);
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.indptr.len(), 6);
+    }
+}

@@ -1,0 +1,158 @@
+//! Compressed sparse column format — used for triangular factors.
+//!
+//! The randomized factorization produces columns of `G` one at a time, so
+//! CSC is the natural output layout. `Csc` here stores the **strictly
+//! lower** part of a unit-lower-triangular factor (the implicit unit
+//! diagonal is not stored), matching how [`crate::factor::LdlFactor`]
+//! consumes it.
+
+use super::csr::Csr;
+
+/// A CSC sparse matrix (column-major compressed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Column pointer, length `ncols + 1`.
+    pub colptr: Vec<usize>,
+    /// Row indices, sorted within each column.
+    pub rowidx: Vec<u32>,
+    /// Values, parallel to `rowidx`.
+    pub data: Vec<f64>,
+}
+
+impl Csc {
+    /// An `n × n` zero matrix.
+    pub fn zero(n: usize) -> Self {
+        Self { nrows: n, ncols: n, colptr: vec![0; n + 1], rowidx: Vec::new(), data: Vec::new() }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    /// Row indices of column `c`.
+    #[inline]
+    pub fn col_rows(&self, c: usize) -> &[u32] {
+        &self.rowidx[self.colptr[c]..self.colptr[c + 1]]
+    }
+
+    /// Values of column `c`.
+    #[inline]
+    pub fn col_data(&self, c: usize) -> &[f64] {
+        &self.data[self.colptr[c]..self.colptr[c + 1]]
+    }
+
+    /// Reinterpret as CSR of the transpose (zero-copy: CSC of A is CSR of
+    /// Aᵀ).
+    pub fn transpose_view_csr(self) -> Csr {
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr: self.colptr,
+            indices: self.rowidx,
+            data: self.data,
+        }
+    }
+
+    /// Materialize as CSR of the same matrix.
+    pub fn to_csr(&self) -> Csr {
+        // CSC(A) == CSR(Aᵀ); transpose once to get CSR(A).
+        let t = Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr: self.colptr.clone(),
+            indices: self.rowidx.clone(),
+            data: self.data.clone(),
+        };
+        t.transpose()
+    }
+
+    /// Build from CSR.
+    pub fn from_csr(a: &Csr) -> Csc {
+        let t = a.transpose();
+        Csc { nrows: a.nrows, ncols: a.ncols, colptr: t.indptr, rowidx: t.indices, data: t.data }
+    }
+
+    /// Structural validation (sorted rows per column, bounds, monotone
+    /// colptr).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.colptr.len() != self.ncols + 1 {
+            return Err("colptr length".into());
+        }
+        if *self.colptr.last().unwrap() != self.rowidx.len() || self.colptr[0] != 0 {
+            return Err("colptr ends".into());
+        }
+        for c in 0..self.ncols {
+            if self.colptr[c] > self.colptr[c + 1] {
+                return Err(format!("colptr not monotone at {c}"));
+            }
+            let rows = self.col_rows(c);
+            for w in rows.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("col {c} not strictly sorted"));
+                }
+            }
+            if let Some(&r) = rows.last() {
+                if r as usize >= self.nrows {
+                    return Err(format!("row out of range in col {c}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check strict lower-triangularity (all row indices > column index) —
+    /// the invariant of factor storage.
+    pub fn is_strictly_lower(&self) -> bool {
+        (0..self.ncols).all(|c| self.col_rows(c).iter().all(|&r| (r as usize) > c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn sample_csr() -> Csr {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 0, 1.0);
+        c.push(0, 3, 2.0);
+        c.push(1, 1, 3.0);
+        c.push(2, 0, 4.0);
+        c.push(2, 2, 5.0);
+        c.to_csr()
+    }
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let a = sample_csr();
+        let csc = Csc::from_csr(&a);
+        assert_eq!(csc.to_csr(), a);
+        csc.validate().unwrap();
+    }
+
+    #[test]
+    fn column_access() {
+        let a = sample_csr();
+        let csc = Csc::from_csr(&a);
+        assert_eq!(csc.col_rows(0), &[0, 2]);
+        assert_eq!(csc.col_data(0), &[1.0, 4.0]);
+        assert_eq!(csc.col_rows(3), &[0]);
+    }
+
+    #[test]
+    fn strictly_lower_check() {
+        let mut c = Coo::new(3, 3);
+        c.push(1, 0, 1.0);
+        c.push(2, 1, 1.0);
+        let l = Csc::from_csr(&c.to_csr());
+        assert!(l.is_strictly_lower());
+        let mut c2 = Coo::new(3, 3);
+        c2.push(0, 0, 1.0);
+        assert!(!Csc::from_csr(&c2.to_csr()).is_strictly_lower());
+    }
+}

@@ -1,0 +1,336 @@
+//! Compressed sparse row format — the crate's primary operator format.
+
+
+/// A CSR sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row pointer, length `nrows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Values, parallel to `indices`.
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// An `n × n` zero matrix.
+    pub fn zero(n: usize) -> Self {
+        Self { nrows: n, ncols: n, indptr: vec![0; n + 1], indices: Vec::new(), data: Vec::new() }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_data(&self, r: usize) -> &[f64] {
+        &self.data[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Entry lookup by binary search (O(log nnz-per-row)).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let cols = self.row_indices(r);
+        match cols.binary_search(&(c as u32)) {
+            Ok(k) => self.row_data(r)[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `y = A·x`.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            for k in lo..hi {
+                acc += self.data[k] * x[self.indices[k] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Allocating SpMV convenience.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.spmv(x, &mut y);
+        y
+    }
+
+    /// Transpose (also converts CSR↔CSC interpretation).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let mut indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        for r in 0..self.nrows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[k] as usize;
+                let slot = indptr[c];
+                indices[slot] = r as u32;
+                data[slot] = self.data[k];
+                indptr[c] += 1;
+            }
+        }
+        // indptr has been advanced by one row's worth; rebuild from counts.
+        Csr { nrows: self.ncols, ncols: self.nrows, indptr: counts, indices, data }
+    }
+
+    /// Extract the diagonal.
+    pub fn diag(&self) -> Vec<f64> {
+        let n = self.nrows.min(self.ncols);
+        (0..n).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Symmetric permutation `P A Pᵀ`: entry `(i,j)` moves to
+    /// `(perm[i], perm[j])` where `perm` maps old index → new index.
+    /// Direct CSR construction (no triplet materialization): row counts
+    /// are a permutation of the input's, entries scatter then sort
+    /// within rows.
+    pub fn permute_sym(&self, perm: &[u32]) -> Csr {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(perm.len(), self.nrows);
+        let n = self.nrows;
+        let mut indptr = vec![0usize; n + 1];
+        for r in 0..n {
+            indptr[perm[r] as usize + 1] = self.indptr[r + 1] - self.indptr[r];
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0f64; self.nnz()];
+        for r in 0..n {
+            let dst = indptr[perm[r] as usize];
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            for (off, k) in (lo..hi).enumerate() {
+                indices[dst + off] = perm[self.indices[k] as usize];
+                data[dst + off] = self.data[k];
+            }
+        }
+        // Per-row sort by column (rows are permutations of sorted rows).
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for i in 0..n {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            if hi - lo > 1 {
+                scratch.clear();
+                scratch.extend(indices[lo..hi].iter().copied().zip(data[lo..hi].iter().copied()));
+                scratch.sort_unstable_by_key(|&(c, _)| c);
+                for (off, &(c, v)) in scratch.iter().enumerate() {
+                    indices[lo + off] = c;
+                    data[lo + off] = v;
+                }
+            }
+        }
+        Csr { nrows: n, ncols: n, indptr, indices, data }
+    }
+
+    /// Structural + numerical symmetry check (tolerance `tol`).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.indptr != self.indptr || t.indices != self.indices {
+            return false;
+        }
+        self.data.iter().zip(&t.data).all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    /// Drop entries with `|v| <= tol` (pruning exact-zero cancellations).
+    pub fn drop_zeros(&self, tol: f64) -> Csr {
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut data = Vec::with_capacity(self.nnz());
+        indptr.push(0);
+        for r in 0..self.nrows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                if self.data[k].abs() > tol {
+                    indices.push(self.indices[k]);
+                    data.push(self.data[k]);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, indptr, indices, data }
+    }
+
+    /// Lower triangle (strict if `strict`), as CSR.
+    pub fn tril(&self, strict: bool) -> Csr {
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for r in 0..self.nrows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[k] as usize;
+                if c < r || (!strict && c == r) {
+                    indices.push(self.indices[k]);
+                    data.push(self.data[k]);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, indptr, indices, data }
+    }
+
+    /// Dense conversion (testing helper; panics on big matrices).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        assert!(self.nrows * self.ncols <= 1 << 22, "to_dense is a testing helper");
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                d[r][self.indices[k] as usize] += self.data[k];
+            }
+        }
+        d
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Validate structural invariants (sorted unique columns per row,
+    /// in-range indices, monotone indptr). Used by property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.nrows + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.indices.len() {
+            return Err("indptr ends".into());
+        }
+        if self.indices.len() != self.data.len() {
+            return Err("indices/data length mismatch".into());
+        }
+        // Bounds/monotonicity first — row access below must be safe.
+        for r in 0..self.nrows {
+            if self.indptr[r] > self.indptr[r + 1] || self.indptr[r + 1] > self.indices.len() {
+                return Err(format!("indptr not monotone/bounded at {r}"));
+            }
+        }
+        for r in 0..self.nrows {
+            let cols = self.row_indices(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} not strictly sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("column out of range in row {r}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn small() -> Csr {
+        // [2 -1 0; -1 2 -1; 0 -1 2]
+        let mut c = Coo::new(3, 3);
+        for i in 0..3 {
+            c.push(i, i, 2.0);
+        }
+        c.push_sym(0, 1, -1.0);
+        c.push_sym(1, 2, -1.0);
+        c.to_csr()
+    }
+
+    #[test]
+    fn spmv_tridiag() {
+        let a = small();
+        let y = a.mul_vec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn symmetric_detection() {
+        let a = small();
+        assert!(a.is_symmetric(0.0));
+        let mut c = Coo::new(2, 2);
+        c.push(0, 1, 1.0);
+        assert!(!c.to_csr().is_symmetric(0.0));
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        let a = small();
+        let p: Vec<u32> = (0..3).collect();
+        assert_eq!(a.permute_sym(&p), a);
+    }
+
+    #[test]
+    fn permute_reversal() {
+        let a = small();
+        let p = vec![2u32, 1, 0];
+        let b = a.permute_sym(&p);
+        assert_eq!(b.get(0, 0), a.get(2, 2));
+        assert_eq!(b.get(0, 1), a.get(2, 1));
+        assert!(b.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn tril_shapes() {
+        let a = small();
+        let l = a.tril(false);
+        assert_eq!(l.nnz(), 5);
+        let ls = a.tril(true);
+        assert_eq!(ls.nnz(), 2);
+    }
+
+    #[test]
+    fn validate_catches_bad_indptr() {
+        let mut a = small();
+        a.indptr[1] = 10;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn diag_extraction() {
+        let a = small();
+        assert_eq!(a.diag(), vec![2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Padded ELLPACK format — the fixed-shape layout consumed by the
+//! AOT-compiled JAX/Pallas SpMV kernel (Layer 1/2).
+//!
+//! PJRT executables are compiled for static shapes, so the rust side pads
+//! a CSR operator to `(n_pad, width)`: every row gets exactly `width`
+//! slots; unused slots carry column `row` (a self-reference) and value
+//! `0.0` so gathers stay in-bounds and contribute nothing.
+
+use super::csr::Csr;
+
+/// A padded ELL matrix with fixed row width.
+#[derive(Clone, Debug)]
+pub struct Ell {
+    /// Logical number of rows (≤ `n_pad`).
+    pub nrows: usize,
+    /// Padded number of rows (the compiled kernel's static dimension).
+    pub n_pad: usize,
+    /// Fixed entries-per-row.
+    pub width: usize,
+    /// Column indices, row-major `(n_pad, width)`.
+    pub cols: Vec<i32>,
+    /// Values, row-major `(n_pad, width)`.
+    pub vals: Vec<f32>,
+}
+
+impl Ell {
+    /// Pad `a` to `(n_pad, width)`. Fails if any row has more than
+    /// `width` entries or `a.nrows > n_pad`.
+    pub fn from_csr(a: &Csr, n_pad: usize, width: usize) -> Result<Ell, String> {
+        if a.nrows > n_pad {
+            return Err(format!("nrows {} exceeds n_pad {}", a.nrows, n_pad));
+        }
+        let max_row = (0..a.nrows).map(|r| a.indptr[r + 1] - a.indptr[r]).max().unwrap_or(0);
+        if max_row > width {
+            return Err(format!("row width {max_row} exceeds ELL width {width}"));
+        }
+        let mut cols = vec![0i32; n_pad * width];
+        let mut vals = vec![0f32; n_pad * width];
+        for r in 0..n_pad {
+            for k in 0..width {
+                cols[r * width + k] = r.min(n_pad - 1) as i32; // safe self-reference
+            }
+        }
+        for r in 0..a.nrows {
+            let idx = a.row_indices(r);
+            let dat = a.row_data(r);
+            for (k, (&c, &v)) in idx.iter().zip(dat).enumerate() {
+                cols[r * width + k] = c as i32;
+                vals[r * width + k] = v as f32;
+            }
+        }
+        Ok(Ell { nrows: a.nrows, n_pad, width, cols, vals })
+    }
+
+    /// Reference SpMV in f64 accumulation (oracle for the Pallas kernel
+    /// and for tests). `x` has length `n_pad`.
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_pad);
+        let mut y = vec![0f32; self.n_pad];
+        for r in 0..self.n_pad {
+            let mut acc = 0f64;
+            for k in 0..self.width {
+                let c = self.cols[r * self.width + k] as usize;
+                acc += self.vals[r * self.width + k] as f64 * x[c] as f64;
+            }
+            y[r] = acc as f32;
+        }
+        y
+    }
+
+    /// Pad a length-`nrows` vector to `n_pad` with zeros.
+    pub fn pad_vec(&self, x: &[f64]) -> Vec<f32> {
+        assert_eq!(x.len(), self.nrows);
+        let mut out = vec![0f32; self.n_pad];
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = v as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn ell_matches_csr_spmv() {
+        let lap = generators::grid2d(8, 8, generators::Coeff::Uniform, 3);
+        let a = &lap.matrix;
+        let ell = Ell::from_csr(a, 80, 8).unwrap();
+        let x: Vec<f64> = (0..a.nrows).map(|i| (i as f64 * 0.37).sin()).collect();
+        let y_csr = a.mul_vec(&x);
+        let xp = ell.pad_vec(&x);
+        let y_ell = ell.spmv_ref(&xp);
+        for i in 0..a.nrows {
+            assert!((y_csr[i] as f32 - y_ell[i]).abs() < 1e-3, "row {i}");
+        }
+        for i in a.nrows..80 {
+            assert_eq!(y_ell[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn width_overflow_rejected() {
+        let lap = generators::grid2d(4, 4, generators::Coeff::Uniform, 3);
+        assert!(Ell::from_csr(&lap.matrix, 16, 2).is_err());
+    }
+}

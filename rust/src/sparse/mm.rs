@@ -1,0 +1,139 @@
+//! MatrixMarket coordinate-format IO (`%%MatrixMarket matrix coordinate
+//! real general|symmetric`) — interop with SuiteSparse-style inputs.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Read a MatrixMarket file into CSR. Symmetric files are expanded to
+/// both triangles.
+pub fn read_matrix_market(path: &Path) -> Result<Csr, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or("empty file")?
+        .map_err(|e| e.to_string())?;
+    let h = header.to_ascii_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate") {
+        return Err(format!("unsupported header: {header}"));
+    }
+    let symmetric = h.contains("symmetric");
+    if h.contains("complex") || h.contains("pattern") {
+        return Err("complex/pattern matrices unsupported".into());
+    }
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or("missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|s| s.parse().map_err(|e| format!("size parse: {e}")))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != 3 {
+        return Err("size line must be 'rows cols nnz'".into());
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut coo = Coo::with_capacity(nrows, ncols, if symmetric { 2 * nnz } else { nnz });
+    let mut read = 0usize;
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().ok_or("row")?.parse().map_err(|e| format!("{e}"))?;
+        let c: usize = it.next().ok_or("col")?.parse().map_err(|e| format!("{e}"))?;
+        let v: f64 = it.next().map_or(Ok(1.0), |s| s.parse()).map_err(|e| format!("{e}"))?;
+        if r == 0 || c == 0 || r > nrows || c > ncols {
+            return Err(format!("index out of range: {r} {c}"));
+        }
+        let (r, c) = (r as u32 - 1, c as u32 - 1);
+        if symmetric {
+            coo.push_sym(r, c, v);
+        } else {
+            coo.push(r, c, v);
+        }
+        read += 1;
+    }
+    if read != nnz {
+        return Err(format!("expected {nnz} entries, read {read}"));
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write a CSR matrix in MatrixMarket format. If `symmetric`, only the
+/// lower triangle is emitted (the matrix must actually be symmetric).
+pub fn write_matrix_market(a: &Csr, path: &Path, symmetric: bool) -> Result<(), String> {
+    let f = std::fs::File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
+    let mut w = BufWriter::new(f);
+    let kind = if symmetric { "symmetric" } else { "general" };
+    let entries: Vec<(usize, u32, f64)> = (0..a.nrows)
+        .flat_map(|r| {
+            a.row_indices(r)
+                .iter()
+                .zip(a.row_data(r))
+                .filter(move |(c, _)| !symmetric || (**c as usize) <= r)
+                .map(move |(&c, &v)| (r, c, v))
+        })
+        .collect();
+    writeln!(w, "%%MatrixMarket matrix coordinate real {kind}").map_err(|e| e.to_string())?;
+    writeln!(w, "{} {} {}", a.nrows, a.ncols, entries.len()).map_err(|e| e.to_string())?;
+    for (r, c, v) in entries {
+        writeln!(w, "{} {} {:.17e}", r + 1, c + 1, v).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn roundtrip_symmetric() {
+        let lap = generators::grid2d(6, 5, generators::Coeff::Uniform, 1);
+        let dir = std::env::temp_dir().join("parac_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("lap.mtx");
+        write_matrix_market(&lap.matrix, &p, true).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(back.nrows, lap.matrix.nrows);
+        assert_eq!(back.nnz(), lap.matrix.nnz());
+        for r in 0..back.nrows {
+            assert_eq!(back.row_indices(r), lap.matrix.row_indices(r));
+        }
+    }
+
+    #[test]
+    fn roundtrip_general() {
+        let mut coo = crate::sparse::Coo::new(3, 2);
+        coo.push(0, 1, 2.0);
+        coo.push(2, 0, -3.5);
+        let a = coo.to_csr();
+        let dir = std::env::temp_dir().join("parac_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("gen.mtx");
+        write_matrix_market(&a, &p, false).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("parac_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.mtx");
+        std::fs::write(&p, "not a matrix\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+}

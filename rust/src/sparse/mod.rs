@@ -1,0 +1,21 @@
+//! Sparse matrix substrate: COO / CSR / CSC / padded-ELL formats,
+//! MatrixMarket IO, and the kernels (SpMV, SpGEMM, permutation,
+//! transpose) the rest of the crate is built on.
+//!
+//! Conventions:
+//! * Row/column indices are `u32` (matrices up to 4·10⁹ rows — far beyond
+//!   the paper's largest testcase), values are `f64`.
+//! * Symmetric matrices are stored with **both** triangles unless a type
+//!   says otherwise (`Csc` factor columns store strictly-lower entries).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod ell;
+pub mod mm;
+pub mod ops;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use ell::Ell;

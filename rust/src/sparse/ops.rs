@@ -1,0 +1,225 @@
+//! Vector/matrix kernels: BLAS-1 helpers, sparse matrix–matrix product
+//! (Gustavson SpGEMM), and small dense Cholesky (AMG coarsest level).
+
+use super::csr::Csr;
+
+/// `y ← y + a·x`.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Euclidean norm.
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Subtract the mean in place — projects onto the range of a connected
+/// graph Laplacian (orthogonal complement of the constant nullspace).
+pub fn project_mean_zero(x: &mut [f64]) {
+    let m = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= m;
+    }
+}
+
+/// Sparse × sparse (Gustavson row-wise SpGEMM): `C = A·B`.
+pub fn spgemm(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.ncols, b.nrows);
+    let n = a.nrows;
+    let m = b.ncols;
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut data: Vec<f64> = Vec::new();
+    indptr.push(0usize);
+    // Dense accumulator with a generation marker (SPA).
+    let mut acc = vec![0.0f64; m];
+    let mut mark = vec![u32::MAX; m];
+    let mut cols_here: Vec<u32> = Vec::new();
+    for r in 0..n {
+        cols_here.clear();
+        let gen = r as u32;
+        for ka in a.indptr[r]..a.indptr[r + 1] {
+            let av = a.data[ka];
+            let arow = a.indices[ka] as usize;
+            for kb in b.indptr[arow]..b.indptr[arow + 1] {
+                let c = b.indices[kb] as usize;
+                if mark[c] != gen {
+                    mark[c] = gen;
+                    acc[c] = 0.0;
+                    cols_here.push(c as u32);
+                }
+                acc[c] += av * b.data[kb];
+            }
+        }
+        cols_here.sort_unstable();
+        for &c in &cols_here {
+            indices.push(c);
+            data.push(acc[c as usize]);
+        }
+        indptr.push(indices.len());
+    }
+    Csr { nrows: n, ncols: m, indptr, indices, data }
+}
+
+/// Galerkin triple product `Pᵀ A P` (AMG coarse operator).
+pub fn rap(p: &Csr, a: &Csr) -> Csr {
+    let pt = p.transpose();
+    spgemm(&spgemm(&pt, a), p)
+}
+
+/// Dense Cholesky factorization in place: `A = L·Lᵀ`, lower triangle of
+/// `a` (row-major `n×n`) is overwritten with `L`. Zero/negative pivots
+/// (singular Laplacian coarse grids) are tolerated by pinning the pivot
+/// row to identity — i.e. a pseudo-inverse-style solve.
+pub fn dense_cholesky(a: &mut [f64], n: usize) {
+    assert_eq!(a.len(), n * n);
+    for k in 0..n {
+        let mut d = a[k * n + k];
+        for j in 0..k {
+            d -= a[k * n + j] * a[k * n + j];
+        }
+        if d <= 1e-12 {
+            // Singular pivot: pin (acts on the orthogonal complement).
+            a[k * n + k] = 0.0;
+            for i in (k + 1)..n {
+                a[i * n + k] = 0.0;
+            }
+            continue;
+        }
+        let d = d.sqrt();
+        a[k * n + k] = d;
+        for i in (k + 1)..n {
+            let mut v = a[i * n + k];
+            for j in 0..k {
+                v -= a[i * n + j] * a[k * n + j];
+            }
+            a[i * n + k] = v / d;
+        }
+    }
+}
+
+/// Solve `L·Lᵀ x = b` with `L` from [`dense_cholesky`] (zero pivots skip).
+pub fn dense_cholesky_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let d = l[i * n + i];
+        if d == 0.0 {
+            y[i] = 0.0;
+            continue;
+        }
+        let mut v = b[i];
+        for j in 0..i {
+            v -= l[i * n + j] * y[j];
+        }
+        y[i] = v / d;
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let d = l[i * n + i];
+        if d == 0.0 {
+            x[i] = 0.0;
+            continue;
+        }
+        let mut v = y[i];
+        for j in (i + 1)..n {
+            v -= l[j * n + i] * x[j];
+        }
+        x[i] = v / d;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn blas1() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((nrm2(&x) - 14f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn projection_removes_mean() {
+        let mut x = vec![1.0, 2.0, 3.0, 6.0];
+        project_mean_zero(&mut x);
+        assert!(x.iter().sum::<f64>().abs() < 1e-12);
+    }
+
+    #[test]
+    fn spgemm_against_dense() {
+        let mut ca = Coo::new(3, 4);
+        ca.push(0, 0, 1.0);
+        ca.push(0, 2, 2.0);
+        ca.push(1, 1, 3.0);
+        ca.push(2, 3, -1.0);
+        let mut cb = Coo::new(4, 2);
+        cb.push(0, 0, 1.0);
+        cb.push(1, 1, 2.0);
+        cb.push(2, 0, -1.0);
+        cb.push(3, 1, 4.0);
+        let a = ca.to_csr();
+        let b = cb.to_csr();
+        let c = spgemm(&a, &b);
+        let ad = a.to_dense();
+        let bd = b.to_dense();
+        let cd = c.to_dense();
+        for i in 0..3 {
+            for j in 0..2 {
+                let want: f64 = (0..4).map(|k| ad[i][k] * bd[k][j]).sum();
+                assert!((cd[i][j] - want).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn spgemm_identity() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(0, 1, -1.0);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 2.0);
+        c.push(2, 2, 3.0);
+        let a = c.to_csr();
+        let i = Csr::eye(3);
+        assert_eq!(spgemm(&a, &i).to_dense(), a.to_dense());
+        assert_eq!(spgemm(&i, &a).to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn dense_chol_solves_spd() {
+        // SPD 3x3.
+        let mut a = vec![4.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 2.0];
+        let orig = a.clone();
+        dense_cholesky(&mut a, 3);
+        let b = vec![1.0, 2.0, 3.0];
+        let x = dense_cholesky_solve(&a, 3, &b);
+        // Check A x = b.
+        for i in 0..3 {
+            let got: f64 = (0..3).map(|j| orig[i * 3 + j] * x[j]).sum();
+            assert!((got - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dense_chol_singular_laplacian() {
+        // 2x2 Laplacian [[1,-1],[-1,1]] — singular; solve must not NaN.
+        let mut a = vec![1.0, -1.0, -1.0, 1.0];
+        dense_cholesky(&mut a, 2);
+        let x = dense_cholesky_solve(&a, 2, &[1.0, -1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

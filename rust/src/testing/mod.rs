@@ -1,0 +1,8 @@
+//! Test support: a small seeded property-testing driver.
+//!
+//! The offline environment has no `proptest`/`quickcheck`, so this module
+//! provides the same discipline with less machinery: run an invariant
+//! check over many seeded random cases and report the failing seed so the
+//! case can be replayed deterministically.
+
+pub mod prop;

@@ -1,0 +1,145 @@
+//! Cross-cutting property tests on factorization invariants, run over
+//! seeded random graphs (the crate's proptest stand-in, see
+//! `parac::testing::prop`).
+
+use parac::factor::{factorize, Engine, ParacOptions};
+use parac::graph::generators;
+use parac::ordering::Ordering;
+use parac::testing::prop::forall_seeds;
+
+fn opts(seed: u64, ordering: Ordering, engine: Engine) -> ParacOptions {
+    ParacOptions { seed, ordering, engine, ..Default::default() }
+}
+
+/// Columns of `G` inherit the Laplacian's zero column sums: for every
+/// non-empty pivot, `1 + Σ_i G[i,k] = 0` (the merged weights divided by
+/// their own sum). This pins the normalization of Algorithm 1 line 8.
+#[test]
+fn g_columns_sum_to_minus_one() {
+    forall_seeds(12, |seed| {
+        let l = generators::random_connected(120, 200, seed);
+        let f = factorize(&l, &opts(seed, Ordering::Random, Engine::Seq)).unwrap();
+        for k in 0..f.n() {
+            let col_sum: f64 = f.g.col_data(k).iter().sum();
+            if f.diag[k] > 0.0 {
+                if (1.0 + col_sum).abs() > 1e-12 {
+                    return Err(format!("column {k}: 1 + Σ = {}", 1.0 + col_sum));
+                }
+            } else if !f.g.col_rows(k).is_empty() {
+                return Err(format!("zero pivot {k} has stored entries"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The number of zero pivots equals the number of connected components
+/// (one per component — its last-eliminated vertex).
+#[test]
+fn zero_pivots_count_components() {
+    forall_seeds(12, |seed| {
+        let mut rng = parac::rng::Rng::new(seed);
+        // Build a forest of 1–4 random components.
+        let ncomp = 1 + rng.below(4);
+        let mut edges = Vec::new();
+        let mut base = 0u32;
+        let mut total = 0usize;
+        for _ in 0..ncomp {
+            let sz = 5 + rng.below(30);
+            for v in 1..sz as u32 {
+                edges.push((base + rng.below(v as usize) as u32, base + v, 1.0));
+            }
+            base += sz as u32;
+            total += sz;
+        }
+        let l = parac::graph::Laplacian::from_edges(total, &edges, "forest");
+        let f = factorize(&l, &opts(seed, Ordering::Random, Engine::Cpu { threads: 2 }))
+            .unwrap();
+        let zeros = f.diag.iter().filter(|&&d| d == 0.0).count();
+        if zeros != ncomp {
+            return Err(format!("{zeros} zero pivots for {ncomp} components"));
+        }
+        Ok(())
+    });
+}
+
+/// Total fill is bounded: every pivot with m merged neighbors samples
+/// exactly m−1 edges, so `nnz(G) = Σ m_k` and `fills = Σ (m_k − 1)` —
+/// the structural identity `fills == nnz(G) − (n − #empty)`.
+#[test]
+fn fill_identity_holds() {
+    forall_seeds(12, |seed| {
+        let l = generators::random_connected(200, 380, seed);
+        let f = factorize(&l, &opts(seed, Ordering::NnzSort, Engine::Seq)).unwrap();
+        let nonempty = f.diag.iter().filter(|&&d| d > 0.0).count() as u64;
+        if f.stats.fills != f.nnz() as u64 - nonempty {
+            return Err(format!(
+                "fills {} != nnz(G) {} − nonempty {nonempty}",
+                f.stats.fills,
+                f.nnz()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The factor's quadratic form is PSD: `xᵀ G D Gᵀ x ≥ 0` for all x
+/// (D ≥ 0 by construction).
+#[test]
+fn factor_operator_is_psd() {
+    forall_seeds(12, |seed| {
+        let l = generators::random_connected(80, 140, seed);
+        let f = factorize(&l, &opts(seed, Ordering::Amd, Engine::Seq)).unwrap();
+        let mut rng = parac::rng::Rng::new(seed ^ 0xF00);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..80).map(|_| rng.next_normal()).collect();
+            let q = parac::sparse::ops::dot(&x, &f.apply(&x));
+            if q < -1e-9 {
+                return Err(format!("negative quadratic form {q}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Arena sizing is self-healing: absurdly small initial estimates still
+/// produce the *same* factor after internal retries.
+#[test]
+fn arena_retry_preserves_determinism() {
+    forall_seeds(8, |seed| {
+        let l = generators::pref_attach(300, 5, seed);
+        let normal = factorize(&l, &opts(seed, Ordering::Natural, Engine::Cpu { threads: 2 }))
+            .unwrap();
+        let mut tight = opts(seed, Ordering::Natural, Engine::Cpu { threads: 2 });
+        tight.arena_factor = 0.02;
+        let retried = factorize(&l, &tight).unwrap();
+        if normal.g != retried.g || normal.diag != retried.diag {
+            return Err("retry changed the factor".into());
+        }
+        Ok(())
+    });
+}
+
+/// Permuted solves are consistent: preconditioner apply must be
+/// symmetric (`⟨M⁻¹u, v⟩ = ⟨u, M⁻¹v⟩`) — required by PCG — for every
+/// ordering.
+#[test]
+fn precond_apply_is_symmetric() {
+    forall_seeds(8, |seed| {
+        let l = generators::random_connected(100, 170, seed);
+        for ord in [Ordering::Amd, Ordering::NnzSort, Ordering::Random, Ordering::Rcm] {
+            let f = factorize(&l, &opts(seed, ord, Engine::Seq)).unwrap();
+            let pre = parac::precond::LdlPrecond::new(f);
+            let mut rng = parac::rng::Rng::new(seed ^ 0xABC);
+            let u: Vec<f64> = (0..100).map(|_| rng.next_normal()).collect();
+            let v: Vec<f64> = (0..100).map(|_| rng.next_normal()).collect();
+            use parac::precond::Preconditioner;
+            let left = parac::sparse::ops::dot(&pre.apply(&u), &v);
+            let right = parac::sparse::ops::dot(&u, &pre.apply(&v));
+            if (left - right).abs() > 1e-9 * left.abs().max(1.0) {
+                return Err(format!("{ord:?}: asymmetric apply {left} vs {right}"));
+            }
+        }
+        Ok(())
+    });
+}
