@@ -1,6 +1,10 @@
 //! Shared bench-harness helpers (no criterion offline — each bench is a
 //! `harness = false` binary printing paper-style tables).
 
+// Each bench binary compiles its own copy of this module and uses a
+// subset of the helpers.
+#![allow(dead_code)]
+
 use parac::graph::suite::Scale;
 
 /// Scale selected by `PARAC_SCALE` (tiny|small|medium), default small.

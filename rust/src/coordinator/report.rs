@@ -31,7 +31,7 @@ impl Table {
         let mut out = String::new();
         let fmt_row = |cells: &[String], widths: &[usize]| -> String {
             let mut s = String::from("|");
-            for (c, w) in cells.iter().zip(widths) {
+            for (c, &w) in cells.iter().zip(widths) {
                 s.push_str(&format!(" {:<w$} |", c, w = w));
             }
             s.push('\n');

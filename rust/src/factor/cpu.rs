@@ -19,7 +19,6 @@
 
 use super::chunk::{Bump, FillArena, SharedBuf, NIL};
 use super::depend::DepCounts;
-use super::ldl;
 use super::queue::JobQueue;
 use super::sample;
 use super::stats::{FactorStats, StatsCollector};
@@ -257,9 +256,6 @@ fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
     let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
     (g, diag)
 }
-
-/// Re-exported for the engine-equivalence tests.
-pub use ldl::LdlFactor as _Factor;
 
 #[cfg(test)]
 mod tests {

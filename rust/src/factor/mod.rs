@@ -130,6 +130,35 @@ impl std::error::Error for FactorError {}
 /// Factor a Laplacian: compute the ordering, permute, run the engine
 /// (retrying with a larger arena if the fill estimate was too small), and
 /// wrap the result with its permutation.
+///
+/// # Example
+///
+/// The `examples/quickstart.rs` flow in miniature: generate a Laplacian,
+/// factor it with the parallel CPU engine, and use the factor as a PCG
+/// preconditioner.
+///
+/// ```
+/// use parac::factor::{factorize, Engine, ParacOptions};
+/// use parac::graph::generators::{self, Coeff};
+/// use parac::ordering::Ordering;
+/// use parac::precond::LdlPrecond;
+/// use parac::solve::pcg::{self, PcgOptions};
+///
+/// let lap = generators::grid2d(12, 12, Coeff::Uniform, 42);
+/// let opts = ParacOptions {
+///     ordering: Ordering::NnzSort,
+///     engine: Engine::Cpu { threads: 2 },
+///     seed: 7,
+///     ..Default::default()
+/// };
+/// let factor = factorize(&lap, &opts).expect("factorization");
+/// assert_eq!(factor.n(), lap.n());
+///
+/// let pre = LdlPrecond::new(factor);
+/// let b = pcg::random_rhs(&lap, 1);
+/// let out = pcg::solve(&lap.matrix, &b, &pre, &PcgOptions::default());
+/// assert!(out.converged, "rel residual {}", out.rel_residual);
+/// ```
 pub fn factorize(lap: &Laplacian, opts: &ParacOptions) -> Result<LdlFactor, FactorError> {
     factorize_pinned(lap, opts, None)
 }

@@ -42,8 +42,11 @@ pub struct Workspace {
     /// hash(v): start slot per vertex.
     base: Vec<usize>,
     cap: usize,
-    /// Total probe steps + max probe distance (perf counters).
+    /// Total probe steps across all inserts and gathers (perf counter,
+    /// reported as [`crate::factor::FactorStats::probe_steps`]).
     pub probe_steps: AtomicU64,
+    /// Worst probe distance observed (perf counter, reported as
+    /// [`crate::factor::FactorStats::max_probe`]).
     pub max_probe: AtomicU64,
 }
 

@@ -1,6 +1,18 @@
 //! Graph / Laplacian substrate: Laplacian construction and validation,
 //! SDD→Laplacian grounding, synthetic workload generators mirroring the
 //! paper's matrix suite (Table 1), and the named benchmark suite.
+//!
+//! * [`laplacian`] — the [`Laplacian`] operator type ([`LapKind::Graph`]
+//!   singular vs [`LapKind::Grounded`] SPD), edge-list construction,
+//!   invariant validation, and the rchol ground-vertex extension for SPD
+//!   SDD M-matrices.
+//! * [`doubling`] — Gremban's bipartite double cover, reducing SDD
+//!   matrices with positive off-diagonals to Laplacians.
+//! * [`generators`] — scaled synthetic analogues of each matrix class
+//!   the paper evaluates (meshes, roads, social networks, Poisson
+//!   variants) plus stress-test graphs (path, star, complete, trees).
+//! * [`suite`] — the named benchmark suite in Table 1 order, used by
+//!   every repro driver so report rows line up with the paper's.
 
 pub mod doubling;
 pub mod generators;

@@ -19,13 +19,24 @@
 //!   `hash(v) + fill_count(v)` insertion, random-permutation hashing,
 //!   block-level sort/scan primitives).
 //!
+//! The documented entry point is [`factor::factorize`]: ordering →
+//! permutation → engine dispatch (with arena-overflow retry) → an
+//! [`factor::LdlFactor`] that plugs into PCG as
+//! [`precond::LdlPrecond`]. See `examples/quickstart.rs` for the
+//! minimal end-to-end flow.
+//!
 //! Alongside the core contribution the crate ships every substrate the
-//! paper's evaluation depends on: sparse kernels, graph generators
-//! mirroring the paper's matrix suite, orderings (AMD, nnz-sort, random,
-//! RCM), elimination-tree analytics, PCG with level-scheduled triangular
-//! solves, and baseline preconditioners (IC(0), ICT, smoothed-aggregation
-//! AMG, Jacobi). A PJRT runtime loads AOT-compiled JAX/Pallas artifacts
-//! for the L1/L2 layers (see `python/compile/`).
+//! paper's evaluation depends on: sparse kernels ([`sparse`]), graph
+//! generators mirroring the paper's matrix suite ([`graph`]), orderings
+//! (AMD, nnz-sort, random, RCM — [`ordering`]), elimination-tree
+//! analytics ([`etree`]), PCG with level-scheduled triangular solves
+//! ([`solve`]), and baseline preconditioners (IC(0), ICT,
+//! smoothed-aggregation AMG, Jacobi — [`precond`]). A PJRT runtime
+//! ([`runtime`], gated behind the off-by-default `xla` cargo feature)
+//! loads AOT-compiled JAX/Pallas artifacts for the L1/L2 layers (see
+//! `python/compile/`).
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod coordinator;

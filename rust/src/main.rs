@@ -33,7 +33,7 @@ USAGE:
                [--ordering amd|nnz|random|natural|rcm] [--seed S]
   parac solve  --matrix NAME [--method parac|ichol0|icholt|amg|jacobi]
                [--tol 1e-8] [--max-iter 1000] [engine/ordering flags]
-  parac repro table2|table3|fig3|fig4 [--scale small|medium] [--threads T]
+  parac repro table2|table3|fig3|fig4|hash [--scale tiny|small|medium] [--threads T]
 "
     );
 }

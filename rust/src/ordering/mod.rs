@@ -6,7 +6,10 @@
 //! is included as an extra locality baseline, and `Natural` as control.
 //!
 //! A permutation here is a map `perm[old] = new`; applying it relabels
-//! vertex `old` as `new` before factorization (`L' = P L Pᵀ`).
+//! vertex `old` as `new` before factorization (`L' = P L Pᵀ`). The
+//! [`Ordering`] selector computes one via [`amd`], [`nnz_sort`],
+//! [`random`], or [`rcm`]; [`perm`] holds the inverse/compose/apply
+//! utilities the factor and solvers share.
 
 pub mod amd;
 pub mod nnz_sort;

@@ -200,7 +200,8 @@ impl Preconditioner for IcholT {
     }
 
     fn nnz(&self) -> usize {
-        self.nnz()
+        // Explicitly the inherent method (same name as this trait method).
+        IcholT::nnz(self)
     }
 }
 

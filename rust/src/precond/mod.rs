@@ -7,7 +7,12 @@
 //! | MATLAB `ichol('ict')`     | [`icholt::IcholT`] (threshold drop)   |
 //! | cuSPARSE `csric02` (IC0)  | [`ichol0::Ichol0`] (zero fill-in)     |
 //! | HyPre / AmgX (AMG)        | [`amg::AmgPrecond`] (smoothed aggr.)  |
-//! | –                         | [`JacobiPrecond`], [`IdentityPrecond`]|
+//! | –                         | [`Ssor`], [`JacobiPrecond`], [`IdentityPrecond`] |
+//!
+//! Everything implements [`Preconditioner`], the symmetric-apply trait
+//! [`crate::solve::pcg::solve`] consumes; [`LdlPrecond`] wraps the ParAC
+//! [`crate::factor::LdlFactor`] with sequential or level-scheduled
+//! parallel triangular solves.
 
 pub mod amg;
 pub mod ichol0;

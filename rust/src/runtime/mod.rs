@@ -2,6 +2,12 @@
 //! compile path (`python/compile/aot.py`) and executes them on the CPU
 //! PJRT client. Python never runs at solve time; the rust binary is
 //! self-contained once `make artifacts` has produced `artifacts/`.
+//!
+//! The PJRT backend needs the `xla` crate and is gated behind the
+//! off-by-default `xla` cargo feature (see [`pjrt`] for details). The
+//! default build keeps the whole API and fails soft at runtime, so the
+//! rest of the crate — including [`sampler`], the CLI, and the benches —
+//! builds and runs without it.
 
 pub mod pjrt;
 pub mod sampler;

@@ -13,6 +13,10 @@
 //! bit-compatible in distribution (identical draws feed an identical
 //! inverse-CDF; tiny f32-vs-f64 CDF rounding can pick a different
 //! partner only when two cumulative weights collide at f32 precision).
+//!
+//! Without the `xla` cargo feature the [`Artifacts`] store never opens,
+//! so [`HloSampler`] is unreachable in default builds; callers fall back
+//! to [`native_reference`] / the native engines.
 
 use super::pjrt::Artifacts;
 use crate::factor::sample;

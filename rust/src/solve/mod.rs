@@ -1,5 +1,16 @@
-//! Iterative solvers: preconditioned conjugate gradients and (level-
-//! scheduled) sparse triangular solves.
+//! Iterative solvers for the factored systems.
+//!
+//! * [`pcg`] — preconditioned conjugate gradients with optional
+//!   mean-zero nullspace projection (singular graph Laplacians) and a
+//!   recomputed true-residual check on exit; [`pcg::random_rhs`] builds
+//!   the reproducible unit-norm right-hand sides every experiment uses.
+//! * [`trisolve`] — level-scheduled parallel triangular solves with the
+//!   unit-lower factor `G`: [`trisolve::LevelSchedule`] groups columns
+//!   by depth in the solve DAG once per factor ("analysis"), then
+//!   forward/backward sweeps run each level in parallel — mirroring
+//!   cuSPARSE's SPSV analysis/solve split (paper §6.2). The sequential
+//!   alternative lives on [`crate::factor::LdlFactor`] itself
+//!   (`forward_inplace` / `backward_inplace` / `solve`).
 
 pub mod pcg;
 pub mod trisolve;

@@ -2,6 +2,17 @@
 //! MatrixMarket IO, and the kernels (SpMV, SpGEMM, permutation,
 //! transpose) the rest of the crate is built on.
 //!
+//! * [`Coo`] is the mutable builder format (generators assemble here,
+//!   [`Coo::to_csr`] sorts/dedups/compresses).
+//! * [`Csr`] is the primary operator format (SpMV, symmetric
+//!   permutation, validation).
+//! * [`Csc`] stores triangular-factor columns (strictly lower).
+//! * [`Ell`] is the fixed-shape padded layout consumed by the
+//!   AOT-compiled Pallas SpMV kernel.
+//! * [`mm`] reads/writes MatrixMarket coordinate files; [`ops`] holds
+//!   BLAS-1 helpers, Gustavson SpGEMM, and the small dense Cholesky used
+//!   at the AMG coarsest level.
+//!
 //! Conventions:
 //! * Row/column indices are `u32` (matrices up to 4·10⁹ rows — far beyond
 //!   the paper's largest testcase), values are `f64`.
