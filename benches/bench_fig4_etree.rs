@@ -7,5 +7,8 @@ mod bench_common;
 fn main() {
     let scale = bench_common::bench_scale();
     let blocks = bench_common::bench_threads();
-    parac::coordinator::repro::fig4(scale, blocks);
+    if let Err(e) = parac::coordinator::repro::fig4(scale, blocks) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
 }

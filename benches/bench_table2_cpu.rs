@@ -6,5 +6,8 @@ mod bench_common;
 fn main() {
     let scale = bench_common::bench_scale();
     let threads = bench_common::bench_threads();
-    parac::coordinator::repro::table2(scale, threads);
+    if let Err(e) = parac::coordinator::repro::table2(scale, threads) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
 }

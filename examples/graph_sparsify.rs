@@ -10,12 +10,11 @@
 //! ```
 
 use parac::cli::args::Args;
-use parac::factor::{factorize, ParacOptions};
 use parac::graph::generators::{self, Coeff};
 use parac::graph::Laplacian;
-use parac::precond::LdlPrecond;
 use parac::rng::Rng;
-use parac::solve::pcg::{self, PcgOptions};
+use parac::solve::pcg;
+use parac::solver::Solver;
 use parac::sparse::ops::dot;
 use parac::util::{fmt_count, timed};
 
@@ -34,10 +33,17 @@ fn main() {
         fmt_count(edges.len())
     );
 
-    // 1. ParAC factor once — the solver backbone for resistance estimates.
-    let (f, dt) = timed(|| factorize(&lap, &ParacOptions::default()).unwrap());
-    println!("ParAC factor: {:.3}s (fill ratio {:.2})", dt, f.fill_ratio(lap.matrix.nnz()));
-    let pre = LdlPrecond::new(f);
+    // 1. One ParAC solver session — factor once, then every sketch row
+    //    reuses the same factor and PCG workspace (allocation-free
+    //    iterations).
+    let (mut solver, dt) = timed(|| {
+        Solver::builder().tol(1e-6).max_iter(1000).build(&lap).expect("solver setup")
+    });
+    println!(
+        "ParAC session: {:.3}s setup (nnz(M)={})",
+        dt,
+        fmt_count(solver.preconditioner().nnz())
+    );
 
     // 2. JL sketch: R_eff(u,v) ≈ ‖Z(e_u − e_v)‖² with Z = Q W B L⁺, where
     //    B is the signed incidence, W the weights, Q random ±1/√k rows.
@@ -45,8 +51,8 @@ fn main() {
     let n = lap.n();
     let mut rng = Rng::new(99);
     let mut z_rows: Vec<Vec<f64>> = Vec::with_capacity(sketches);
-    let o = PcgOptions { tol: 1e-6, max_iter: 1000, ..Default::default() };
     let (_, t_sketch) = timed(|| {
+        let mut x = vec![0.0; n];
         for _ in 0..sketches {
             // y = (Q W^1/2 B)ᵀ q for a random ±1 edge-vector q.
             let mut y = vec![0.0; n];
@@ -56,8 +62,8 @@ fn main() {
                 y[u as usize] += c;
                 y[v as usize] -= c;
             }
-            let out = pcg::solve(&lap.matrix, &y, &pre, &o);
-            z_rows.push(out.x);
+            solver.solve_into(&y, &mut x).expect("sketch solve");
+            z_rows.push(x.clone());
         }
     });
     println!("sketch: {sketches} solves in {t_sketch:.2}s");

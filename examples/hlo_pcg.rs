@@ -11,9 +11,8 @@
 //! ```
 
 use parac::graph::generators::{self, Coeff};
-use parac::precond::JacobiPrecond;
 use parac::runtime::Artifacts;
-use parac::solve::pcg::{self, PcgOptions};
+use parac::solver::{PrecondKind, Solver};
 use parac::sparse::Ell;
 
 const N_PAD: usize = 4096;
@@ -73,14 +72,15 @@ fn main() -> anyhow::Result<()> {
         norms.last().copied().unwrap_or(0.0)
     );
 
-    // --- Native path: rust PCG with Jacobi on the same system. ---
+    // --- Native path: a Jacobi Solver session on the same SPD system
+    // (build_sdd: raw Csr, projection off). ---
     let t = std::time::Instant::now();
-    let native = pcg::solve(
-        &a,
-        &b,
-        &JacobiPrecond::new(&a),
-        &PcgOptions { project: false, tol: 1e-10, max_iter: 100, ..Default::default() },
-    );
+    let mut session = Solver::builder()
+        .preconditioner(PrecondKind::Jacobi)
+        .tol(1e-10)
+        .max_iter(100)
+        .build_sdd(&a)?;
+    let native = session.solve(&b)?;
     let dt_native = t.elapsed().as_secs_f64();
     println!(
         "native PCG: {} iterations in {:.3}s, rel residual {:.3e}",

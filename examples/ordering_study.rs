@@ -13,8 +13,8 @@ use parac::etree;
 use parac::factor::{factorize, Engine, ParacOptions};
 use parac::graph::suite::{self, Scale};
 use parac::ordering::Ordering;
-use parac::precond::LdlPrecond;
-use parac::solve::pcg::{self, PcgOptions};
+use parac::solve::pcg;
+use parac::solver::Solver;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -53,15 +53,14 @@ fn main() {
     let mut t2 = Table::new(&["sort by weight", "PCG iters", "rel residual"]);
     let b = pcg::random_rhs(&lap, 17);
     for sort in [true, false] {
-        let opts = ParacOptions { sort_by_weight: sort, seed: 5, ..Default::default() };
-        let f = factorize(&lap, &opts).unwrap();
-        let pre = LdlPrecond::new(f);
-        let out = pcg::solve(
-            &lap.matrix,
-            &b,
-            &pre,
-            &PcgOptions { max_iter: 2000, tol: 1e-8, ..Default::default() },
-        );
+        let mut solver = Solver::builder()
+            .sort_by_weight(sort)
+            .seed(5)
+            .max_iter(2000)
+            .tol(1e-8)
+            .build(&lap)
+            .expect("solver setup");
+        let out = solver.solve(&b).expect("dimensions match");
         t2.row(vec![sort.to_string(), out.iters.to_string(), format!("{:.2e}", out.rel_residual)]);
     }
     print!("{}", t2.render());

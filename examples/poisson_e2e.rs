@@ -37,6 +37,7 @@ fn main() {
         ("ichol(0)", Method::Ichol0),
         ("ichol-t", Method::IcholT { droptol: Some(1e-3), fill_target: None }),
         ("AMG", Method::Amg),
+        ("SSOR", Method::Ssor { omega: 1.5 }),
         ("Jacobi", Method::Jacobi),
     ];
 
@@ -44,9 +45,17 @@ fn main() {
         "method", "setup (s)", "solve (s)", "total (s)", "iters", "rel residual", "nnz(M)",
     ]);
     let mut all_ok = true;
+    let mut rows = Vec::new();
     for (label, m) in &methods {
-        let r = pipeline::run_with_rhs(&lap, m, &o, &b);
+        let r = match pipeline::run_with_rhs(&lap, m, &o, &b) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error running {label}: {e}");
+                std::process::exit(1);
+            }
+        };
         all_ok &= r.converged || *label == "Jacobi"; // Jacobi may exhaust iters
+        rows.push(r.clone());
         table.row(vec![
             label.to_string(),
             secs(r.setup_secs),
@@ -62,6 +71,14 @@ fn main() {
     }
     println!();
     print!("{}", table.render());
+
+    // Machine-readable perf trajectory for future PRs to diff against.
+    let json_path = std::path::Path::new("BENCH_pipeline.json");
+    match pipeline::write_bench_json(json_path, &format!("poisson_e2e n={n}"), &rows) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", json_path.display()),
+    }
+
     assert!(all_ok, "a preconditioned method failed to converge");
     println!("\nE2E OK");
 }

@@ -1,17 +1,19 @@
-//! Quickstart: build a Laplacian, factor it with ParAC, solve with PCG.
+//! Quickstart: build a Laplacian, open a `Solver` session, solve
+//! several right-hand sides against one factor and one workspace.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use parac::factor::{factorize, Engine, ParacOptions};
+use parac::error::ParacError;
+use parac::factor::Engine;
 use parac::graph::generators::{self, Coeff};
 use parac::ordering::Ordering;
-use parac::precond::LdlPrecond;
-use parac::solve::pcg::{self, PcgOptions};
+use parac::solve::pcg;
+use parac::solver::Solver;
 use parac::util::{fmt_count, fmt_duration, timed};
 
-fn main() {
+fn main() -> Result<(), ParacError> {
     // 1. A Laplacian: 3D Poisson on a 24³ grid (13.8k vertices).
     let lap = generators::grid3d(24, 24, 24, Coeff::Uniform, 42);
     println!(
@@ -21,33 +23,44 @@ fn main() {
         fmt_count(lap.matrix.nnz())
     );
 
-    // 2. Factor with the parallel CPU engine and nnz-sort ordering.
-    let opts = ParacOptions {
-        ordering: Ordering::NnzSort,
-        engine: Engine::Cpu { threads: 0 }, // auto
-        seed: 7,
-        ..Default::default()
-    };
-    let (factor, dt) = timed(|| factorize(&lap, &opts).expect("factorization"));
+    // 2. Configure + factor once: the builder carries ordering, engine,
+    //    seed, and PCG tolerances; `build` runs the parallel CPU engine.
+    let (solver, dt) = timed(|| {
+        Solver::builder()
+            .ordering(Ordering::NnzSort)
+            .engine(Engine::Cpu { threads: 0 }) // auto
+            .seed(7)
+            .build(&lap)
+    });
+    let mut solver = solver?;
+    let stats = solver.factor_stats().expect("ParAC factor present");
     println!(
-        "factor: {} in {}  (nnz(G)={}, fill ratio {:.2})",
-        opts.engine.name(),
+        "factor: cpu in {}  (nnz(M)={}, {})",
         fmt_duration(dt),
-        fmt_count(factor.nnz()),
-        factor.fill_ratio(lap.matrix.nnz()),
+        fmt_count(solver.preconditioner().nnz()),
+        stats.summary(),
     );
 
-    // 3. Solve L x = b with ParAC-preconditioned CG.
-    let b = pcg::random_rhs(&lap, 1);
-    let pre = LdlPrecond::new(factor);
-    let (out, ds) = timed(|| pcg::solve(&lap.matrix, &b, &pre, &PcgOptions::default()));
-    println!(
-        "solve: {} iterations in {}  (relative residual {:.2e}, converged={})",
-        out.iters,
-        fmt_duration(ds),
-        out.rel_residual,
-        out.converged,
-    );
-    assert!(out.converged, "quickstart must converge");
+    // 3. Solve several right-hand sides with the same session — the
+    //    factor and the PCG workspace are reused; no per-solve setup,
+    //    zero allocations per iteration.
+    let mut x = vec![0.0; lap.n()];
+    for seed in 1..=3u64 {
+        let b = pcg::random_rhs(&lap, seed);
+        let (out, ds) = {
+            let t = parac::util::Timer::start();
+            let out = solver.solve_into(&b, &mut x)?;
+            (out, t.secs())
+        };
+        println!(
+            "solve rhs#{seed}: {} iterations in {}  (relative residual {:.2e}, converged={})",
+            out.iters,
+            fmt_duration(ds),
+            out.rel_residual,
+            out.converged,
+        );
+        assert!(out.converged, "quickstart must converge");
+    }
     println!("OK");
+    Ok(())
 }

@@ -10,10 +10,11 @@
 //! round's system. The per-round cost is the paper's headline
 //! "construction ≪ solve" economics in a loop.
 
+use crate::error::ParacError;
 use crate::factor::{self, ParacOptions};
 use crate::graph::Laplacian;
 use crate::precond::LdlPrecond;
-use crate::solve::pcg::{self, PcgOptions};
+use crate::solve::pcg::{self, PcgOptions, PcgWorkspace};
 use crate::util::Timer;
 use std::collections::HashMap;
 
@@ -50,6 +51,9 @@ pub struct IncrementalSession {
     opts: ParacOptions,
     pcg: PcgOptions,
     round: usize,
+    /// Krylov buffers reused across rounds (the graph changes, the
+    /// dimension doesn't).
+    ws: PcgWorkspace,
 }
 
 impl IncrementalSession {
@@ -59,7 +63,8 @@ impl IncrementalSession {
         for (u, v, w) in initial.edges() {
             edges.insert((u.min(v), u.max(v)), w);
         }
-        IncrementalSession { n: initial.n(), edges, opts, pcg, round: 0 }
+        let n = initial.n();
+        IncrementalSession { n, edges, opts, pcg, round: 0, ws: PcgWorkspace::new(n) }
     }
 
     /// Number of live edges.
@@ -68,8 +73,20 @@ impl IncrementalSession {
     }
 
     /// Apply a batch, refactor, solve `L x = b`. Returns the report and
-    /// the solution.
-    pub fn step(&mut self, batch: &UpdateBatch, b: &[f64]) -> (RoundReport, Vec<f64>) {
+    /// the solution; factorization failures propagate as typed errors
+    /// (the batch is still applied — the session graph has moved on).
+    pub fn step(
+        &mut self,
+        batch: &UpdateBatch,
+        b: &[f64],
+    ) -> Result<(RoundReport, Vec<f64>), ParacError> {
+        if b.len() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "rhs",
+                expected: self.n,
+                got: b.len(),
+            });
+        }
         for &(u, v, w) in &batch.add {
             debug_assert!(w > 0.0);
             let key = (u.min(v), u.max(v));
@@ -89,12 +106,13 @@ impl IncrementalSession {
         // samples (Kyng–Pachocki–Peng–Sachdeva framework).
         let mut opts = self.opts.clone();
         opts.seed = self.opts.seed.wrapping_add(self.round as u64 * 0x9E37);
-        let f = factor::factorize(&lap, &opts).expect("round factorization");
+        let f = factor::factorize(&lap, &opts)?;
         let factor_secs = t.secs();
 
         let t = Timer::start();
         let pre = LdlPrecond::new(f);
-        let out = pcg::solve(&lap.matrix, b, &pre, &self.pcg);
+        let mut x = vec![0.0; self.n];
+        let out = pcg::solve_into(&lap.matrix, b, &pre, &self.pcg, &mut self.ws, &mut x);
         let solve_secs = t.secs();
 
         let report = RoundReport {
@@ -106,7 +124,7 @@ impl IncrementalSession {
             converged: out.converged,
         };
         self.round += 1;
-        (report, out.x)
+        Ok((report, x))
     }
 }
 
@@ -139,7 +157,7 @@ mod tests {
                     batch.add.push((u, v, rng.range_f64(0.5, 2.0)));
                 }
             }
-            let (rep, x) = sess.step(&batch, &b);
+            let (rep, x) = sess.step(&batch, &b).unwrap();
             assert!(rep.converged, "round {round}: rel residual too high");
             assert!(rep.iters < 200);
             assert!(x.iter().all(|v| v.is_finite()));
@@ -163,7 +181,7 @@ mod tests {
         let b = pcg::random_rhs(&lap, 1);
         // Vertex 0 is now isolated: the projected system on the rest
         // still solves; vertex 0's component is handled by zero pivots.
-        let (rep, _) = sess.step(&batch, &b);
+        let (rep, _) = sess.step(&batch, &b).unwrap();
         assert_eq!(sess.num_edges(), 21);
         assert!(rep.factor_secs >= 0.0);
     }
@@ -177,8 +195,8 @@ mod tests {
             PcgOptions { tol: 1e-6, max_iter: 300, ..Default::default() },
         );
         let b = pcg::random_rhs(&lap, 2);
-        let (r0, x0) = sess.step(&UpdateBatch::default(), &b);
-        let (r1, x1) = sess.step(&UpdateBatch::default(), &b);
+        let (r0, x0) = sess.step(&UpdateBatch::default(), &b).unwrap();
+        let (r1, x1) = sess.step(&UpdateBatch::default(), &b).unwrap();
         assert!(r0.converged && r1.converged);
         // Same graph, same rhs — but different sampled preconditioners:
         // iterates differ while both converge to the same solution.

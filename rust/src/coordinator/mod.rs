@@ -1,5 +1,12 @@
-//! Pipeline coordinator and experiment drivers (filled in alongside the
-//! runtime; see `pipeline` / `report` / repro drivers).
+//! Pipeline coordinator and experiment drivers.
+//!
+//! [`pipeline`] is a thin veneer over the [`crate::solver::Solver`]
+//! session API that measures setup/solve phases uniformly and renders
+//! [`pipeline::RunResult`] rows (including the machine-readable
+//! `BENCH_pipeline.json` via [`pipeline::write_bench_json`]);
+//! [`repro`] regenerates the paper's tables/figures; [`incremental`]
+//! runs the dynamic-graph resparsification loop. Everything returns
+//! typed [`crate::error::ParacError`]s — only binaries exit.
 
 pub mod incremental;
 pub mod pipeline;

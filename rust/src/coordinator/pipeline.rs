@@ -4,13 +4,21 @@
 //! [`run`] so timings are measured uniformly: `setup_secs` is
 //! preconditioner construction (ParAC factor time / ichol factor time /
 //! AMG setup time — the paper's "Factorize/Setup/Analysis" columns),
-//! `solve_secs` is the PCG loop.
+//! `solve_secs` is the PCG loop. Underneath, [`run_with_rhs`] is a thin
+//! veneer over the [`Solver`] session API: it translates a [`Method`]
+//! into a [`crate::solver::SolverBuilder`], builds, solves, and folds
+//! the outcome into a [`RunResult`] row. All failures come back as
+//! typed [`ParacError`]s — binaries decide whether to `?`-and-exit.
+//!
+//! [`write_bench_json`] serializes rows as hand-rolled JSON
+//! (`BENCH_pipeline.json`) so successive PRs can track the performance
+//! trajectory mechanically.
 
+use crate::error::ParacError;
 use crate::factor::{self, ParacOptions};
 use crate::graph::Laplacian;
-use crate::precond::amg::AmgOptions;
-use crate::precond::{AmgPrecond, Ichol0, IcholT, JacobiPrecond, LdlPrecond, Preconditioner};
 use crate::solve::pcg::{self, PcgOptions};
+use crate::solver::{PrecondKind, Solver, SolverBuilder};
 use crate::util::Timer;
 
 /// Which solver configuration to run.
@@ -18,27 +26,70 @@ use crate::util::Timer;
 pub enum Method {
     /// ParAC with the given options; `level_threads > 0` uses the
     /// level-scheduled parallel triangular solve.
-    Parac { opts: ParacOptions, level_threads: usize },
+    Parac {
+        /// Factorization options.
+        opts: ParacOptions,
+        /// Workers for the level-scheduled solve (0 = sequential).
+        level_threads: usize,
+    },
     /// Zero fill-in incomplete Cholesky (cuSPARSE `csric02` proxy).
     Ichol0,
     /// Threshold ICT; `droptol = None` calibrates fill to `fill_target`.
-    IcholT { droptol: Option<f64>, fill_target: Option<usize> },
+    IcholT {
+        /// Explicit drop tolerance (wins over `fill_target`).
+        droptol: Option<f64>,
+        /// Calibrate fill to this nonzero count when `droptol` is None.
+        fill_target: Option<usize>,
+    },
     /// Smoothed-aggregation AMG (HyPre / AmgX proxy).
     Amg,
     /// Jacobi diagonal scaling.
     Jacobi,
+    /// Symmetric SOR with the given relaxation factor.
+    Ssor {
+        /// Relaxation factor `ω ∈ (0, 2)`.
+        omega: f64,
+    },
+    /// No preconditioning (plain CG).
+    Identity,
 }
 
 impl Method {
     /// Display name for report rows.
     pub fn name(&self) -> &'static str {
+        self.precond_kind().name()
+    }
+
+    /// The preconditioner choice this method maps to.
+    pub fn precond_kind(&self) -> PrecondKind {
         match self {
-            Method::Parac { .. } => "ParAC",
-            Method::Ichol0 => "ichol(0)",
-            Method::IcholT { .. } => "ichol-t",
-            Method::Amg => "AMG",
-            Method::Jacobi => "Jacobi",
+            Method::Parac { level_threads, .. } => {
+                PrecondKind::Parac { level_threads: *level_threads }
+            }
+            Method::Ichol0 => PrecondKind::Ichol0,
+            Method::IcholT { droptol, fill_target } => {
+                PrecondKind::IcholT { droptol: *droptol, fill_target: *fill_target }
+            }
+            Method::Amg => PrecondKind::Amg,
+            Method::Jacobi => PrecondKind::Jacobi,
+            Method::Ssor { omega } => PrecondKind::Ssor { omega: *omega },
+            Method::Identity => PrecondKind::Identity,
         }
+    }
+
+    /// Translate into a [`SolverBuilder`] carrying these PCG options.
+    /// The caller's `project` flag is forwarded explicitly (pipeline
+    /// callers configure it verbatim; the builder's kind-based
+    /// auto-detection is for users who leave it unset).
+    pub fn solver_builder(&self, pcg_opts: &PcgOptions) -> SolverBuilder {
+        let mut b = Solver::builder()
+            .pcg_options(pcg_opts.clone())
+            .project(pcg_opts.project)
+            .preconditioner(self.precond_kind());
+        if let Method::Parac { opts, .. } = self {
+            b = b.parac_options(opts.clone());
+        }
+        b
     }
 }
 
@@ -63,8 +114,82 @@ pub struct RunResult {
     pub factor_stats: Option<crate::factor::FactorStats>,
 }
 
+impl RunResult {
+    /// Serialize as one JSON object (hand-rolled; no dependencies).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"method\":{},\"setup_secs\":{},\"solve_secs\":{},\"iters\":{},\
+             \"rel_residual\":{},\"converged\":{},\"nnz\":{}}}",
+            json_string(self.method),
+            json_f64(self.setup_secs),
+            json_f64(self.solve_secs),
+            self.iters,
+            json_f64(self.rel_residual),
+            self.converged,
+            self.nnz,
+        )
+    }
+}
+
+/// Render a string as a JSON string literal (quotes included), escaping
+/// backslashes, quotes, and control characters.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render an f64 as a JSON number (`null` for non-finite values, which
+/// JSON cannot represent).
+fn json_f64(x: f64) -> String {
+    // `{}` on f64 prints integers without a decimal point; that is
+    // still a valid JSON number, so no fixup needed.
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Write pipeline rows as a machine-readable JSON file (one `runs`
+/// array), e.g. `BENCH_pipeline.json` at the repo root — the perf
+/// trajectory artifact successive PRs diff against.
+pub fn write_bench_json(
+    path: &std::path::Path,
+    label: &str,
+    rows: &[RunResult],
+) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"bench\": {},\n", json_string(label)));
+    out.push_str("  \"runs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(&r.to_json());
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Run one method on one Laplacian with a seeded right-hand side.
-pub fn run(lap: &Laplacian, method: &Method, pcg_opts: &PcgOptions, rhs_seed: u64) -> RunResult {
+pub fn run(
+    lap: &Laplacian,
+    method: &Method,
+    pcg_opts: &PcgOptions,
+    rhs_seed: u64,
+) -> Result<RunResult, ParacError> {
     let b = pcg::random_rhs(lap, rhs_seed);
     run_with_rhs(lap, method, pcg_opts, &b)
 }
@@ -75,38 +200,18 @@ pub fn run_with_rhs(
     method: &Method,
     pcg_opts: &PcgOptions,
     b: &[f64],
-) -> RunResult {
+) -> Result<RunResult, ParacError> {
     let timer = Timer::start();
-    let (pre, factor_stats): (Box<dyn Preconditioner>, _) = match method {
-        Method::Parac { opts, level_threads } => {
-            let f = factor::factorize(lap, opts).expect("ParAC factorization failed");
-            let stats = f.stats.clone();
-            let pre: Box<dyn Preconditioner> = if *level_threads > 0 {
-                Box::new(LdlPrecond::with_level_schedule(f, *level_threads))
-            } else {
-                Box::new(LdlPrecond::new(f))
-            };
-            (pre, Some(stats))
-        }
-        Method::Ichol0 => (Box::new(Ichol0::new(&lap.matrix)), None),
-        Method::IcholT { droptol, fill_target } => {
-            let f = match (droptol, fill_target) {
-                (Some(t), _) => IcholT::new(&lap.matrix, *t),
-                (None, Some(nnz)) => IcholT::with_fill_target(&lap.matrix, *nnz),
-                (None, None) => IcholT::new(&lap.matrix, 1e-3),
-            };
-            (Box::new(f), None)
-        }
-        Method::Amg => (Box::new(AmgPrecond::new(&lap.matrix, &AmgOptions::default())), None),
-        Method::Jacobi => (Box::new(JacobiPrecond::new(&lap.matrix)), None),
-    };
+    let mut solver = method.solver_builder(pcg_opts).build(lap)?;
     let setup_secs = timer.secs();
-    let nnz = pre.nnz();
+    let nnz = solver.preconditioner().nnz();
+    let factor_stats = solver.factor_stats().cloned();
 
+    let mut x = vec![0.0; lap.n()];
     let t2 = Timer::start();
-    let out = pcg::solve(&lap.matrix, b, pre.as_ref(), pcg_opts);
+    let out = solver.solve_into(b, &mut x)?;
     let solve_secs = t2.secs();
-    RunResult {
+    Ok(RunResult {
         method: method.name(),
         setup_secs,
         solve_secs,
@@ -115,7 +220,7 @@ pub fn run_with_rhs(
         converged: out.converged,
         nnz,
         factor_stats,
-    }
+    })
 }
 
 /// The paper's default ParAC method for CPU tables (AMD ordering).
@@ -158,7 +263,7 @@ mod tests {
     fn parac_pipeline_end_to_end() {
         let lap = generators::grid2d(20, 20, generators::Coeff::Uniform, 0);
         let o = PcgOptions { max_iter: 500, tol: 1e-8, ..Default::default() };
-        let r = run(&lap, &parac_cpu_method(2, 1), &o, 7);
+        let r = run(&lap, &parac_cpu_method(2, 1), &o, 7).unwrap();
         assert!(r.converged, "rel={}", r.rel_residual);
         assert!(r.iters < 200);
         assert!(r.factor_stats.is_some());
@@ -175,9 +280,56 @@ mod tests {
             Method::IcholT { droptol: Some(1e-3), fill_target: None },
             Method::Amg,
             Method::Jacobi,
+            Method::Ssor { omega: 1.5 },
         ] {
-            let r = run(&lap, &m, &o, 11);
+            let r = run(&lap, &m, &o, 11).unwrap();
             assert!(r.converged, "{} rel={}", r.method, r.rel_residual);
         }
+    }
+
+    #[test]
+    fn bad_input_propagates_as_error() {
+        let empty = Laplacian::from_edges(0, &[], "empty");
+        let o = PcgOptions::default();
+        assert!(run(&empty, &Method::Jacobi, &o, 1).is_err());
+    }
+
+    #[test]
+    fn bench_json_is_wellformed() {
+        let r = RunResult {
+            method: "ParAC",
+            setup_secs: 0.25,
+            solve_secs: 1.5,
+            iters: 42,
+            rel_residual: 4.2e-8,
+            converged: true,
+            nnz: 1000,
+            factor_stats: None,
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"method\":\"ParAC\""));
+        assert!(j.contains("\"iters\":42"));
+        assert!(j.contains("\"converged\":true"));
+        // Non-finite residuals must serialize as null, not `NaN`.
+        let bad = RunResult { rel_residual: f64::NAN, ..r.clone() };
+        assert!(bad.to_json().contains("\"rel_residual\":null"));
+
+        let dir = std::env::temp_dir().join("parac_pipeline_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_pipeline.json");
+        write_bench_json(&path, "unit", &[r]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"bench\": \"unit\""));
+        assert!(body.contains("\"runs\": ["));
+    }
+
+    #[test]
+    fn json_strings_escape_specials() {
+        assert_eq!(json_string("plain"), "\"plain\"");
+        assert_eq!(json_string("a\\b"), "\"a\\\\b\"");
+        assert_eq!(json_string("say \"hi\""), "\"say \\\"hi\\\"\"");
+        assert_eq!(json_string("line\nbreak\ttab"), "\"line\\nbreak\\ttab\"");
+        assert_eq!(json_string("\u{1}"), "\"\\u0001\"");
     }
 }

@@ -2,15 +2,20 @@
 //! paper's evaluation (§6). Each prints a markdown table with the same
 //! rows and columns as the paper (matrix suite in Table 1 order) and is
 //! reachable both from `parac repro …` and from the bench harness.
+//!
+//! Every driver returns `Result<(), ParacError>` — failures propagate
+//! to the calling binary, which decides how to exit; nothing in here
+//! unwraps or panics on bad input.
 
 use super::pipeline::{self, Method};
 use super::report::{sci, secs, Table};
+use crate::error::ParacError;
 use crate::etree;
 use crate::factor::{self, Engine, ParacOptions};
 use crate::graph::suite::{Scale, SUITE};
 use crate::ordering::Ordering;
 use crate::solve::pcg::PcgOptions;
-use crate::util::{default_threads, fmt_count, timed, Timer};
+use crate::util::{default_threads, fmt_count, Timer};
 
 fn pcg_opts() -> PcgOptions {
     // Paper tables converge to ~1e-6..1e-7 relative residual.
@@ -27,7 +32,7 @@ fn workers(threads: usize) -> usize {
 
 /// Table 2 — CPU convergence: ParAC (AMD) vs fill-matched ICT vs AMG
 /// (HyPre proxy).
-pub fn table2(scale: Scale, threads: usize) {
+pub fn table2(scale: Scale, threads: usize) -> Result<(), ParacError> {
     let t = workers(threads);
     println!("## Table 2 (CPU): ParAC vs ichol-t vs AMG  [scale {scale:?}, {t} threads]\n");
     let mut tab = Table::new(&[
@@ -37,15 +42,15 @@ pub fn table2(scale: Scale, threads: usize) {
     for e in SUITE {
         let lap = (e.build)(scale);
         let o = pcg_opts();
-        let rp = pipeline::run(&lap, &pipeline::parac_cpu_method(t, 1), &o, 7);
+        let rp = pipeline::run(&lap, &pipeline::parac_cpu_method(t, 1), &o, 7)?;
         let target = rp.nnz;
         let ri = pipeline::run(
             &lap,
             &Method::IcholT { droptol: None, fill_target: Some(target) },
             &o,
             7,
-        );
-        let ra = pipeline::run(&lap, &Method::Amg, &o, 7);
+        )?;
+        let ra = pipeline::run(&lap, &Method::Amg, &o, 7)?;
         tab.row(vec![
             e.name.into(),
             secs(rp.setup_secs),
@@ -63,11 +68,12 @@ pub fn table2(scale: Scale, threads: usize) {
         ]);
     }
     print!("{}", tab.render());
+    Ok(())
 }
 
 /// Table 3 — GPU-model results: ParAC (gpusim, nnz-sort, level-parallel
 /// SPSV) vs AMG (AmgX proxy) vs IC(0)+CG (cuSPARSE proxy). Times in ms.
-pub fn table3(scale: Scale, blocks: usize) {
+pub fn table3(scale: Scale, blocks: usize) -> Result<(), ParacError> {
     let b = workers(blocks);
     println!(
         "## Table 3 (GPU model): ParAC(nnz-sort) vs AMG vs ichol(0)  [scale {scale:?}, {b} blocks]\n"
@@ -80,9 +86,9 @@ pub fn table3(scale: Scale, blocks: usize) {
     for e in SUITE {
         let lap = (e.build)(scale);
         let o = PcgOptions { tol: 1e-7, max_iter: 10_000, ..Default::default() };
-        let rp = pipeline::run(&lap, &pipeline::parac_gpu_method(b, 1), &o, 7);
-        let ra = pipeline::run(&lap, &Method::Amg, &pcg_opts(), 7);
-        let r0 = pipeline::run(&lap, &Method::Ichol0, &o, 7);
+        let rp = pipeline::run(&lap, &pipeline::parac_gpu_method(b, 1), &o, 7)?;
+        let ra = pipeline::run(&lap, &Method::Amg, &pcg_opts(), 7)?;
+        let r0 = pipeline::run(&lap, &Method::Ichol0, &o, 7)?;
         tab.row(vec![
             e.name.into(),
             format!("{:.1}", rp.setup_secs * 1e3),
@@ -100,15 +106,18 @@ pub fn table3(scale: Scale, blocks: usize) {
         ]);
     }
     print!("{}", tab.render());
+    Ok(())
 }
 
 /// Figure 3 — CPU factor-time scaling over threads for the three
 /// orderings.
-pub fn fig3(scale: Scale, max_threads: usize) {
+pub fn fig3(scale: Scale, max_threads: usize) -> Result<(), ParacError> {
     let maxt = workers(max_threads);
     let mut counts = vec![1usize];
-    while counts.last().unwrap() * 2 <= maxt {
-        counts.push(counts.last().unwrap() * 2);
+    let mut c = 1usize;
+    while c * 2 <= maxt {
+        c *= 2;
+        counts.push(c);
     }
     println!("## Figure 3: CPU factor time (s) vs threads  [scale {scale:?}]\n");
     let mut headers: Vec<String> = vec!["problem".into(), "ordering".into()];
@@ -127,23 +136,26 @@ pub fn fig3(scale: Scale, max_threads: usize) {
                     seed: 1,
                     ..Default::default()
                 };
-                let (_, dt) = timed(|| factor::factorize(&lap, &opts).unwrap());
-                times.push(dt);
+                let timer = Timer::start();
+                factor::factorize(&lap, &opts)?;
+                times.push(timer.secs());
             }
             let mut row = vec![e.name.to_string(), ord.name().to_string()];
             row.extend(times.iter().map(|t| format!("{t:.3}")));
-            row.push(format!("{:.1}x", times[0] / times.last().unwrap().max(1e-9)));
+            let last = times.last().copied().unwrap_or(times[0]);
+            row.push(format!("{:.1}x", times[0] / last.max(1e-9)));
             tab.row(row);
         }
     }
     print!("{}", tab.render());
+    Ok(())
 }
 
 /// Hash-ablation (§5.3.4 / §7.1): random-permutation vs identity hash
 /// codes in the gpusim workspace — probe-length and wall-time impact.
 /// The factor itself is hash-independent (pinned by tests); only the
 /// probing behaviour changes.
-pub fn hash_ablation(scale: Scale, blocks: usize) {
+pub fn hash_ablation(scale: Scale, blocks: usize) -> Result<(), ParacError> {
     use crate::factor::gpusim::factorize_csr_hash;
     use crate::gpusim::hashmap::HashKind;
     let b = workers(blocks);
@@ -152,14 +164,14 @@ pub fn hash_ablation(scale: Scale, blocks: usize) {
         "problem", "hash", "factor(ms)", "max probe", "probe steps / fill",
     ]);
     for name in ["uniform_3d_poisson", "com-LiveJournal", "GAP-road", "G3_circuit"] {
-        let e = crate::graph::suite::by_name(name).unwrap();
+        let e = crate::graph::suite::by_name(name)
+            .ok_or_else(|| ParacError::BadInput(format!("unknown suite matrix {name}")))?;
         let lap = (e.build)(scale);
         let perm = Ordering::NnzSort.compute(&lap, 1);
         let permuted = lap.matrix.permute_sym(&perm);
         for (kind, label) in [(HashKind::RandomPerm, "random-perm"), (HashKind::Identity, "identity")] {
             let timer = Timer::start();
-            let (_, _, stats) =
-                factorize_csr_hash(&permuted, 1, true, b, 6.0, kind, false).unwrap();
+            let (_, _, stats) = factorize_csr_hash(&permuted, 1, true, b, 6.0, kind, false)?;
             let dt = timer.secs();
             tab.row(vec![
                 e.name.into(),
@@ -171,11 +183,12 @@ pub fn hash_ablation(scale: Scale, blocks: usize) {
         }
     }
     print!("{}", tab.render());
+    Ok(())
 }
 
 /// Figure 4 — e-tree heights, triangular-solve critical path, gpusim
 /// factor time, and fill ratio per ordering.
-pub fn fig4(scale: Scale, blocks: usize) {
+pub fn fig4(scale: Scale, blocks: usize) -> Result<(), ParacError> {
     let b = workers(blocks);
     println!("## Figure 4: e-tree depth / critical path / GPU-model time / fill  [scale {scale:?}]\n");
     let mut tab = Table::new(&[
@@ -192,11 +205,13 @@ pub fn fig4(scale: Scale, blocks: usize) {
                 ..Default::default()
             };
             let timer = Timer::start();
-            let f = factor::factorize(&lap, &opts).unwrap();
+            let f = factor::factorize(&lap, &opts)?;
             let dt = timer.secs();
             // Heights are measured on the *permuted* matrix (the one the
             // elimination actually ran on).
-            let perm = f.perm.clone().unwrap();
+            let perm = f.perm.clone().ok_or_else(|| {
+                ParacError::BadInput("factorize returned no permutation".into())
+            })?;
             let permuted = lap.matrix.permute_sym(&perm);
             let rep = etree::report(&permuted, &f.g);
             tab.row(vec![
@@ -219,4 +234,5 @@ pub fn fig4(scale: Scale, blocks: usize) {
             .collect::<Vec<_>>()
             .join(", ")
     );
+    Ok(())
 }

@@ -1,0 +1,101 @@
+//! The crate-wide typed error: everything a `parac` entry point can
+//! fail with, in one enum.
+//!
+//! Design rules (the `Solver` session-API contract):
+//!
+//! * **Bad input is an error, not a panic.** Every failure reachable
+//!   from the public [`crate::solver::Solver`] / pipeline surface comes
+//!   back as a [`ParacError`]; panics are reserved for internal
+//!   invariant violations (engine bugs), never for caller mistakes.
+//! * **Non-convergence is data, not an error.** PCG exhausting its
+//!   iteration budget is a legitimate outcome the caller inspects via
+//!   `converged` / `rel_residual` on the solve result — it does *not*
+//!   produce an `Err`.
+//! * **Library code propagates, binaries decide.** `coordinator` and
+//!   `solver` return `Result`; only `main.rs` and the bench/example
+//!   binaries are allowed to `?`-and-exit (or unwrap).
+//!
+//! [`ParacError`] absorbs the former `factor::FactorError` (which is
+//! now a deprecated alias) so factorization, preconditioner setup, and
+//! solving share one error channel.
+
+/// Everything that can go wrong inside the `parac` library surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParacError {
+    /// The shared fill arena filled up (estimate too small). `factorize`
+    /// retries internally with a doubled arena; this escapes only after
+    /// repeated doubling hit the hard ceiling.
+    ArenaFull {
+        /// Node capacity of the arena that overflowed.
+        capacity: usize,
+    },
+    /// The workspace hash map of the gpusim engine overflowed.
+    WorkspaceFull {
+        /// Slot capacity of the workspace that overflowed.
+        capacity: usize,
+    },
+    /// Input is not a valid operator for the requested action (empty or
+    /// non-square matrix, non-Laplacian structure, unrecoverable
+    /// incomplete-factorization breakdown, …).
+    BadInput(String),
+    /// A vector argument's length does not match the solver dimension.
+    DimensionMismatch {
+        /// Which argument mismatched (`"rhs"`, `"solution"`, …).
+        what: &'static str,
+        /// The solver/operator dimension.
+        expected: usize,
+        /// The length actually supplied.
+        got: usize,
+    },
+    /// A configuration knob was given an unparseable / out-of-range
+    /// value (engine name, ordering name, SSOR relaxation factor, …).
+    InvalidOption {
+        /// Which knob was rejected.
+        what: &'static str,
+        /// The offending value, rendered for the message.
+        got: String,
+    },
+}
+
+impl std::fmt::Display for ParacError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParacError::ArenaFull { capacity } => {
+                write!(f, "fill arena full ({capacity} nodes)")
+            }
+            ParacError::WorkspaceFull { capacity } => {
+                write!(f, "gpusim workspace full ({capacity} slots)")
+            }
+            ParacError::BadInput(m) => write!(f, "bad input: {m}"),
+            ParacError::DimensionMismatch { what, expected, got } => {
+                write!(f, "{what} has length {got}, expected {expected}")
+            }
+            ParacError::InvalidOption { what, got } => {
+                write!(f, "invalid {what}: {got:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParacError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_name_the_failure() {
+        assert!(ParacError::ArenaFull { capacity: 7 }.to_string().contains("7"));
+        assert!(ParacError::BadInput("empty matrix".into()).to_string().contains("empty"));
+        let e = ParacError::DimensionMismatch { what: "rhs", expected: 10, got: 3 };
+        assert!(e.to_string().contains("rhs") && e.to_string().contains("10"));
+        let e = ParacError::InvalidOption { what: "engine", got: "tpu".into() };
+        assert!(e.to_string().contains("engine") && e.to_string().contains("tpu"));
+    }
+
+    #[test]
+    fn is_std_error() {
+        fn takes_err(_: &dyn std::error::Error) {}
+        takes_err(&ParacError::WorkspaceFull { capacity: 1 });
+    }
+}

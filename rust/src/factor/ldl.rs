@@ -45,19 +45,44 @@ impl LdlFactor {
     pub fn solve(&self, r: &[f64]) -> Vec<f64> {
         let n = self.n();
         assert_eq!(r.len(), n);
-        let mut y = match &self.perm {
-            Some(p) => perm::apply_vec(p, r),
-            None => r.to_vec(),
-        };
-        self.forward_inplace(&mut y);
-        for k in 0..n {
-            let d = self.diag[k];
-            y[k] = if d > 0.0 { y[k] / d } else { 0.0 };
-        }
-        self.backward_inplace(&mut y);
+        let mut z = vec![0.0; n];
+        let mut scratch = vec![0.0; if self.perm.is_some() { n } else { 0 }];
+        self.solve_into(r, &mut z, &mut scratch);
+        z
+    }
+
+    /// Allocation-free [`LdlFactor::solve`]: `z = (G D Gᵀ)⁺ r` written
+    /// into a caller buffer. `scratch` must have length `n` when a
+    /// permutation is stored (it holds the permuted intermediate); it
+    /// is untouched otherwise. Neither `z`'s nor `scratch`'s prior
+    /// contents are read.
+    pub fn solve_into(&self, r: &[f64], z: &mut [f64], scratch: &mut [f64]) {
+        let n = self.n();
+        debug_assert_eq!(r.len(), n);
+        debug_assert_eq!(z.len(), n);
         match &self.perm {
-            Some(p) => perm::unapply_vec(p, &y),
-            None => y,
+            Some(p) => {
+                debug_assert_eq!(scratch.len(), n);
+                for (i, &ri) in r.iter().enumerate() {
+                    scratch[p[i] as usize] = ri;
+                }
+                self.forward_inplace(scratch);
+                for (yk, &d) in scratch.iter_mut().zip(&self.diag) {
+                    *yk = if d > 0.0 { *yk / d } else { 0.0 };
+                }
+                self.backward_inplace(scratch);
+                for (i, zi) in z.iter_mut().enumerate() {
+                    *zi = scratch[p[i] as usize];
+                }
+            }
+            None => {
+                z.copy_from_slice(r);
+                self.forward_inplace(z);
+                for (yk, &d) in z.iter_mut().zip(&self.diag) {
+                    *yk = if d > 0.0 { *yk / d } else { 0.0 };
+                }
+                self.backward_inplace(z);
+            }
         }
     }
 

@@ -101,31 +101,10 @@ impl Default for ParacOptions {
     }
 }
 
-/// Factorization failure modes.
-#[derive(Debug)]
-pub enum FactorError {
-    /// The shared fill arena filled up (estimate too small). `factorize`
-    /// retries internally; this escapes only after repeated doubling.
-    ArenaFull { capacity: usize },
-    /// The workspace hash map of the gpusim engine overflowed.
-    WorkspaceFull { capacity: usize },
-    /// Input is not a valid Laplacian.
-    BadInput(String),
-}
-
-impl std::fmt::Display for FactorError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            FactorError::ArenaFull { capacity } => write!(f, "fill arena full ({capacity} nodes)"),
-            FactorError::WorkspaceFull { capacity } => {
-                write!(f, "gpusim workspace full ({capacity} slots)")
-            }
-            FactorError::BadInput(m) => write!(f, "bad input: {m}"),
-        }
-    }
-}
-
-impl std::error::Error for FactorError {}
+/// Factorization failure modes — absorbed into the crate-wide
+/// [`crate::error::ParacError`]; this alias keeps existing
+/// `FactorError`-matching code compiling unchanged.
+pub use crate::error::ParacError as FactorError;
 
 /// Factor a Laplacian: compute the ordering, permute, run the engine
 /// (retrying with a larger arena if the fill estimate was too small), and
@@ -133,9 +112,10 @@ impl std::error::Error for FactorError {}
 ///
 /// # Example
 ///
-/// The `examples/quickstart.rs` flow in miniature: generate a Laplacian,
-/// factor it with the parallel CPU engine, and use the factor as a PCG
-/// preconditioner.
+/// The low-level flow underneath [`crate::solver::Solver`] (which is
+/// the recommended session API — see the crate docs): generate a
+/// Laplacian, factor it with the parallel CPU engine, and use the
+/// factor as a PCG preconditioner.
 ///
 /// ```
 /// use parac::factor::{factorize, Engine, ParacOptions};

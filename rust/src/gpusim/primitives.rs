@@ -260,9 +260,9 @@ mod tests {
             let mut raw2 = raw.clone();
             crate::factor::sample::merge_neighbors(&mut raw2, &mut m_ref, &mut c_ref);
             // GPU path: sort by (key, val) then flag-merge.
-            raw.sort_unstable_by(|a, b| {
-                a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap())
-            });
+            // total_cmp: NaN-safe (partial_cmp().unwrap() would panic
+            // the block-sort primitive on degenerate weights).
+            raw.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
             let mut m_gpu = Vec::new();
             let mut c_gpu = Vec::new();
             merge_sorted_by_flags(&raw, &mut m_gpu, &mut c_gpu);

@@ -54,10 +54,20 @@ pub fn double_cover(a: &Csr) -> Result<Csr, String> {
 }
 
 /// A preconditioner for a general SDD matrix built by factoring the
-/// grounded double cover with ParAC.
+/// grounded double cover with ParAC. The three `2N` intermediates are
+/// preallocated at construction (behind an uncontended `Mutex`, like
+/// [`crate::precond::LdlPrecond`]) so applies stay allocation-free.
 pub struct DoubledSddPrecond {
     factor: crate::factor::LdlFactor,
     n: usize,
+    scratch: std::sync::Mutex<DoubledScratch>,
+}
+
+/// Cover-space buffers: rhs lift, solution, and permutation scratch.
+struct DoubledScratch {
+    rhat: Vec<f64>,
+    zhat: Vec<f64>,
+    perm: Vec<f64>,
 }
 
 impl DoubledSddPrecond {
@@ -66,7 +76,13 @@ impl DoubledSddPrecond {
         let doubled = double_cover(a)?;
         let factor =
             crate::factor::factorize_sdd(&doubled, opts).map_err(|e| e.to_string())?;
-        Ok(DoubledSddPrecond { factor, n: a.nrows })
+        let n = a.nrows;
+        let scratch = std::sync::Mutex::new(DoubledScratch {
+            rhat: vec![0.0; 2 * n],
+            zhat: vec![0.0; 2 * n],
+            perm: vec![0.0; 2 * n],
+        });
+        Ok(DoubledSddPrecond { factor, n, scratch })
     }
 
     /// The underlying `2N` factor.
@@ -76,15 +92,18 @@ impl DoubledSddPrecond {
 }
 
 impl crate::precond::Preconditioner for DoubledSddPrecond {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
         // Â (x, −x) = (r, −r): solve on the cover, fold back.
-        let mut rhat = vec![0.0; 2 * self.n];
+        let mut s = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        let DoubledScratch { rhat, zhat, perm } = &mut *s;
         rhat[..self.n].copy_from_slice(r);
         for i in 0..self.n {
             rhat[self.n + i] = -r[i];
         }
-        let z = self.factor.solve(&rhat);
-        (0..self.n).map(|i| 0.5 * (z[i] - z[self.n + i])).collect()
+        self.factor.solve_into(rhat, zhat, perm);
+        for (i, zi) in z.iter_mut().enumerate() {
+            *zi = 0.5 * (zhat[i] - zhat[self.n + i]);
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -117,7 +136,6 @@ pub fn doubled_laplacian(a: &Csr, name: &str) -> Result<Laplacian, String> {
 mod tests {
     use super::*;
     use crate::factor::ParacOptions;
-    use crate::precond::Preconditioner;
     use crate::solve::pcg::{self, PcgOptions};
 
     /// SDD test matrix with mixed-sign off-diagonals: a ring where every

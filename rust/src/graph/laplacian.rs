@@ -219,7 +219,7 @@ mod tests {
     fn edges_roundtrip() {
         let l = triangle();
         let mut e = l.edges();
-        e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        e.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.total_cmp(&b.2)));
         assert_eq!(e, vec![(0, 1, 1.0), (0, 2, 3.0), (1, 2, 2.0)]);
     }
 

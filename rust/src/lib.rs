@@ -19,11 +19,45 @@
 //!   `hash(v) + fill_count(v)` insertion, random-permutation hashing,
 //!   block-level sort/scan primitives).
 //!
-//! The documented entry point is [`factor::factorize`]: ordering →
-//! permutation → engine dispatch (with arena-overflow retry) → an
-//! [`factor::LdlFactor`] that plugs into PCG as
-//! [`precond::LdlPrecond`]. See `examples/quickstart.rs` for the
-//! minimal end-to-end flow.
+//! ## Quickstart: the `Solver` session
+//!
+//! The documented entry point is [`solver::Solver`]: a builder collects
+//! the ordering / engine / seed / preconditioner / PCG knobs, `build`
+//! factors once, and the session then solves any number of right-hand
+//! sides with **zero heap allocations per PCG iteration** (the Krylov
+//! workspace is created once and reused; every error is a typed
+//! [`error::ParacError`], never a panic):
+//!
+//! ```
+//! use parac::factor::Engine;
+//! use parac::graph::generators::{self, Coeff};
+//! use parac::ordering::Ordering;
+//! use parac::solve::pcg;
+//! use parac::solver::Solver;
+//!
+//! let lap = generators::grid2d(12, 12, Coeff::Uniform, 42);
+//! let mut solver = Solver::builder()
+//!     .ordering(Ordering::NnzSort)
+//!     .engine(Engine::Cpu { threads: 2 })
+//!     .seed(7)
+//!     .build(&lap)
+//!     .expect("solver setup");
+//!
+//! let b = pcg::random_rhs(&lap, 1);
+//! let mut x = vec![0.0; lap.n()];
+//! let stats = solver.solve_into(&b, &mut x).expect("dimensions match");
+//! assert!(stats.converged, "rel residual {}", stats.rel_residual);
+//!
+//! // The session is reusable: same factor, same workspace, next rhs.
+//! let b2 = pcg::random_rhs(&lap, 2);
+//! assert!(solver.solve_into(&b2, &mut x).unwrap().converged);
+//! ```
+//!
+//! The lower-level pieces remain public: [`factor::factorize`] produces
+//! the [`factor::LdlFactor`], [`precond`] wraps it (and every baseline
+//! the paper compares against) behind the allocation-free
+//! [`precond::Preconditioner`] trait, and [`solve::pcg`] iterates over
+//! any [`solve::LinearOperator`] — assembled or matrix-free.
 //!
 //! Alongside the core contribution the crate ships every substrate the
 //! paper's evaluation depends on: sparse kernels ([`sparse`]), graph
@@ -37,9 +71,20 @@
 //! `python/compile/`).
 
 #![warn(missing_docs)]
+// Clippy, tuned for this crate's numeric-kernel style: indexed loops
+// are kept where the index *is* the mathematical object (sweep order
+// matters and neighbors are gathered by position), engine entry points
+// mirror the paper's parameter lists, and the engine-dispatch return
+// type is one shared tuple.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
 
 pub mod cli;
 pub mod coordinator;
+pub mod error;
 pub mod etree;
 pub mod factor;
 pub mod gpusim;
@@ -49,6 +94,10 @@ pub mod precond;
 pub mod rng;
 pub mod runtime;
 pub mod solve;
+pub mod solver;
 pub mod sparse;
 pub mod testing;
 pub mod util;
+
+pub use error::ParacError;
+pub use solver::{PrecondKind, Solver, SolverBuilder};

@@ -1,8 +1,12 @@
 //! `parac` CLI — factor, solve, and reproduce the paper's experiments.
+//!
+//! Library calls return typed [`ParacError`]s; this binary is the layer
+//! that prints them and exits.
 
 use parac::cli::args::Args;
 use parac::coordinator::pipeline::{self, Method};
 use parac::coordinator::report::{sci, secs, Table};
+use parac::error::ParacError;
 use parac::factor::{Engine, ParacOptions};
 use parac::graph::suite::{self, Scale};
 use parac::ordering::Ordering;
@@ -12,13 +16,26 @@ use parac::util::fmt_count;
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
-        "info" => info(&args),
+    let out = match cmd {
+        "info" => {
+            info(&args);
+            Ok(())
+        }
         "factor" => factor_cmd(&args),
         "solve" => solve_cmd(&args),
-        "suite" => suite_cmd(&args),
+        "suite" => {
+            suite_cmd(&args);
+            Ok(())
+        }
         "repro" => repro_cmd(&args),
-        _ => help(),
+        _ => {
+            help();
+            Ok(())
+        }
+    };
+    if let Err(e) = out {
+        eprintln!("error: {e}");
+        std::process::exit(1);
     }
 }
 
@@ -31,8 +48,9 @@ USAGE:
   parac suite [--scale tiny|small|medium]  list the benchmark suite
   parac factor --matrix NAME [--engine seq|cpu[:T]|gpusim[:B]]
                [--ordering amd|nnz|random|natural|rcm] [--seed S]
-  parac solve  --matrix NAME [--method parac|ichol0|icholt|amg|jacobi]
-               [--tol 1e-8] [--max-iter 1000] [engine/ordering flags]
+  parac solve  --matrix NAME [--method parac|ichol0|icholt|amg|jacobi|ssor|identity]
+               [--tol 1e-8] [--max-iter 1000] [--level-threads T] [--omega 1.5]
+               [engine/ordering flags]
   parac repro table2|table3|fig3|fig4|hash [--scale tiny|small|medium] [--threads T]
 "
     );
@@ -42,24 +60,31 @@ fn scale(args: &Args) -> Scale {
     Scale::parse(args.get("scale", "small")).unwrap_or(Scale::Small)
 }
 
-fn build_matrix(args: &Args) -> parac::graph::Laplacian {
+fn build_matrix(args: &Args) -> Result<parac::graph::Laplacian, ParacError> {
     let name = args.get("matrix", "uniform_3d_poisson");
     match suite::by_name(name) {
-        Some(e) => (e.build)(scale(args)),
-        None => {
-            eprintln!("unknown matrix {name}; use `parac suite` to list");
-            std::process::exit(2);
-        }
+        Some(e) => Ok((e.build)(scale(args))),
+        None => Err(ParacError::BadInput(format!(
+            "unknown matrix {name}; use `parac suite` to list"
+        ))),
     }
 }
 
-fn parac_opts(args: &Args) -> ParacOptions {
-    ParacOptions {
-        ordering: Ordering::parse(args.get("ordering", "nnz")).unwrap_or(Ordering::NnzSort),
-        engine: Engine::parse(args.get("engine", "cpu")).unwrap_or(Engine::Cpu { threads: 0 }),
+fn parac_opts(args: &Args) -> Result<ParacOptions, ParacError> {
+    let ordering = args.get("ordering", "nnz");
+    let engine = args.get("engine", "cpu");
+    Ok(ParacOptions {
+        ordering: Ordering::parse(ordering).ok_or_else(|| ParacError::InvalidOption {
+            what: "ordering",
+            got: ordering.into(),
+        })?,
+        engine: Engine::parse(engine).ok_or_else(|| ParacError::InvalidOption {
+            what: "engine",
+            got: engine.into(),
+        })?,
         seed: args.get_parse("seed", 0x9A9Au64),
         ..Default::default()
-    }
+    })
 }
 
 fn info(_args: &Args) {
@@ -88,10 +113,14 @@ fn suite_cmd(args: &Args) {
     print!("{}", t.render());
 }
 
-fn factor_cmd(args: &Args) {
-    let lap = build_matrix(args);
-    let opts = parac_opts(args);
-    let (f, dt) = parac::util::timed(|| parac::factor::factorize(&lap, &opts).unwrap());
+fn factor_cmd(args: &Args) -> Result<(), ParacError> {
+    let lap = build_matrix(args)?;
+    let opts = parac_opts(args)?;
+    let (f, dt) = {
+        let timer = parac::util::Timer::start();
+        let f = parac::factor::factorize(&lap, &opts)?;
+        (f, timer.secs())
+    };
     println!(
         "{}: n={} nnz={} engine={} ordering={}",
         lap.name,
@@ -112,17 +141,22 @@ fn factor_cmd(args: &Args) {
         "etree: classical={} actual={} critical-path={}",
         rep.classical_height, rep.actual_height, rep.critical_path
     );
+    Ok(())
 }
 
-fn solve_cmd(args: &Args) {
-    let lap = build_matrix(args);
+fn solve_cmd(args: &Args) -> Result<(), ParacError> {
+    let lap = build_matrix(args)?;
     let pcg_opts = PcgOptions {
         tol: args.get_parse("tol", 1e-8f64),
         max_iter: args.get_parse("max-iter", 1000usize),
         ..Default::default()
     };
-    let method = match args.get("method", "parac") {
-        "parac" => Method::Parac { opts: parac_opts(args), level_threads: 0 },
+    let method_name = args.get("method", "parac");
+    let method = match method_name {
+        "parac" => Method::Parac {
+            opts: parac_opts(args)?,
+            level_threads: args.get_parse("level-threads", 0usize),
+        },
         "ichol0" => Method::Ichol0,
         "icholt" => Method::IcholT {
             droptol: Some(args.get_parse("droptol", 1e-3f64)),
@@ -130,12 +164,13 @@ fn solve_cmd(args: &Args) {
         },
         "amg" => Method::Amg,
         "jacobi" => Method::Jacobi,
+        "ssor" => Method::Ssor { omega: args.get_parse("omega", 1.5f64) },
+        "identity" | "none" => Method::Identity,
         other => {
-            eprintln!("unknown method {other}");
-            std::process::exit(2);
+            return Err(ParacError::InvalidOption { what: "method", got: other.into() });
         }
     };
-    let r = pipeline::run(&lap, &method, &pcg_opts, args.get_parse("rhs-seed", 7u64));
+    let r = pipeline::run(&lap, &method, &pcg_opts, args.get_parse("rhs-seed", 7u64))?;
     let mut t = Table::new(&["method", "setup (s)", "solve (s)", "iters", "rel residual"]);
     t.row(vec![
         r.method.into(),
@@ -148,9 +183,10 @@ fn solve_cmd(args: &Args) {
     if !r.converged {
         println!("(did not converge)");
     }
+    Ok(())
 }
 
-fn repro_cmd(args: &Args) {
+fn repro_cmd(args: &Args) -> Result<(), ParacError> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
     let sc = scale(args);
     let threads = args.get_parse("threads", 0usize);
@@ -160,9 +196,9 @@ fn repro_cmd(args: &Args) {
         "fig3" => parac::coordinator::repro::fig3(sc, threads),
         "fig4" => parac::coordinator::repro::fig4(sc, threads),
         "hash" => parac::coordinator::repro::hash_ablation(sc, threads),
-        _ => {
-            eprintln!("usage: parac repro table2|table3|fig3|fig4|hash");
-            std::process::exit(2);
-        }
+        other => Err(ParacError::InvalidOption {
+            what: "repro target (table2|table3|fig3|fig4|hash)",
+            got: other.into(),
+        }),
     }
 }

@@ -139,8 +139,11 @@ impl AmgPrecond {
 }
 
 impl Preconditioner for AmgPrecond {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
-        self.vcycle(0, r)
+    // The V-cycle allocates per-level temporaries internally — AMG is a
+    // setup-heavy baseline, not the hot path; see the module note on
+    // `precond::Preconditioner`.
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(&self.vcycle(0, r));
     }
     fn name(&self) -> &'static str {
         "amg"

@@ -7,6 +7,7 @@
 //! usual shifted-IC practice.
 
 use super::Preconditioner;
+use crate::error::ParacError;
 use crate::sparse::Csr;
 
 /// IC(0) factor `A ≈ L Lᵀ` with `pattern(L) = pattern(tril(A))`.
@@ -19,7 +20,19 @@ pub struct Ichol0 {
 
 impl Ichol0 {
     /// Build IC(0); retries with growing diagonal shifts on breakdown.
+    /// Panics on unrecoverable breakdown — use [`Ichol0::try_new`] for
+    /// the error-propagating path.
     pub fn new(a: &Csr) -> Ichol0 {
+        match Self::try_new(a) {
+            Ok(f) => f,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Build IC(0); retries with growing diagonal shifts, and reports
+    /// unrecoverable breakdown (e.g. an indefinite input) as
+    /// [`ParacError::BadInput`] instead of panicking.
+    pub fn try_new(a: &Csr) -> Result<Ichol0, ParacError> {
         let base: f64 = {
             let d = a.diag();
             d.iter().cloned().fold(0.0, f64::max)
@@ -27,13 +40,14 @@ impl Ichol0 {
         let mut shift = 0.0;
         loop {
             match Self::attempt(a, shift) {
-                Some(l) => return Ichol0 { l, shift },
+                Some(l) => return Ok(Ichol0 { l, shift }),
                 None => {
                     shift = if shift == 0.0 { 1e-8 * base.max(1.0) } else { shift * 10.0 };
-                    assert!(
-                        shift < base.max(1.0),
-                        "IC(0) breakdown not recoverable (shift {shift})"
-                    );
+                    if shift >= base.max(1.0) {
+                        return Err(ParacError::BadInput(format!(
+                            "IC(0) breakdown not recoverable (shift {shift})"
+                        )));
+                    }
                 }
             }
         }
@@ -98,26 +112,26 @@ impl Ichol0 {
 }
 
 impl Preconditioner for Ichol0 {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
         let n = self.l.nrows;
         let l = &self.l;
-        // Forward solve L y = r (rows; diagonal is last entry per row).
-        let mut y = vec![0.0; n];
+        // Forward solve L y = r into z (rows; diagonal is last entry per
+        // row). Row i reads only z[j] for j < i, which this sweep has
+        // already written — z's prior contents are never read.
         for i in 0..n {
             let (lo, hi) = (l.indptr[i], l.indptr[i + 1]);
             let d = l.data[hi - 1];
             if d == 0.0 {
-                y[i] = 0.0;
+                z[i] = 0.0;
                 continue;
             }
             let mut acc = r[i];
             for idx in lo..hi - 1 {
-                acc -= l.data[idx] * y[l.indices[idx] as usize];
+                acc -= l.data[idx] * z[l.indices[idx] as usize];
             }
-            y[i] = acc / d;
+            z[i] = acc / d;
         }
-        // Backward solve Lᵀ z = y (column sweep over rows).
-        let mut z = y;
+        // Backward solve Lᵀ z = y in place (column sweep over rows).
         for i in (0..n).rev() {
             let (lo, hi) = (l.indptr[i], l.indptr[i + 1]);
             let d = l.data[hi - 1];
@@ -131,7 +145,6 @@ impl Preconditioner for Ichol0 {
                 z[l.indices[idx] as usize] -= l.data[idx] * zi;
             }
         }
-        z
     }
 
     fn name(&self) -> &'static str {

@@ -8,6 +8,7 @@
 //! `droptol · ‖A(:,j)‖₁` are discarded immediately.
 
 use super::Preconditioner;
+use crate::error::ParacError;
 use crate::sparse::Csr;
 
 const NIL: u32 = u32::MAX;
@@ -27,16 +28,32 @@ pub struct IcholT {
 }
 
 impl IcholT {
-    /// Build with an explicit drop tolerance.
+    /// Build with an explicit drop tolerance. Panics on unrecoverable
+    /// breakdown — use [`IcholT::try_new`] for the error-propagating
+    /// path.
     pub fn new(a: &Csr, droptol: f64) -> IcholT {
+        match Self::try_new(a, droptol) {
+            Ok(f) => f,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Build with an explicit drop tolerance; unrecoverable breakdown
+    /// (e.g. an indefinite input) comes back as
+    /// [`ParacError::BadInput`] instead of panicking.
+    pub fn try_new(a: &Csr, droptol: f64) -> Result<IcholT, ParacError> {
         let base = a.diag().iter().cloned().fold(0.0, f64::max);
         let mut shift = 0.0;
         loop {
             if let Some(f) = Self::attempt(a, droptol, shift) {
-                return f;
+                return Ok(f);
             }
             shift = if shift == 0.0 { 1e-8 * base.max(1.0) } else { shift * 10.0 };
-            assert!(shift < base.max(1.0), "ICT breakdown not recoverable");
+            if shift >= base.max(1.0) {
+                return Err(ParacError::BadInput(format!(
+                    "ICT breakdown not recoverable (shift {shift})"
+                )));
+            }
         }
     }
 
@@ -44,8 +61,16 @@ impl IcholT {
     /// `target_nnz` (the paper's "fill on-par with ParAC" protocol).
     /// Returns the calibrated factor.
     pub fn with_fill_target(a: &Csr, target_nnz: usize) -> IcholT {
+        match Self::try_with_fill_target(a, target_nnz) {
+            Ok(f) => f,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Error-propagating [`IcholT::with_fill_target`].
+    pub fn try_with_fill_target(a: &Csr, target_nnz: usize) -> Result<IcholT, ParacError> {
         let mut tol = 1e-2;
-        let mut best = Self::new(a, tol);
+        let mut best = Self::try_new(a, tol)?;
         for _ in 0..8 {
             let got = best.nnz();
             let ratio = got as f64 / target_nnz.max(1) as f64;
@@ -54,9 +79,9 @@ impl IcholT {
             }
             // More fill ⇒ need a larger tolerance.
             tol *= ratio.clamp(0.2, 5.0).powf(1.2);
-            best = Self::new(a, tol);
+            best = Self::try_new(a, tol)?;
         }
-        best
+        Ok(best)
     }
 
     fn attempt(a: &Csr, droptol: f64, shift: f64) -> Option<IcholT> {
@@ -163,36 +188,35 @@ impl IcholT {
 }
 
 impl Preconditioner for IcholT {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
         let n = self.diag.len();
-        // Forward L y = r (CSC scatter).
-        let mut y = r.to_vec();
+        // Forward L y = r (CSC scatter), in place in z.
+        z.copy_from_slice(r);
         for j in 0..n {
             let d = self.diag[j];
             if d == 0.0 {
-                y[j] = 0.0;
+                z[j] = 0.0;
                 continue;
             }
-            y[j] /= d;
-            let yj = y[j];
+            z[j] /= d;
+            let yj = z[j];
             for idx in self.colptr[j]..self.colptr[j + 1] {
-                y[self.rowidx[idx] as usize] -= self.data[idx] * yj;
+                z[self.rowidx[idx] as usize] -= self.data[idx] * yj;
             }
         }
         // Backward Lᵀ z = y (CSC gather).
         for j in (0..n).rev() {
             let d = self.diag[j];
             if d == 0.0 {
-                y[j] = 0.0;
+                z[j] = 0.0;
                 continue;
             }
-            let mut accv = y[j];
+            let mut accv = z[j];
             for idx in self.colptr[j]..self.colptr[j + 1] {
-                accv -= self.data[idx] * y[self.rowidx[idx] as usize];
+                accv -= self.data[idx] * z[self.rowidx[idx] as usize];
             }
-            y[j] = accv / d;
+            z[j] = accv / d;
         }
-        y
     }
 
     fn name(&self) -> &'static str {

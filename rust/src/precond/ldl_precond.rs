@@ -1,30 +1,43 @@
 //! The ParAC factor as a PCG preconditioner, with an optional
 //! level-scheduled parallel triangular solve (the paper's GPU solve
 //! path; cf. Table 3's SPSV analysis stage).
+//!
+//! The apply itself is allocation-free: the permuted intermediate
+//! lives in a scratch buffer sized once at construction (behind an
+//! uncontended `Mutex` so the preconditioner stays `Sync`; PCG applies
+//! it sequentially, so the lock never blocks and never allocates).
+//! Exception: level-scheduled mode with `threads > 1` spawns scoped
+//! worker threads (which allocate) for levels wider than the
+//! parallelism cutoff — see `solve::trisolve`.
 
 use super::Preconditioner;
 use crate::factor::LdlFactor;
-use crate::ordering::perm;
 use crate::solve::trisolve::LevelSchedule;
+use std::sync::Mutex;
 
 /// `z = (G D Gᵀ)⁺ r`, sequential or level-parallel.
 pub struct LdlPrecond {
     factor: LdlFactor,
     schedule: Option<LevelSchedule>,
     threads: usize,
+    /// Pre-sized scratch for the permuted intermediate (empty when the
+    /// factor stores no permutation and the sequential path is used).
+    scratch: Mutex<Vec<f64>>,
 }
 
 impl LdlPrecond {
     /// Sequential-solve preconditioner.
     pub fn new(factor: LdlFactor) -> LdlPrecond {
-        LdlPrecond { factor, schedule: None, threads: 1 }
+        let scratch = vec![0.0; if factor.perm.is_some() { factor.n() } else { 0 }];
+        LdlPrecond { factor, schedule: None, threads: 1, scratch: Mutex::new(scratch) }
     }
 
     /// Level-scheduled parallel solves with `threads` workers (the
     /// "analysis" runs here, once — mirroring cuSPARSE SPSV analysis).
     pub fn with_level_schedule(factor: LdlFactor, threads: usize) -> LdlPrecond {
         let schedule = LevelSchedule::analyze(&factor);
-        LdlPrecond { factor, schedule: Some(schedule), threads }
+        let scratch = vec![0.0; factor.n()];
+        LdlPrecond { factor, schedule: Some(schedule), threads, scratch: Mutex::new(scratch) }
     }
 
     /// Access the wrapped factor.
@@ -39,24 +52,37 @@ impl LdlPrecond {
 }
 
 impl Preconditioner for LdlPrecond {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        // A poisoned lock only means another apply panicked mid-solve;
+        // the buffer contents are overwritten anyway, so recover.
+        let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
         match &self.schedule {
-            None => self.factor.solve(r),
+            None => self.factor.solve_into(r, z, &mut scratch[..]),
             Some(sched) => {
                 let f = &self.factor;
-                let mut y = match &f.perm {
-                    Some(p) => perm::apply_vec(p, r),
-                    None => r.to_vec(),
+                // Work in the permuted space in `scratch` (or directly
+                // in `z` when no permutation is stored).
+                let y: &mut [f64] = match &f.perm {
+                    Some(p) => {
+                        for (i, &ri) in r.iter().enumerate() {
+                            scratch[p[i] as usize] = ri;
+                        }
+                        &mut scratch[..]
+                    }
+                    None => {
+                        z.copy_from_slice(r);
+                        &mut *z
+                    }
                 };
-                sched.forward(&mut y, self.threads);
-                for k in 0..f.n() {
-                    let d = f.diag[k];
-                    y[k] = if d > 0.0 { y[k] / d } else { 0.0 };
+                sched.forward(y, self.threads);
+                for (yk, &d) in y.iter_mut().zip(&f.diag) {
+                    *yk = if d > 0.0 { *yk / d } else { 0.0 };
                 }
-                sched.backward(&mut y, self.threads);
-                match &f.perm {
-                    Some(p) => perm::unapply_vec(p, &y),
-                    None => y,
+                sched.backward(y, self.threads);
+                if let Some(p) = &f.perm {
+                    for (i, zi) in z.iter_mut().enumerate() {
+                        *zi = scratch[p[i] as usize];
+                    }
                 }
             }
         }
@@ -110,5 +136,16 @@ mod tests {
             assert!((x - y).abs() < 1e-12);
         }
         assert!(par.critical_path().unwrap() >= 1);
+    }
+
+    #[test]
+    fn apply_into_matches_factor_solve() {
+        let l = generators::grid2d(12, 12, generators::Coeff::Uniform, 2);
+        let f = factorize(&l, &ParacOptions::default()).unwrap();
+        let want = f.solve(&pcg::random_rhs(&l, 4));
+        let pre = LdlPrecond::new(f);
+        let mut z = vec![0.0; l.n()];
+        pre.apply_into(&pcg::random_rhs(&l, 4), &mut z);
+        assert_eq!(z, want);
     }
 }

@@ -10,9 +10,16 @@
 //! | –                         | [`Ssor`], [`JacobiPrecond`], [`IdentityPrecond`] |
 //!
 //! Everything implements [`Preconditioner`], the symmetric-apply trait
-//! [`crate::solve::pcg::solve`] consumes; [`LdlPrecond`] wraps the ParAC
-//! [`crate::factor::LdlFactor`] with sequential or level-scheduled
-//! parallel triangular solves.
+//! [`crate::solve::pcg`] consumes. The primitive is the allocation-free
+//! [`Preconditioner::apply_into`] — PCG calls it once per iteration
+//! with reused buffers; the `Vec`-returning [`Preconditioner::apply`]
+//! is a default-method convenience shim on top. Every impl writes into
+//! the caller buffer without internal allocation, with two documented
+//! exceptions: [`AmgPrecond`] (its V-cycle allocates per-level
+//! temporaries; a setup-heavy baseline, not the hot path) and
+//! [`LdlPrecond`] in level-scheduled mode with `threads > 1`, whose
+//! wide levels spawn scoped worker threads (and thus allocate) per
+//! sweep — its sequential mode is allocation-free.
 
 pub mod amg;
 pub mod ichol0;
@@ -30,8 +37,21 @@ use crate::sparse::Csr;
 
 /// A symmetric preconditioner application `z = M⁻¹ r`.
 pub trait Preconditioner: Sync {
-    /// Apply the preconditioner to a residual.
-    fn apply(&self, r: &[f64]) -> Vec<f64>;
+    /// Apply the preconditioner into a caller buffer: `z = M⁻¹ r`.
+    ///
+    /// `z.len()` must equal `r.len()`; every element of `z` is
+    /// overwritten (no prior contents are read). This is the hot-loop
+    /// primitive: implementations must not allocate unless documented
+    /// otherwise (only [`AmgPrecond`] does).
+    fn apply_into(&self, r: &[f64], z: &mut [f64]);
+
+    /// Allocating convenience shim over
+    /// [`apply_into`](Preconditioner::apply_into).
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        let mut z = vec![0.0; r.len()];
+        self.apply_into(r, &mut z);
+        z
+    }
 
     /// Short display name for reports.
     fn name(&self) -> &'static str;
@@ -46,8 +66,8 @@ pub trait Preconditioner: Sync {
 pub struct IdentityPrecond;
 
 impl Preconditioner for IdentityPrecond {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
-        r.to_vec()
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
     }
     fn name(&self) -> &'static str {
         "identity"
@@ -72,8 +92,10 @@ impl JacobiPrecond {
 }
 
 impl Preconditioner for JacobiPrecond {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
-        r.iter().zip(&self.inv_diag).map(|(x, d)| x * d).collect()
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        for ((zi, ri), di) in z.iter_mut().zip(r).zip(&self.inv_diag) {
+            *zi = ri * di;
+        }
     }
     fn name(&self) -> &'static str {
         "jacobi"
@@ -92,6 +114,9 @@ mod tests {
     fn identity_is_identity() {
         let r = vec![1.0, -2.0, 3.0];
         assert_eq!(IdentityPrecond.apply(&r), r);
+        let mut z = vec![9.0; 3];
+        IdentityPrecond.apply_into(&r, &mut z);
+        assert_eq!(z, r);
     }
 
     #[test]
@@ -100,5 +125,15 @@ mod tests {
         let p = JacobiPrecond::new(&l.matrix);
         let z = p.apply(&[2.0, 2.0, 4.0, 3.0]);
         assert_eq!(z, vec![2.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn shim_matches_apply_into() {
+        let l = generators::grid2d(6, 6, generators::Coeff::Uniform, 1);
+        let p = JacobiPrecond::new(&l.matrix);
+        let r: Vec<f64> = (0..l.n()).map(|i| (i as f64).cos()).collect();
+        let mut z = vec![0.0; l.n()];
+        p.apply_into(&r, &mut z);
+        assert_eq!(z, p.apply(&r));
     }
 }

@@ -4,6 +4,7 @@
 //! ablation sweeps.
 
 use super::Preconditioner;
+use crate::error::ParacError;
 use crate::sparse::Csr;
 
 /// SSOR with relaxation factor `ω ∈ (0, 2)`.
@@ -14,34 +15,47 @@ pub struct Ssor {
 }
 
 impl Ssor {
-    /// Build from a symmetric matrix.
+    /// Build from a symmetric matrix. Panics on an out-of-range `ω` —
+    /// use [`Ssor::try_new`] for the error-propagating path.
     pub fn new(a: &Csr, omega: f64) -> Ssor {
-        assert!(omega > 0.0 && omega < 2.0, "ω must be in (0,2)");
-        Ssor { lower: a.tril(true), diag: a.diag(), omega }
+        match Self::try_new(a, omega) {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Build, rejecting an out-of-range relaxation factor (`ω` must be
+    /// in `(0, 2)`) as [`ParacError::InvalidOption`] instead of
+    /// panicking.
+    pub fn try_new(a: &Csr, omega: f64) -> Result<Ssor, ParacError> {
+        if !(omega > 0.0 && omega < 2.0) {
+            return Err(ParacError::InvalidOption { what: "ssor omega", got: omega.to_string() });
+        }
+        Ok(Ssor { lower: a.tril(true), diag: a.diag(), omega })
     }
 }
 
 impl Preconditioner for Ssor {
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
         // M⁻¹ = ω(2−ω) · (D + ωLᵀ)⁻¹ D (D + ωL)⁻¹.
         let n = self.diag.len();
         let w = self.omega;
-        // Forward: (D + ωL) y = r.
-        let mut y = vec![0.0; n];
+        // Forward: (D + ωL) y = r, written into z. Row i reads only
+        // z[c] for c < i (strictly lower), already written this sweep —
+        // z's prior contents are never read.
         for i in 0..n {
             let mut acc = r[i];
             for (&c, &v) in self.lower.row_indices(i).iter().zip(self.lower.row_data(i)) {
-                acc -= w * v * y[c as usize];
+                acc -= w * v * z[c as usize];
             }
             let d = self.diag[i];
-            y[i] = if d > 0.0 { acc / d } else { 0.0 };
+            z[i] = if d > 0.0 { acc / d } else { 0.0 };
         }
-        // Middle: y ← ω(2−ω) · D y.
-        for i in 0..n {
-            y[i] *= w * (2.0 - w) * self.diag[i];
+        // Middle: z ← ω(2−ω) · D z.
+        for (zi, &d) in z.iter_mut().zip(&self.diag) {
+            *zi *= w * (2.0 - w) * d;
         }
         // Backward: (D + ωLᵀ) z = y, scatter over rows of L.
-        let mut z = y;
         for i in (0..n).rev() {
             let d = self.diag[i];
             z[i] = if d > 0.0 { z[i] / d } else { 0.0 };
@@ -50,7 +64,6 @@ impl Preconditioner for Ssor {
                 z[c as usize] -= w * v * zi;
             }
         }
-        z
     }
 
     fn name(&self) -> &'static str {

@@ -1,0 +1,73 @@
+//! The abstract operator PCG iterates with.
+//!
+//! [`LinearOperator`] is the minimal contract the Krylov loop needs: a
+//! dimension and an allocation-free `y = A x`. [`crate::sparse::Csr`]
+//! implements it (so every existing call site keeps working), and any
+//! matrix-free operator — a stencil, a composed product, an operator
+//! living on an accelerator — can plug into [`crate::solve::pcg`] and
+//! [`crate::solver::Solver`] by implementing these two methods.
+
+use crate::sparse::Csr;
+
+/// A square linear operator `x ↦ A x`, applied into a caller buffer.
+pub trait LinearOperator: Sync {
+    /// Dimension of the (square) operator.
+    fn n(&self) -> usize;
+
+    /// `y = A x`. Implementations must overwrite every element of `y`
+    /// and must not allocate — this runs once per PCG iteration.
+    fn apply_to(&self, x: &[f64], y: &mut [f64]);
+}
+
+impl LinearOperator for Csr {
+    fn n(&self) -> usize {
+        self.nrows
+    }
+
+    fn apply_to(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    /// A matrix-free 1D Laplacian stencil (path graph).
+    struct PathStencil(usize);
+
+    impl LinearOperator for PathStencil {
+        fn n(&self) -> usize {
+            self.0
+        }
+        fn apply_to(&self, x: &[f64], y: &mut [f64]) {
+            let n = self.0;
+            for i in 0..n {
+                let left = if i > 0 { x[i - 1] } else { 0.0 };
+                let right = if i + 1 < n { x[i + 1] } else { 0.0 };
+                let deg = (i > 0) as u32 as f64 + (i + 1 < n) as u32 as f64;
+                y[i] = deg * x[i] - left - right;
+            }
+        }
+    }
+
+    #[test]
+    fn csr_apply_matches_mul_vec() {
+        let l = generators::grid2d(5, 5, generators::Coeff::Uniform, 0);
+        let x: Vec<f64> = (0..l.n()).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut y = vec![0.0; l.n()];
+        l.matrix.apply_to(&x, &mut y);
+        assert_eq!(y, l.matrix.mul_vec(&x));
+    }
+
+    #[test]
+    fn matrix_free_stencil_matches_assembled_path() {
+        let lap = generators::path(16);
+        let st = PathStencil(16);
+        let x: Vec<f64> = (0..16).map(|i| i as f64 - 8.0).collect();
+        let mut y = vec![0.0; 16];
+        st.apply_to(&x, &mut y);
+        assert_eq!(y, lap.matrix.mul_vec(&x));
+    }
+}

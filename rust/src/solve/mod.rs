@@ -1,16 +1,25 @@
 //! Iterative solvers for the factored systems.
 //!
+//! * [`linop`] — the [`linop::LinearOperator`] abstraction PCG iterates
+//!   with: `Csr` implements it, and matrix-free operators plug in by
+//!   implementing `n()` + `apply_to()`.
 //! * [`pcg`] — preconditioned conjugate gradients with optional
 //!   mean-zero nullspace projection (singular graph Laplacians) and a
-//!   recomputed true-residual check on exit; [`pcg::random_rhs`] builds
+//!   recomputed true-residual check on exit. [`pcg::solve_into`] +
+//!   [`pcg::PcgWorkspace`] is the allocation-free session primitive
+//!   that [`crate::solver::Solver`] drives; [`pcg::random_rhs`] builds
 //!   the reproducible unit-norm right-hand sides every experiment uses.
 //! * [`trisolve`] — level-scheduled parallel triangular solves with the
 //!   unit-lower factor `G`: [`trisolve::LevelSchedule`] groups columns
 //!   by depth in the solve DAG once per factor ("analysis"), then
 //!   forward/backward sweeps run each level in parallel — mirroring
-//!   cuSPARSE's SPSV analysis/solve split (paper §6.2). The sequential
-//!   alternative lives on [`crate::factor::LdlFactor`] itself
-//!   (`forward_inplace` / `backward_inplace` / `solve`).
+//!   cuSPARSE's SPSV analysis/solve split (paper §6.2). Both sweeps
+//!   operate in place on caller buffers. The sequential alternative
+//!   lives on [`crate::factor::LdlFactor`] itself (`forward_inplace` /
+//!   `backward_inplace` / `solve` / `solve_into`).
 
+pub mod linop;
 pub mod pcg;
 pub mod trisolve;
+
+pub use linop::LinearOperator;

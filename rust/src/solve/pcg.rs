@@ -6,10 +6,24 @@
 //! nullspace), matching how the paper's experiments solve `Lx = b`.
 //! Convergence is declared at relative residual `‖r‖/‖b‖ ≤ tol`
 //! (paper's tables use ~1e-6..1e-7).
+//!
+//! Two entry points share one implementation:
+//! * [`solve`] — the classic allocating call, returning a [`PcgResult`].
+//! * [`solve_into`] — the session primitive: all five Krylov vectors
+//!   live in a caller-owned [`PcgWorkspace`], the solution is written
+//!   into a caller buffer, and after the workspace is warm **no heap
+//!   allocation happens per iteration** (the preconditioner applies via
+//!   [`Preconditioner::apply_into`], the operator via
+//!   [`LinearOperator::apply_to`]). This is what
+//!   [`crate::solver::Solver`] drives for repeated right-hand sides.
+//!
+//! The operator is any [`LinearOperator`] — [`crate::sparse::Csr`] or a
+//! matrix-free implementation. Non-convergence is reported as data
+//! (`converged == false`), never as an error or panic.
 
 use crate::precond::Preconditioner;
+use crate::solve::linop::LinearOperator;
 use crate::sparse::ops::{axpy, dot, nrm2, project_mean_zero};
-use crate::sparse::Csr;
 
 /// PCG options.
 #[derive(Clone, Debug)]
@@ -31,7 +45,7 @@ impl Default for PcgOptions {
     }
 }
 
-/// PCG outcome.
+/// PCG outcome (allocating API).
 #[derive(Clone, Debug)]
 pub struct PcgResult {
     /// The (approximate) solution.
@@ -46,74 +60,184 @@ pub struct PcgResult {
     pub history: Vec<f64>,
 }
 
-/// Solve `A x = b` with preconditioner `m`.
-pub fn solve(a: &Csr, b: &[f64], m: &dyn Preconditioner, opts: &PcgOptions) -> PcgResult {
-    let n = a.nrows;
-    assert_eq!(b.len(), n);
-    let mut bwork = b.to_vec();
-    if opts.project {
-        project_mean_zero(&mut bwork);
-    }
-    let bnorm = nrm2(&bwork).max(f64::MIN_POSITIVE);
+/// Allocation-free PCG outcome: everything except the solution vector
+/// (which the caller owns) and the history (which stays in the
+/// workspace, see [`PcgWorkspace::history`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SolveStats {
+    /// Iterations used.
+    pub iters: usize,
+    /// Final relative residual (recomputed from scratch, not recurred).
+    pub rel_residual: f64,
+    /// Hit the tolerance before `max_iter`?
+    pub converged: bool,
+}
 
-    let mut x = vec![0.0; n];
-    let mut r = bwork.clone();
-    let mut z = m.apply(&r);
-    if opts.project {
-        project_mean_zero(&mut z);
+/// Reusable buffers for [`solve_into`]: the five Krylov-loop vectors
+/// plus the residual history. Size once (or let `solve_into` grow them
+/// on first use) and reuse across solves — repeated solves on the same
+/// dimension perform zero heap allocation.
+#[derive(Clone, Debug, Default)]
+pub struct PcgWorkspace {
+    /// Projected copy of the right-hand side.
+    bwork: Vec<f64>,
+    /// Residual.
+    r: Vec<f64>,
+    /// Preconditioned residual.
+    z: Vec<f64>,
+    /// Search direction.
+    p: Vec<f64>,
+    /// Operator-applied direction `A p`.
+    ap: Vec<f64>,
+    /// Per-iteration relative residuals of the most recent solve (only
+    /// filled when `keep_history` is on; capacity is retained across
+    /// solves, so steady-state pushes don't allocate).
+    history: Vec<f64>,
+}
+
+impl PcgWorkspace {
+    /// Pre-size every buffer for dimension `n`.
+    pub fn new(n: usize) -> PcgWorkspace {
+        let mut w = PcgWorkspace::default();
+        w.ensure(n);
+        w
     }
-    let mut p = z.clone();
-    let mut rz = dot(&r, &z);
-    let mut history = Vec::new();
+
+    /// Grow (never shrink) the buffers to dimension `n`. No-op — and no
+    /// allocation — when already sized.
+    pub fn ensure(&mut self, n: usize) {
+        if self.bwork.len() < n {
+            self.bwork.resize(n, 0.0);
+            self.r.resize(n, 0.0);
+            self.z.resize(n, 0.0);
+            self.p.resize(n, 0.0);
+            self.ap.resize(n, 0.0);
+        }
+    }
+
+    /// Residual history of the most recent [`solve_into`] call (empty
+    /// unless `keep_history` was set).
+    pub fn history(&self) -> &[f64] {
+        &self.history
+    }
+}
+
+/// Solve `A x = b` with preconditioner `m` (allocating convenience over
+/// [`solve_into`]).
+pub fn solve<A: LinearOperator + ?Sized>(
+    a: &A,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    opts: &PcgOptions,
+) -> PcgResult {
+    let n = a.n();
+    assert_eq!(b.len(), n);
+    let mut ws = PcgWorkspace::new(n);
+    let mut x = vec![0.0; n];
+    let stats = solve_into(a, b, m, opts, &mut ws, &mut x);
+    PcgResult {
+        x,
+        iters: stats.iters,
+        rel_residual: stats.rel_residual,
+        converged: stats.converged,
+        history: ws.history,
+    }
+}
+
+/// Solve `A x = b` with preconditioner `m`, writing the solution into
+/// `x` (overwritten; the initial guess is zero) and keeping every
+/// intermediate in `ws`. With a warm workspace this performs **zero
+/// heap allocations per iteration** — by construction: the Krylov
+/// vectors are reused, the operator and preconditioner write into
+/// caller buffers, and the only amortized growth is the optional
+/// history vector, whose capacity persists across solves.
+///
+/// Lengths of `b` and `x` must equal `a.n()` — checked by the callers
+/// that expose this publicly ([`crate::solver::Solver::solve_into`]
+/// returns a typed error); here they are debug assertions.
+pub fn solve_into<A: LinearOperator + ?Sized>(
+    a: &A,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    opts: &PcgOptions,
+    ws: &mut PcgWorkspace,
+    x: &mut [f64],
+) -> SolveStats {
+    let n = a.n();
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(x.len(), n);
+    ws.ensure(n);
+    ws.history.clear();
+    let (bwork, r, z, p, ap) = (
+        &mut ws.bwork[..n],
+        &mut ws.r[..n],
+        &mut ws.z[..n],
+        &mut ws.p[..n],
+        &mut ws.ap[..n],
+    );
+    bwork.copy_from_slice(b);
+    if opts.project {
+        project_mean_zero(bwork);
+    }
+    let bnorm = nrm2(bwork).max(f64::MIN_POSITIVE);
+
+    x.fill(0.0);
+    r.copy_from_slice(bwork);
+    m.apply_into(r, z);
+    if opts.project {
+        project_mean_zero(z);
+    }
+    p.copy_from_slice(z);
+    let mut rz = dot(r, z);
     let mut iters = 0;
     let mut converged = false;
 
     for it in 1..=opts.max_iter {
         iters = it;
-        let ap = a.mul_vec(&p);
-        let pap = dot(&p, &ap);
+        a.apply_to(p, ap);
+        let pap = dot(p, ap);
         if pap <= 0.0 || !pap.is_finite() {
             // Breakdown (semi-definite direction) — stop with best x.
             iters = it - 1;
             break;
         }
         let alpha = rz / pap;
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
+        axpy(alpha, p, x);
+        axpy(-alpha, ap, r);
         if opts.project {
-            project_mean_zero(&mut r);
+            project_mean_zero(r);
         }
-        let rel = nrm2(&r) / bnorm;
+        let rel = nrm2(r) / bnorm;
         if opts.keep_history {
-            history.push(rel);
+            ws.history.push(rel);
         }
         if rel <= opts.tol {
             converged = true;
             break;
         }
-        z = m.apply(&r);
+        m.apply_into(r, z);
         if opts.project {
-            project_mean_zero(&mut z);
+            project_mean_zero(z);
         }
-        let rz_new = dot(&r, &z);
+        let rz_new = dot(r, z);
         let beta = rz_new / rz;
         rz = rz_new;
-        for (pi, zi) in p.iter_mut().zip(&z) {
+        for (pi, zi) in p.iter_mut().zip(z.iter()) {
             *pi = zi + beta * *pi;
         }
     }
 
-    // True residual check.
-    let mut rr = bwork.clone();
-    let ax = a.mul_vec(&x);
-    for (ri, ai) in rr.iter_mut().zip(&ax) {
+    // True residual check (reuses ap for A·x and r for b − A·x).
+    a.apply_to(x, ap);
+    r.copy_from_slice(bwork);
+    for (ri, ai) in r.iter_mut().zip(ap.iter()) {
         *ri -= ai;
     }
     if opts.project {
-        project_mean_zero(&mut rr);
+        project_mean_zero(r);
     }
-    let rel_residual = nrm2(&rr) / bnorm;
-    PcgResult { x, iters, rel_residual, converged, history }
+    let rel_residual = nrm2(r) / bnorm;
+    SolveStats { iters, rel_residual, converged }
 }
 
 /// A reproducible random right-hand side in the range of the Laplacian
@@ -204,5 +328,45 @@ mod tests {
         for (got, want) in out.x.iter().zip(&xs) {
             assert!((got - want).abs() < 1e-5, "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn solve_into_matches_allocating_solve_across_reuse() {
+        let l = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let pre = JacobiPrecond::new(&l.matrix);
+        let o = PcgOptions::default();
+        let mut ws = PcgWorkspace::new(l.n());
+        let mut x = vec![0.0; l.n()];
+        for seed in [1u64, 2, 3] {
+            let b = random_rhs(&l, seed);
+            let stats = solve_into(&l.matrix, &b, &pre, &o, &mut ws, &mut x);
+            let fresh = solve(&l.matrix, &b, &pre, &o);
+            assert_eq!(stats.iters, fresh.iters);
+            assert_eq!(x, fresh.x, "workspace reuse must be bit-identical");
+            assert_eq!(stats.converged, fresh.converged);
+        }
+    }
+
+    #[test]
+    fn matrix_free_operator_solves() {
+        // PCG over a LinearOperator that is not a Csr.
+        struct Shifted<'a>(&'a crate::sparse::Csr);
+        impl crate::solve::linop::LinearOperator for Shifted<'_> {
+            fn n(&self) -> usize {
+                self.0.nrows
+            }
+            fn apply_to(&self, x: &[f64], y: &mut [f64]) {
+                self.0.spmv(x, y);
+                for (yi, xi) in y.iter_mut().zip(x) {
+                    *yi += 0.1 * xi; // A + 0.1 I — SPD, no projection
+                }
+            }
+        }
+        let l = generators::grid2d(8, 8, generators::Coeff::Uniform, 0);
+        let op = Shifted(&l.matrix);
+        let b = random_rhs(&l, 6);
+        let o = PcgOptions { project: false, ..Default::default() };
+        let out = solve(&op, &b, &IdentityPrecond, &o);
+        assert!(out.converged, "rel={}", out.rel_residual);
     }
 }

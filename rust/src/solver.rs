@@ -1,0 +1,596 @@
+//! The unified solver session: configure once, factor once, solve many
+//! right-hand sides — the paper's "cheap construction, drop into PCG"
+//! economics as a single object.
+//!
+//! [`Solver::builder`] collects every knob that used to be scattered
+//! across `ParacOptions`, `pipeline::Method`, and `PcgOptions`:
+//! elimination ordering, engine, seed, arena/sort/timing options, the
+//! preconditioner choice ([`PrecondKind`] spans ParAC and every paper
+//! baseline), and the PCG tolerances. [`SolverBuilder::build`] does all
+//! the setup work (ordering, factorization, level-schedule analysis,
+//! workspace sizing) and returns a typed
+//! [`ParacError`](crate::error::ParacError) on bad input — nothing on
+//! this surface panics. [`Solver::solve_into`] then performs **zero
+//! heap allocations per PCG iteration** (asserted by the
+//! tracking-allocator test in `rust/tests/alloc_free.rs`): the Krylov
+//! vectors live in an internal [`PcgWorkspace`], and every
+//! preconditioner applies via
+//! [`Preconditioner::apply_into`](crate::precond::Preconditioner::apply_into).
+//! Two configurations allocate by design and are exempt from that
+//! contract: AMG (V-cycle temporaries) and level-scheduled ParAC with
+//! `level_threads > 1` (wide levels spawn scoped worker threads per
+//! sweep); the default sequential ParAC path and every other baseline
+//! are allocation-free.
+//!
+//! Three entry points cover the workload spectrum:
+//! * [`SolverBuilder::build`] — a graph [`Laplacian`] (possibly
+//!   singular; mean-zero projection is selected automatically from
+//!   [`LapKind`]).
+//! * [`SolverBuilder::build_sdd`] — a raw SPD/SDD [`Csr`] (Dirichlet
+//!   operators); ParAC goes through the rchol grounding construction.
+//! * [`SolverBuilder::build_operator`] — any matrix-free
+//!   [`LinearOperator`] with a caller-supplied preconditioner.
+//!
+//! ```
+//! use parac::graph::generators::{self, Coeff};
+//! use parac::solve::pcg;
+//! use parac::solver::Solver;
+//!
+//! let lap = generators::grid2d(12, 12, Coeff::Uniform, 42);
+//! let mut solver = Solver::builder()
+//!     .seed(7)
+//!     .tol(1e-8)
+//!     .build(&lap)
+//!     .expect("solver setup");
+//!
+//! // Solve two right-hand sides with one reused workspace.
+//! let mut x = vec![0.0; lap.n()];
+//! for seed in [1, 2] {
+//!     let b = pcg::random_rhs(&lap, seed);
+//!     let stats = solver.solve_into(&b, &mut x).expect("dimensions match");
+//!     assert!(stats.converged, "rel residual {}", stats.rel_residual);
+//! }
+//! ```
+
+use crate::error::ParacError;
+use crate::factor::{self, Engine, FactorStats, ParacOptions};
+use crate::graph::{LapKind, Laplacian};
+use crate::ordering::Ordering;
+use crate::precond::{
+    AmgPrecond, Ichol0, IcholT, IdentityPrecond, JacobiPrecond, LdlPrecond, Preconditioner, Ssor,
+};
+use crate::precond::amg::AmgOptions;
+use crate::solve::linop::LinearOperator;
+use crate::solve::pcg::{self, PcgOptions, PcgResult, PcgWorkspace, SolveStats};
+use crate::sparse::Csr;
+use crate::util::Timer;
+
+/// Which preconditioner a [`Solver`] builds — ParAC plus every baseline
+/// the paper compares against, and the extra ablation baselines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PrecondKind {
+    /// The ParAC `G D Gᵀ` factor; `level_threads > 0` uses the
+    /// level-scheduled parallel triangular solve with that many workers.
+    Parac {
+        /// Workers for the level-scheduled solve (0 = sequential).
+        level_threads: usize,
+    },
+    /// Zero fill-in incomplete Cholesky (cuSPARSE `csric02` proxy).
+    Ichol0,
+    /// Threshold ICT; `droptol = None` calibrates fill to `fill_target`.
+    IcholT {
+        /// Explicit drop tolerance (wins over `fill_target`).
+        droptol: Option<f64>,
+        /// Calibrate fill to this nonzero count when `droptol` is None.
+        fill_target: Option<usize>,
+    },
+    /// Smoothed-aggregation AMG (HyPre / AmgX proxy).
+    Amg,
+    /// Diagonal (Jacobi) scaling.
+    Jacobi,
+    /// Symmetric SOR with relaxation factor `omega ∈ (0, 2)`.
+    Ssor {
+        /// Relaxation factor.
+        omega: f64,
+    },
+    /// No preconditioning (plain CG).
+    Identity,
+}
+
+impl PrecondKind {
+    /// Display name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrecondKind::Parac { .. } => "ParAC",
+            PrecondKind::Ichol0 => "ichol(0)",
+            PrecondKind::IcholT { .. } => "ichol-t",
+            PrecondKind::Amg => "AMG",
+            PrecondKind::Jacobi => "Jacobi",
+            PrecondKind::Ssor { .. } => "SSOR",
+            PrecondKind::Identity => "identity",
+        }
+    }
+
+    /// Parse a CLI name (`parac`, `ichol0`, `icholt`, `amg`, `jacobi`,
+    /// `ssor`, `identity`/`none`).
+    pub fn parse(s: &str) -> Option<PrecondKind> {
+        match s {
+            "parac" => Some(PrecondKind::Parac { level_threads: 0 }),
+            "ichol0" => Some(PrecondKind::Ichol0),
+            "icholt" | "ichol-t" => {
+                Some(PrecondKind::IcholT { droptol: Some(1e-3), fill_target: None })
+            }
+            "amg" => Some(PrecondKind::Amg),
+            "jacobi" => Some(PrecondKind::Jacobi),
+            "ssor" => Some(PrecondKind::Ssor { omega: 1.5 }),
+            "identity" | "none" => Some(PrecondKind::Identity),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration collector for [`Solver`]; create via
+/// [`Solver::builder`], finish with one of the `build*` methods.
+#[derive(Clone, Debug)]
+pub struct SolverBuilder {
+    parac: ParacOptions,
+    precond: PrecondKind,
+    pcg: PcgOptions,
+    /// Mean-zero projection override; `None` = decide from the input
+    /// (`LapKind::Graph` projects, SPD inputs don't).
+    project: Option<bool>,
+}
+
+impl Default for SolverBuilder {
+    fn default() -> Self {
+        SolverBuilder {
+            parac: ParacOptions::default(),
+            precond: PrecondKind::Parac { level_threads: 0 },
+            pcg: PcgOptions::default(),
+            project: None,
+        }
+    }
+}
+
+impl SolverBuilder {
+    /// Elimination ordering for the ParAC factorization.
+    pub fn ordering(mut self, ordering: Ordering) -> Self {
+        self.parac.ordering = ordering;
+        self
+    }
+
+    /// Factorization engine (`seq` / `cpu` / `gpusim`).
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.parac.engine = engine;
+        self
+    }
+
+    /// RNG seed for the randomized sampling.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.parac.seed = seed;
+        self
+    }
+
+    /// Fill-arena capacity multiplier over `nnz + n`.
+    pub fn arena_factor(mut self, factor: f64) -> Self {
+        self.parac.arena_factor = factor;
+        self
+    }
+
+    /// Sort neighbors by |weight| before sampling (quality knob).
+    pub fn sort_by_weight(mut self, sort: bool) -> Self {
+        self.parac.sort_by_weight = sort;
+        self
+    }
+
+    /// Collect per-stage wall times during factorization.
+    pub fn stage_timing(mut self, timing: bool) -> Self {
+        self.parac.stage_timing = timing;
+        self
+    }
+
+    /// Replace the whole ParAC option block at once.
+    pub fn parac_options(mut self, opts: ParacOptions) -> Self {
+        self.parac = opts;
+        self
+    }
+
+    /// Choose the preconditioner (default: sequential ParAC).
+    pub fn preconditioner(mut self, kind: PrecondKind) -> Self {
+        self.precond = kind;
+        self
+    }
+
+    /// PCG relative-residual tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.pcg.tol = tol;
+        self
+    }
+
+    /// PCG iteration cap.
+    pub fn max_iter(mut self, max_iter: usize) -> Self {
+        self.pcg.max_iter = max_iter;
+        self
+    }
+
+    /// Record per-iteration relative residuals (read back via
+    /// [`Solver::history`]).
+    pub fn keep_history(mut self, keep: bool) -> Self {
+        self.pcg.keep_history = keep;
+        self
+    }
+
+    /// Force mean-zero projection on or off (default: automatic from
+    /// the input kind).
+    pub fn project(mut self, project: bool) -> Self {
+        self.project = Some(project);
+        self
+    }
+
+    /// Replace the whole PCG option block at once (its `project` field
+    /// is overridden by the automatic/explicit projection choice).
+    pub fn pcg_options(mut self, opts: PcgOptions) -> Self {
+        self.pcg = opts;
+        self
+    }
+
+    /// Build a solver session for a graph Laplacian: validate, build
+    /// the chosen preconditioner (factoring for ParAC), and pre-size
+    /// the PCG workspace. All failures are typed; nothing panics on bad
+    /// input.
+    pub fn build<'a>(&self, lap: &'a Laplacian) -> Result<Solver<'a>, ParacError> {
+        if lap.n() == 0 {
+            return Err(ParacError::BadInput("empty matrix".into()));
+        }
+        let timer = Timer::start();
+        let (pre, stats) = self.build_precond(lap)?;
+        let project = self.project.unwrap_or(lap.kind == LapKind::Graph);
+        Ok(self.assemble(&lap.matrix, pre, stats, project, timer.secs()))
+    }
+
+    /// Build a solver session for a raw SPD/SDD matrix (e.g. a
+    /// Dirichlet Poisson operator). ParAC preconditioning goes through
+    /// the rchol grounding construction
+    /// ([`factor::factorize_sdd`]); projection defaults to off.
+    pub fn build_sdd<'a>(&self, a: &'a Csr) -> Result<Solver<'a>, ParacError> {
+        if a.nrows == 0 || a.nrows != a.ncols {
+            return Err(ParacError::BadInput(format!(
+                "expected a non-empty square matrix, got {}×{}",
+                a.nrows, a.ncols
+            )));
+        }
+        let timer = Timer::start();
+        let (pre, stats): (Box<dyn Preconditioner>, _) = match &self.precond {
+            PrecondKind::Parac { level_threads } => {
+                let f = factor::factorize_sdd(a, &self.parac)?;
+                let stats = f.stats.clone();
+                (wrap_ldl(f, *level_threads), Some(stats))
+            }
+            other => (build_baseline(a, other)?, None),
+        };
+        let project = self.project.unwrap_or(false);
+        Ok(self.assemble(a, pre, stats, project, timer.secs()))
+    }
+
+    /// Build a solver session for a matrix-free operator with a
+    /// caller-supplied preconditioner (use
+    /// [`IdentityPrecond`] for plain CG); the
+    /// builder's `precond` choice is ignored because matrix-dependent
+    /// preconditioners cannot be constructed from an abstract operator.
+    /// Projection defaults to off.
+    pub fn build_operator<'a>(
+        &self,
+        op: &'a dyn LinearOperator,
+        pre: Box<dyn Preconditioner>,
+    ) -> Result<Solver<'a>, ParacError> {
+        if op.n() == 0 {
+            return Err(ParacError::BadInput("empty operator".into()));
+        }
+        let project = self.project.unwrap_or(false);
+        let mut pcg = self.pcg.clone();
+        pcg.project = project;
+        Ok(Solver {
+            op,
+            pre,
+            pcg,
+            ws: PcgWorkspace::new(op.n()),
+            n: op.n(),
+            setup_secs: 0.0,
+            factor_stats: None,
+        })
+    }
+
+    fn assemble<'a>(
+        &self,
+        op: &'a dyn LinearOperator,
+        pre: Box<dyn Preconditioner>,
+        factor_stats: Option<FactorStats>,
+        project: bool,
+        setup_secs: f64,
+    ) -> Solver<'a> {
+        let mut pcg = self.pcg.clone();
+        pcg.project = project;
+        Solver {
+            op,
+            pre,
+            pcg,
+            ws: PcgWorkspace::new(op.n()),
+            n: op.n(),
+            setup_secs,
+            factor_stats,
+        }
+    }
+
+    fn build_precond(
+        &self,
+        lap: &Laplacian,
+    ) -> Result<(Box<dyn Preconditioner>, Option<FactorStats>), ParacError> {
+        match &self.precond {
+            PrecondKind::Parac { level_threads } => {
+                let f = factor::factorize(lap, &self.parac)?;
+                let stats = f.stats.clone();
+                Ok((wrap_ldl(f, *level_threads), Some(stats)))
+            }
+            other => Ok((build_baseline(&lap.matrix, other)?, None)),
+        }
+    }
+}
+
+/// Wrap a ParAC factor as a preconditioner, with or without the
+/// level-scheduled parallel solve.
+fn wrap_ldl(f: crate::factor::LdlFactor, level_threads: usize) -> Box<dyn Preconditioner> {
+    if level_threads > 0 {
+        Box::new(LdlPrecond::with_level_schedule(f, level_threads))
+    } else {
+        Box::new(LdlPrecond::new(f))
+    }
+}
+
+/// Build a non-ParAC preconditioner from an assembled matrix.
+fn build_baseline(a: &Csr, kind: &PrecondKind) -> Result<Box<dyn Preconditioner>, ParacError> {
+    Ok(match kind {
+        PrecondKind::Parac { .. } => unreachable!("handled by the callers"),
+        PrecondKind::Ichol0 => Box::new(Ichol0::try_new(a)?),
+        PrecondKind::IcholT { droptol, fill_target } => Box::new(match (droptol, fill_target) {
+            (Some(t), _) => IcholT::try_new(a, *t)?,
+            (None, Some(nnz)) => IcholT::try_with_fill_target(a, *nnz)?,
+            (None, None) => IcholT::try_new(a, 1e-3)?,
+        }),
+        PrecondKind::Amg => Box::new(AmgPrecond::new(a, &AmgOptions::default())),
+        PrecondKind::Jacobi => Box::new(JacobiPrecond::new(a)),
+        PrecondKind::Ssor { omega } => Box::new(Ssor::try_new(a, *omega)?),
+        PrecondKind::Identity => Box::new(IdentityPrecond),
+    })
+}
+
+/// A configured, factored solver session: borrow of the operator, owned
+/// preconditioner, PCG options, and the reusable workspace. Create via
+/// [`Solver::builder`]; call [`Solver::solve`] /
+/// [`Solver::solve_into`] as many times as there are right-hand sides.
+pub struct Solver<'a> {
+    op: &'a dyn LinearOperator,
+    pre: Box<dyn Preconditioner>,
+    pcg: PcgOptions,
+    ws: PcgWorkspace,
+    n: usize,
+    setup_secs: f64,
+    factor_stats: Option<FactorStats>,
+}
+
+impl<'a> Solver<'a> {
+    /// Start configuring a solver session.
+    pub fn builder() -> SolverBuilder {
+        SolverBuilder::default()
+    }
+
+    /// Operator dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Wall-clock seconds spent in `build*` (preconditioner
+    /// construction — the paper's "Factorize/Setup/Analysis" columns).
+    pub fn setup_secs(&self) -> f64 {
+        self.setup_secs
+    }
+
+    /// The preconditioner (for `name()` / `nnz()` reporting).
+    pub fn preconditioner(&self) -> &dyn Preconditioner {
+        self.pre.as_ref()
+    }
+
+    /// ParAC factor statistics (None for baseline preconditioners).
+    pub fn factor_stats(&self) -> Option<&FactorStats> {
+        self.factor_stats.as_ref()
+    }
+
+    /// Per-iteration relative residuals of the most recent solve (empty
+    /// unless the builder set `keep_history`).
+    pub fn history(&self) -> &[f64] {
+        self.ws.history()
+    }
+
+    /// The PCG options this session runs with.
+    pub fn pcg_options(&self) -> &PcgOptions {
+        &self.pcg
+    }
+
+    /// Solve `A x = b`, allocating the solution vector. Non-convergence
+    /// is data (`converged == false`), not an error.
+    pub fn solve(&mut self, b: &[f64]) -> Result<PcgResult, ParacError> {
+        let mut x = vec![0.0; self.n];
+        let stats = self.solve_into(b, &mut x)?;
+        Ok(PcgResult {
+            x,
+            iters: stats.iters,
+            rel_residual: stats.rel_residual,
+            converged: stats.converged,
+            history: self.ws.history().to_vec(),
+        })
+    }
+
+    /// Solve `A x = b` into a caller buffer, reusing the internal
+    /// workspace: zero heap allocations per PCG iteration (see the
+    /// module docs for the two documented exceptions). `x` is
+    /// overwritten (the initial guess is zero). Non-convergence is
+    /// data, not an error.
+    pub fn solve_into(&mut self, b: &[f64], x: &mut [f64]) -> Result<SolveStats, ParacError> {
+        if b.len() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "rhs",
+                expected: self.n,
+                got: b.len(),
+            });
+        }
+        if x.len() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "solution",
+                expected: self.n,
+                got: x.len(),
+            });
+        }
+        Ok(pcg::solve_into(self.op, b, self.pre.as_ref(), &self.pcg, &mut self.ws, x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn builder_defaults_solve_a_laplacian() {
+        let lap = generators::grid2d(16, 16, generators::Coeff::Uniform, 0);
+        let mut s = Solver::builder().seed(3).build(&lap).unwrap();
+        assert_eq!(s.n(), lap.n());
+        assert!(s.factor_stats().is_some());
+        assert!(s.preconditioner().nnz() > 0);
+        let b = pcg::random_rhs(&lap, 1);
+        let out = s.solve(&b).unwrap();
+        assert!(out.converged, "rel={}", out.rel_residual);
+    }
+
+    #[test]
+    fn every_precond_kind_builds_and_converges() {
+        let lap = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let b = pcg::random_rhs(&lap, 5);
+        for kind in [
+            PrecondKind::Parac { level_threads: 0 },
+            PrecondKind::Parac { level_threads: 2 },
+            PrecondKind::Ichol0,
+            PrecondKind::IcholT { droptol: Some(1e-3), fill_target: None },
+            PrecondKind::Amg,
+            PrecondKind::Jacobi,
+            PrecondKind::Ssor { omega: 1.5 },
+            PrecondKind::Identity,
+        ] {
+            let name = kind.name();
+            let mut s = Solver::builder()
+                .preconditioner(kind)
+                .max_iter(3000)
+                .tol(1e-7)
+                .build(&lap)
+                .unwrap();
+            let out = s.solve(&b).unwrap();
+            assert!(out.converged, "{name}: rel={}", out.rel_residual);
+        }
+    }
+
+    #[test]
+    fn bad_input_is_typed_not_panicking() {
+        let empty = Laplacian::from_edges(0, &[], "empty");
+        match Solver::builder().build(&empty) {
+            Err(ParacError::BadInput(_)) => {}
+            Err(other) => panic!("expected BadInput, got {other:?}"),
+            Ok(_) => panic!("expected BadInput, got a solver"),
+        }
+
+        let lap = generators::grid2d(4, 4, generators::Coeff::Uniform, 0);
+        match Solver::builder()
+            .preconditioner(PrecondKind::Ssor { omega: 7.0 })
+            .build(&lap)
+        {
+            Err(ParacError::InvalidOption { what, .. }) => assert_eq!(what, "ssor omega"),
+            Err(other) => panic!("expected InvalidOption, got {other:?}"),
+            Ok(_) => panic!("expected InvalidOption, got a solver"),
+        }
+
+        let mut s = Solver::builder().build(&lap).unwrap();
+        let mut x = vec![0.0; lap.n()];
+        match s.solve_into(&[1.0, 2.0], &mut x) {
+            Err(ParacError::DimensionMismatch { what: "rhs", expected, got }) => {
+                assert_eq!((expected, got), (lap.n(), 2));
+            }
+            other => panic!("expected DimensionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sdd_session_solves_grounded_system() {
+        // Dirichlet 2D Poisson: Laplacian + boundary mass → SPD.
+        let lap = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let n = lap.n();
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for r in 0..n {
+            for (&c, &v) in lap.matrix.row_indices(r).iter().zip(lap.matrix.row_data(r)) {
+                coo.push(r as u32, c, v);
+            }
+        }
+        for r in 0..12u32 {
+            coo.push(r, r, 1.0);
+        }
+        let a = coo.to_csr();
+        let mut s = Solver::builder().tol(1e-10).max_iter(500).build_sdd(&a).unwrap();
+        let mut rng = crate::rng::Rng::new(2);
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let b = a.mul_vec(&xs);
+        let out = s.solve(&b).unwrap();
+        assert!(out.converged);
+        for (got, want) in out.x.iter().zip(&xs) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matrix_free_operator_session() {
+        struct Shifted<'m>(&'m Csr);
+        impl LinearOperator for Shifted<'_> {
+            fn n(&self) -> usize {
+                self.0.nrows
+            }
+            fn apply_to(&self, x: &[f64], y: &mut [f64]) {
+                self.0.spmv(x, y);
+                for (yi, xi) in y.iter_mut().zip(x) {
+                    *yi += 0.5 * xi;
+                }
+            }
+        }
+        let lap = generators::grid2d(8, 8, generators::Coeff::Uniform, 0);
+        let op = Shifted(&lap.matrix);
+        let mut s = Solver::builder()
+            .build_operator(&op, Box::new(IdentityPrecond))
+            .unwrap();
+        let b = pcg::random_rhs(&lap, 9);
+        let out = s.solve(&b).unwrap();
+        assert!(out.converged, "rel={}", out.rel_residual);
+    }
+
+    #[test]
+    fn history_survives_in_session() {
+        let lap = generators::grid2d(10, 10, generators::Coeff::Uniform, 0);
+        let mut s = Solver::builder().keep_history(true).build(&lap).unwrap();
+        let b = pcg::random_rhs(&lap, 4);
+        let out = s.solve(&b).unwrap();
+        assert_eq!(s.history().len(), out.iters);
+        assert_eq!(s.history(), &out.history[..]);
+    }
+
+    #[test]
+    fn precond_kind_parse_name_roundtrip() {
+        for s in ["parac", "ichol0", "icholt", "amg", "jacobi", "ssor", "identity"] {
+            let k = PrecondKind::parse(s).unwrap();
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(PrecondKind::parse("nonsense"), None);
+    }
+}

@@ -1,0 +1,78 @@
+//! Proof of the session API's zero-allocation contract: a counting
+//! global allocator wraps the system allocator, and repeated
+//! `Solver::solve_into` calls after warm-up must not allocate at all —
+//! not per iteration, not per solve.
+//!
+//! This lives in its own integration-test binary (one `#[test]`) so no
+//! concurrently running test can touch the allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// System allocator with an allocation counter.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn solve_into_allocates_nothing_after_warmup() {
+    use parac::factor::Engine;
+    use parac::graph::generators;
+    use parac::solve::pcg;
+    use parac::solver::Solver;
+
+    let lap = generators::grid2d(20, 20, generators::Coeff::Uniform, 0);
+    // Sequential engine + sequential ParAC solve: the documented
+    // allocation-free configuration (threads would allocate stacks).
+    let mut solver = Solver::builder()
+        .engine(Engine::Seq)
+        .seed(9)
+        .tol(1e-8)
+        .build(&lap)
+        .expect("solver setup");
+
+    let rhs: Vec<Vec<f64>> = (1..=4).map(|s| pcg::random_rhs(&lap, s)).collect();
+    let mut x = vec![0.0; lap.n()];
+
+    // Warm-up: first solve may size the (already pre-sized) workspace.
+    let warm = solver.solve_into(&rhs[0], &mut x).expect("warm-up solve");
+    assert!(warm.converged, "warm-up must converge (rel={})", warm.rel_residual);
+
+    // Steady state: dozens of full PCG solves, zero allocations.
+    let before = allocations();
+    for b in rhs.iter().cycle().take(24) {
+        let stats = solver.solve_into(b, &mut x).expect("steady-state solve");
+        assert!(stats.converged);
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "solve_into allocated {} times across 24 warm solves — the \
+         zero-allocation contract is broken",
+        after - before
+    );
+}

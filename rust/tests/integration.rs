@@ -8,7 +8,7 @@ use parac::factor::{self, factorize, Engine, ParacOptions};
 use parac::graph::suite::{Scale, SUITE};
 use parac::graph::{generators, Laplacian};
 use parac::ordering::Ordering;
-use parac::precond::{LdlPrecond, Preconditioner};
+use parac::precond::LdlPrecond;
 use parac::solve::pcg::{self, PcgOptions};
 
 fn opts(engine: Engine, ordering: Ordering) -> ParacOptions {
@@ -20,7 +20,7 @@ fn parac_converges_on_every_suite_matrix() {
     for e in SUITE {
         let lap = (e.build)(Scale::Tiny);
         let o = PcgOptions { tol: 1e-7, max_iter: 1500, ..Default::default() };
-        let r = pipeline::run(&lap, &pipeline::parac_gpu_method(2, 5), &o, 11);
+        let r = pipeline::run(&lap, &pipeline::parac_gpu_method(2, 5), &o, 11).unwrap();
         assert!(
             r.converged,
             "{}: rel={} iters={}",
@@ -116,14 +116,14 @@ fn matrix_market_roundtrip_through_pipeline() {
 fn baselines_beat_identity_on_contrast_mesh() {
     let lap = generators::grid2d(20, 20, generators::Coeff::HighContrast(4.0), 5);
     let o = PcgOptions { tol: 1e-7, max_iter: 4000, ..Default::default() };
-    let plain = pipeline::run(&lap, &Method::Jacobi, &o, 3);
+    let plain = pipeline::run(&lap, &Method::Jacobi, &o, 3).unwrap();
     for m in [
         Method::Ichol0,
         Method::IcholT { droptol: Some(1e-3), fill_target: None },
         Method::Amg,
         pipeline::parac_cpu_method(2, 4),
     ] {
-        let r = pipeline::run(&lap, &m, &o, 3);
+        let r = pipeline::run(&lap, &m, &o, 3).unwrap();
         assert!(r.converged, "{}", r.method);
         assert!(
             r.iters <= plain.iters,

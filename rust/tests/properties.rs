@@ -120,6 +120,74 @@ fn arena_retry_preserves_determinism() {
     });
 }
 
+/// The allocation-free `apply_into` matches the legacy `apply` shim
+/// bit-for-bit for every preconditioner — even when the output buffer
+/// starts poisoned with NaN, which proves no implementation reads the
+/// buffer's prior contents.
+#[test]
+fn apply_into_matches_apply_for_every_preconditioner() {
+    use parac::precond::{
+        AmgPrecond, Ichol0, IcholT, IdentityPrecond, JacobiPrecond, LdlPrecond, Preconditioner,
+        Ssor,
+    };
+    use parac::precond::amg::AmgOptions;
+    forall_seeds(6, |seed| {
+        let l = generators::random_connected(90, 150, seed);
+        let f = factorize(&l, &opts(seed, Ordering::Amd, Engine::Seq))
+            .map_err(|e| e.to_string())?;
+        let f_lvl = f.clone();
+        let pres: Vec<Box<dyn Preconditioner>> = vec![
+            Box::new(LdlPrecond::new(f)),
+            Box::new(LdlPrecond::with_level_schedule(f_lvl, 2)),
+            Box::new(Ichol0::new(&l.matrix)),
+            Box::new(IcholT::new(&l.matrix, 1e-3)),
+            Box::new(AmgPrecond::new(&l.matrix, &AmgOptions::default())),
+            Box::new(JacobiPrecond::new(&l.matrix)),
+            Box::new(Ssor::new(&l.matrix, 1.3)),
+            Box::new(IdentityPrecond),
+        ];
+        let mut rng = parac::rng::Rng::new(seed ^ 0x5EED);
+        let r: Vec<f64> = (0..l.n()).map(|_| rng.next_normal()).collect();
+        for pre in &pres {
+            let want = pre.apply(&r);
+            let mut z = vec![f64::NAN; l.n()];
+            pre.apply_into(&r, &mut z);
+            if z != want {
+                return Err(format!("{}: apply_into deviates from apply", pre.name()));
+            }
+            // A second application into the now-dirty buffer must also
+            // be identical (workspace-reuse property).
+            pre.apply_into(&r, &mut z);
+            if z != want {
+                return Err(format!("{}: dirty-buffer reuse deviates", pre.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `Engine::parse` accepts every display name it produces, and
+/// parameterized spellings round-trip through `name()`.
+#[test]
+fn engine_parse_name_roundtrip() {
+    for (spec, name, want) in [
+        ("seq", "seq", Engine::Seq),
+        ("cpu", "cpu", Engine::Cpu { threads: 0 }),
+        ("cpu:8", "cpu", Engine::Cpu { threads: 8 }),
+        ("gpusim", "gpusim", Engine::GpuSim { blocks: 0 }),
+        ("gpu", "gpusim", Engine::GpuSim { blocks: 0 }),
+        ("gpusim:64", "gpusim", Engine::GpuSim { blocks: 64 }),
+    ] {
+        let e = Engine::parse(spec).unwrap_or_else(|| panic!("{spec} must parse"));
+        assert_eq!(e, want, "{spec}");
+        assert_eq!(e.name(), name, "{spec}");
+        // name() itself is always re-parseable.
+        assert!(Engine::parse(e.name()).is_some(), "{name} must re-parse");
+    }
+    assert!(Engine::parse("tpu").is_none());
+    assert!(Engine::parse("cpu:x").is_none());
+}
+
 /// Permuted solves are consistent: preconditioner apply must be
 /// symmetric (`⟨M⁻¹u, v⟩ = ⟨u, M⁻¹v⟩`) — required by PCG — for every
 /// ordering.

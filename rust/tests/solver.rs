@@ -1,0 +1,150 @@
+//! Session-API integration tests: `Solver` reuse semantics (one
+//! workspace, many right-hand sides, results identical to fresh
+//! sessions), typed-error behaviour across the public surface, and the
+//! pipeline veneer staying consistent with the session it wraps.
+
+use parac::coordinator::pipeline::{self, Method};
+use parac::error::ParacError;
+use parac::factor::Engine;
+use parac::graph::generators;
+use parac::ordering::Ordering;
+use parac::solve::pcg::{self, PcgOptions};
+use parac::solver::{PrecondKind, Solver};
+
+/// Two right-hand sides through one session must produce exactly the
+/// solutions two fresh single-use sessions produce: workspace reuse can
+/// leak no state between solves.
+#[test]
+fn solver_reuse_matches_fresh_solves() {
+    let lap = generators::grid2d(18, 18, generators::Coeff::Uniform, 0);
+    let b1 = pcg::random_rhs(&lap, 1);
+    let b2 = pcg::random_rhs(&lap, 2);
+
+    let builder = Solver::builder().seed(11).engine(Engine::Seq).tol(1e-9);
+    let mut shared = builder.build(&lap).unwrap();
+    let mut x1 = vec![0.0; lap.n()];
+    let mut x2 = vec![0.0; lap.n()];
+    let s1 = shared.solve_into(&b1, &mut x1).unwrap();
+    let s2 = shared.solve_into(&b2, &mut x2).unwrap();
+    assert!(s1.converged && s2.converged);
+
+    // Fresh session per rhs (same deterministic seed → same factor).
+    let f1 = builder.build(&lap).unwrap().solve(&b1).unwrap();
+    let f2 = builder.build(&lap).unwrap().solve(&b2).unwrap();
+    assert_eq!(x1, f1.x, "rhs 1: reused workspace must be bit-identical");
+    assert_eq!(x2, f2.x, "rhs 2: reused workspace must be bit-identical");
+    assert_eq!(s1.iters, f1.iters);
+    assert_eq!(s2.iters, f2.iters);
+}
+
+/// Re-solving the *same* rhs after an intervening different rhs gives
+/// the same answer again (idempotent sessions).
+#[test]
+fn solver_resolve_is_idempotent() {
+    let lap = generators::grid3d(5, 5, 5, generators::Coeff::Uniform, 3);
+    let mut s = Solver::builder().seed(5).build(&lap).unwrap();
+    let b = pcg::random_rhs(&lap, 7);
+    let other = pcg::random_rhs(&lap, 8);
+    let first = s.solve(&b).unwrap();
+    s.solve(&other).unwrap();
+    let again = s.solve(&b).unwrap();
+    assert_eq!(first.x, again.x);
+    assert_eq!(first.iters, again.iters);
+}
+
+/// The pipeline veneer and a hand-built session agree on the outcome.
+#[test]
+fn pipeline_matches_manual_session() {
+    let lap = generators::grid2d(14, 14, generators::Coeff::Uniform, 0);
+    let o = PcgOptions { tol: 1e-7, max_iter: 2000, ..Default::default() };
+    let b = pcg::random_rhs(&lap, 9);
+    let method = Method::IcholT { droptol: Some(1e-3), fill_target: None };
+    let r = pipeline::run_with_rhs(&lap, &method, &o, &b).unwrap();
+
+    let mut s = method.solver_builder(&o).build(&lap).unwrap();
+    let out = s.solve(&b).unwrap();
+    assert_eq!(r.iters, out.iters);
+    assert_eq!(r.rel_residual, out.rel_residual);
+    assert_eq!(r.nnz, s.preconditioner().nnz());
+    assert_eq!(r.method, "ichol-t");
+}
+
+/// Every failure on the public surface is a typed error, never a panic.
+#[test]
+fn public_surface_returns_typed_errors() {
+    // Empty input.
+    let empty = parac::graph::Laplacian::from_edges(0, &[], "empty");
+    assert!(matches!(
+        Solver::builder().build(&empty),
+        Err(ParacError::BadInput(_))
+    ));
+    assert!(pipeline::run(&empty, &Method::Jacobi, &PcgOptions::default(), 1).is_err());
+
+    // Out-of-range knob.
+    let lap = generators::grid2d(6, 6, generators::Coeff::Uniform, 0);
+    assert!(matches!(
+        Solver::builder()
+            .preconditioner(PrecondKind::Ssor { omega: -1.0 })
+            .build(&lap),
+        Err(ParacError::InvalidOption { .. })
+    ));
+
+    // Dimension mismatches on both vector arguments.
+    let mut s = Solver::builder().build(&lap).unwrap();
+    let short = vec![1.0; 3];
+    let mut x = vec![0.0; lap.n()];
+    assert!(matches!(
+        s.solve_into(&short, &mut x),
+        Err(ParacError::DimensionMismatch { what: "rhs", .. })
+    ));
+    let b = pcg::random_rhs(&lap, 1);
+    let mut short_x = vec![0.0; 3];
+    assert!(matches!(
+        s.solve_into(&b, &mut short_x),
+        Err(ParacError::DimensionMismatch { what: "solution", .. })
+    ));
+
+    // Errors render useful messages.
+    let Err(e) = Solver::builder().build(&empty) else {
+        panic!("empty build must fail");
+    };
+    let msg = e.to_string();
+    assert!(msg.contains("bad input"), "{msg}");
+}
+
+/// Non-convergence is data, not an error: an impossible tolerance with
+/// a tiny budget returns Ok with `converged == false`.
+#[test]
+fn non_convergence_is_data() {
+    let lap = generators::grid2d(16, 16, generators::Coeff::HighContrast(5.0), 1);
+    let mut s = Solver::builder()
+        .preconditioner(PrecondKind::Identity)
+        .tol(1e-30)
+        .max_iter(3)
+        .build(&lap)
+        .unwrap();
+    let b = pcg::random_rhs(&lap, 2);
+    let out = s.solve(&b).expect("budget exhaustion must not be an error");
+    assert!(!out.converged);
+    assert!(out.iters <= 3);
+    assert!(out.rel_residual > 0.0);
+}
+
+/// The builder spans every ordering and engine combination.
+#[test]
+fn builder_spans_orderings_and_engines() {
+    let lap = generators::grid2d(10, 10, generators::Coeff::Uniform, 0);
+    let b = pcg::random_rhs(&lap, 3);
+    for ord in [Ordering::Amd, Ordering::NnzSort, Ordering::Random, Ordering::Rcm] {
+        for engine in [Engine::Seq, Engine::Cpu { threads: 2 }, Engine::GpuSim { blocks: 2 }] {
+            let mut s = Solver::builder()
+                .ordering(ord)
+                .engine(engine)
+                .seed(4)
+                .build(&lap)
+                .unwrap();
+            let out = s.solve(&b).unwrap();
+            assert!(out.converged, "{ord:?}/{engine:?}");
+        }
+    }
+}
