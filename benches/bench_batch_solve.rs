@@ -1,0 +1,94 @@
+//! Batch-solve bench: one `Solver` session, many right-hand sides —
+//! measures the amortization the persistent worker pool and
+//! `Solver::solve_batch` buy (RHS count × thread count × wall time,
+//! the ROADMAP's "heavy traffic" economics: setup is paid once, every
+//! additional RHS rides the warm factor, pool, and workspace).
+//!
+//! Emits `BENCH_batch_solve.json` through the hand-rolled JSON writer
+//! so successive PRs can diff the trajectory mechanically; CI runs
+//! this binary at `PARAC_SCALE=tiny` as a smoke step so thread-pool
+//! regressions (a deadlocked dispatch, a slow wakeup path) fail
+//! visibly rather than silently.
+
+mod bench_common;
+
+use parac::coordinator::pipeline::{self, BenchRow};
+use parac::coordinator::report::Table;
+use parac::graph::suite;
+use parac::solve::pcg;
+use parac::solver::Solver;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let max_threads = bench_common::bench_threads();
+    let mut thread_counts = vec![1usize];
+    if max_threads > 1 {
+        thread_counts.push(max_threads);
+    }
+    println!("## Batch solve: RHS count × thread count  [scale {scale:?}]\n");
+    let mut table = Table::new(&[
+        "problem", "rhs", "threads", "setup (s)", "batch (s)", "per-rhs (ms)", "iters",
+    ]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for name in ["uniform_3d_poisson", "GAP-road"] {
+        let e = suite::by_name(name).unwrap();
+        let lap = (e.build)(scale);
+        for &threads in &thread_counts {
+            let mut solver = match Solver::builder().seed(1).threads(threads).build(&lap) {
+                Ok(s) => s,
+                Err(err) => {
+                    eprintln!("error: {err}");
+                    std::process::exit(1);
+                }
+            };
+            let setup = solver.setup_secs();
+            for nrhs in [1usize, 4, 16] {
+                let bs: Vec<Vec<f64>> =
+                    (0..nrhs).map(|i| pcg::random_rhs(&lap, 100 + i as u64)).collect();
+                let refs: Vec<&[f64]> = bs.iter().map(|b| b.as_slice()).collect();
+                let mut xs = vec![Vec::new(); nrhs];
+                // Warm-up batch (pool creation, workspace sizing), then
+                // the timed batch on warm state.
+                solver.solve_batch(&refs, &mut xs).unwrap();
+                let t0 = std::time::Instant::now();
+                let stats = solver.solve_batch(&refs, &mut xs).unwrap();
+                let wall = t0.elapsed().as_secs_f64();
+                assert!(
+                    stats.iter().all(|s| s.converged),
+                    "{name}: batch must converge at every configuration"
+                );
+                let iters: usize = stats.iter().map(|s| s.iters).sum();
+                table.row(vec![
+                    e.name.into(),
+                    nrhs.to_string(),
+                    threads.to_string(),
+                    format!("{setup:.3}"),
+                    format!("{wall:.3}"),
+                    format!("{:.2}", wall / nrhs as f64 * 1e3),
+                    iters.to_string(),
+                ]);
+                rows.push(BenchRow {
+                    name: format!("{} n={} rhs={nrhs} threads={threads}", e.name, lap.n()),
+                    fields: vec![
+                        ("rhs", nrhs as f64),
+                        ("threads", threads as f64),
+                        ("setup_secs", setup),
+                        ("wall_secs", wall),
+                        ("per_rhs_secs", wall / nrhs as f64),
+                        ("iters", iters as f64),
+                    ],
+                });
+            }
+        }
+    }
+    print!("{}", table.render());
+    let json_path = std::path::Path::new("BENCH_batch_solve.json");
+    match pipeline::write_bench_rows_json(json_path, "batch_solve", &rows) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", json_path.display()),
+    }
+    println!(
+        "(one session per thread count: setup is paid once, every RHS \
+         after the first rides the warm factor + pool + workspace)"
+    );
+}

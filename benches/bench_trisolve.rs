@@ -51,5 +51,5 @@ fn main() {
         }
     }
     print!("{}", table.render());
-    println!("\n(1-core testbed: the level schedule pays thread overhead without parallel payoff; the `critical path` / `avg width` columns carry the architectural signal — see EXPERIMENTS.md)");
+    println!("\n(level sweeps dispatch onto the persistent `par` worker pool — no per-level thread spawns; on a 1-core testbed the dispatch still pays without parallel payoff, so the `critical path` / `avg width` columns carry the architectural signal — see EXPERIMENTS.md)");
 }

@@ -183,6 +183,42 @@ pub fn write_bench_json(
     std::fs::write(path, out)
 }
 
+/// A free-form bench row for [`write_bench_rows_json`]: a label plus
+/// named numeric fields. Used by benches whose rows are not pipeline
+/// [`RunResult`]s (e.g. `benches/bench_batch_solve.rs`).
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Row label (e.g. `"uniform_3d_poisson n=4096 rhs=8 threads=4"`).
+    pub name: String,
+    /// Named numeric fields, serialized in order.
+    pub fields: Vec<(&'static str, f64)>,
+}
+
+/// Write free-form bench rows as a machine-readable JSON file with the
+/// same shape (`bench` label + one `runs` array) and the same
+/// hand-rolled serialization helpers as [`write_bench_json`] — e.g.
+/// `BENCH_batch_solve.json` at the repo root.
+pub fn write_bench_rows_json(
+    path: &std::path::Path,
+    label: &str,
+    rows: &[BenchRow],
+) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"bench\": {},\n", json_string(label)));
+    out.push_str("  \"runs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str("    {");
+        out.push_str(&format!("\"name\":{}", json_string(&r.name)));
+        for (k, v) in &r.fields {
+            out.push_str(&format!(",{}:{}", json_string(k), json_f64(*v)));
+        }
+        out.push('}');
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Run one method on one Laplacian with a seeded right-hand side.
 pub fn run(
     lap: &Laplacian,
@@ -322,6 +358,28 @@ mod tests {
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.contains("\"bench\": \"unit\""));
         assert!(body.contains("\"runs\": ["));
+    }
+
+    #[test]
+    fn bench_rows_json_is_wellformed() {
+        let rows = vec![
+            BenchRow {
+                name: "grid rhs=8 threads=4".into(),
+                fields: vec![("rhs", 8.0), ("threads", 4.0), ("wall_secs", 0.125)],
+            },
+            BenchRow { name: "empty-fields".into(), fields: vec![("nan", f64::NAN)] },
+        ];
+        let dir = std::env::temp_dir().join("parac_pipeline_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_rows_unit.json");
+        write_bench_rows_json(&path, "batch_solve unit", &rows).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"bench\": \"batch_solve unit\""));
+        assert!(body.contains("\"name\":\"grid rhs=8 threads=4\""));
+        assert!(body.contains("\"rhs\":8"));
+        assert!(body.contains("\"wall_secs\":0.125"));
+        // Non-finite fields serialize as null, same as RunResult.
+        assert!(body.contains("\"nan\":null"));
     }
 
     #[test]

@@ -23,11 +23,9 @@ fn pcg_opts() -> PcgOptions {
 }
 
 fn workers(threads: usize) -> usize {
-    if threads == 0 {
-        default_threads()
-    } else {
-        threads
-    }
+    // Clamp to the persistent pool exactly like the engines do, so the
+    // table headers report the worker count that actually runs.
+    if threads == 0 { default_threads() } else { threads }.min(crate::par::global().size())
 }
 
 /// Table 2 — CPU convergence: ParAC (AMD) vs fill-matched ICT vs AMG

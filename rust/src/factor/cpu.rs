@@ -16,6 +16,10 @@
 //!
 //! Memory: one shared fill arena and one shared output arena, both
 //! bump-allocated (§5.2.1) — no malloc, no locks on the hot path.
+//!
+//! Workers run on the persistent [`crate::par`] pool (one pool job per
+//! factorization, each part executing the worker loop) instead of
+//! spawning scoped OS threads per call.
 
 use super::chunk::{Bump, FillArena, SharedBuf, NIL};
 use super::depend::DepCounts;
@@ -57,7 +61,11 @@ pub fn factorize_csr(
 ) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
     let timer = Timer::start();
     let n = a.nrows;
-    let threads = if threads == 0 { default_threads() } else { threads }.max(1).min(n.max(1));
+    let pool = crate::par::global();
+    let threads = if threads == 0 { default_threads() } else { threads }
+        .max(1)
+        .min(n.max(1))
+        .min(pool.size());
     let cap_fill = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
     // Output: every merged column entry; bounded by original lower
     // triangle + every fill node.
@@ -87,11 +95,7 @@ pub fn factorize_csr(
         timing: stage_timing,
     };
 
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| worker(&shared));
-        }
-    });
+    pool.run(threads, |_part, _parts| worker(&shared));
 
     if shared.queue.is_poisoned() {
         return Err(FactorError::ArenaFull { capacity: cap_fill });

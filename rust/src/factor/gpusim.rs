@@ -1,7 +1,10 @@
 //! Right-looking GPU-model engine — Algorithm 4 on the simulated
 //! persistent-kernel substrate (`crate::gpusim`).
 //!
-//! One OS thread plays one persistent *block*: it polls the shared job
+//! One persistent [`crate::par`] pool worker plays one persistent
+//! *block* (the pool itself is the CPU stand-in for the paper's
+//! resident kernel — workers outlive every factorization instead of
+//! being spawned per call): it polls the shared job
 //! queue (cyclic claim), eliminates its vertex with block-level
 //! primitives (bitonic sort, flag/prefix-sum duplicate merge, CDF
 //! search), and pushes right-looking Schur updates into the
@@ -78,7 +81,11 @@ pub fn factorize_csr_hash(
 ) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
     let timer = Timer::start();
     let n = a.nrows;
-    let blocks = if blocks == 0 { default_threads() } else { blocks }.max(1).min(n.max(1));
+    let pool = crate::par::global();
+    let blocks = if blocks == 0 { default_threads() } else { blocks }
+        .max(1)
+        .min(n.max(1))
+        .min(pool.size());
     let cap_w = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
     let cap_out = a.nnz() / 2 + cap_w + n;
 
@@ -103,11 +110,7 @@ pub fn factorize_csr_hash(
         timing: stage_timing,
     };
 
-    std::thread::scope(|s| {
-        for _ in 0..blocks {
-            s.spawn(|| block_loop(&shared));
-        }
-    });
+    pool.run(blocks, |_part, _parts| block_loop(&shared));
 
     if shared.queue.is_poisoned() {
         return Err(FactorError::WorkspaceFull { capacity: cap_w });

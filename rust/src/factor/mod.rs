@@ -32,6 +32,12 @@ use crate::ordering::Ordering;
 use crate::sparse::Csr;
 
 /// Which factorization engine to run.
+///
+/// The parallel engines run on the persistent [`crate::par`] worker
+/// pool, so `threads`/`blocks` counts above the pool size are clamped
+/// to it (the pool is sized at first use — `PARAC_THREADS` or auto);
+/// [`FactorStats`] records the count that actually ran. The factor
+/// itself is bit-identical for any worker count.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
     /// Sequential reference implementation.
@@ -43,7 +49,9 @@ pub enum Engine {
 }
 
 impl Engine {
-    /// Parse a CLI name (`seq`, `cpu`, `cpu:8`, `gpusim`, `gpusim:64`).
+    /// Parse a CLI name (`seq`, `cpu`, `cpu:8`, `gpusim`, `gpusim:64`;
+    /// `gpu`/`gpu:64` are accepted aliases for `gpusim` — [`Engine::name`]
+    /// always renders the canonical `gpusim` spelling).
     pub fn parse(s: &str) -> Option<Engine> {
         let (name, arg) = match s.split_once(':') {
             Some((n, a)) => (n, a.parse().ok()?),

@@ -22,10 +22,15 @@
 //! ## Quickstart: the `Solver` session
 //!
 //! The documented entry point is [`solver::Solver`]: a builder collects
-//! the ordering / engine / seed / preconditioner / PCG knobs, `build`
-//! factors once, and the session then solves any number of right-hand
-//! sides with **zero heap allocations per PCG iteration** (the Krylov
-//! workspace is created once and reused; every error is a typed
+//! the ordering / engine / seed / preconditioner / PCG knobs plus the
+//! solve-phase parallelism ([`solver::SolverBuilder::threads`] — SpMV
+//! row splits and level-scheduled triangular solves served by the
+//! persistent [`par`] worker pool), `build` factors once, and the
+//! session then solves any number of right-hand sides — one at a time
+//! ([`solver::Solver::solve_into`]) or as a batch
+//! ([`solver::Solver::solve_batch`], bit-identical to the loop) — with
+//! **zero heap allocations per PCG iteration** (the Krylov workspace is
+//! created once and reused; every error is a typed
 //! [`error::ParacError`], never a panic):
 //!
 //! ```
@@ -38,19 +43,24 @@
 //! let lap = generators::grid2d(12, 12, Coeff::Uniform, 42);
 //! let mut solver = Solver::builder()
 //!     .ordering(Ordering::NnzSort)
-//!     .engine(Engine::Cpu { threads: 2 })
+//!     .engine(Engine::Cpu { threads: 2 }) // factorization parallelism
+//!     .threads(2)                         // solve-phase parallelism
 //!     .seed(7)
 //!     .build(&lap)
 //!     .expect("solver setup");
 //!
-//! let b = pcg::random_rhs(&lap, 1);
-//! let mut x = vec![0.0; lap.n()];
-//! let stats = solver.solve_into(&b, &mut x).expect("dimensions match");
-//! assert!(stats.converged, "rel residual {}", stats.rel_residual);
-//!
-//! // The session is reusable: same factor, same workspace, next rhs.
+//! // A batch of right-hand sides rides one factor, one pool, and one
+//! // workspace; results are bit-identical to looping `solve_into`.
+//! let b1 = pcg::random_rhs(&lap, 1);
 //! let b2 = pcg::random_rhs(&lap, 2);
-//! assert!(solver.solve_into(&b2, &mut x).unwrap().converged);
+//! let mut xs = vec![Vec::new(); 2];
+//! let stats = solver.solve_batch(&[&b1, &b2], &mut xs).expect("dimensions match");
+//! assert!(stats.iter().all(|s| s.converged));
+//!
+//! // The session stays reusable for single right-hand sides too.
+//! let b3 = pcg::random_rhs(&lap, 3);
+//! let mut x = vec![0.0; lap.n()];
+//! assert!(solver.solve_into(&b3, &mut x).unwrap().converged);
 //! ```
 //!
 //! The lower-level pieces remain public: [`factor::factorize`] produces
@@ -64,7 +74,9 @@
 //! generators mirroring the paper's matrix suite ([`graph`]), orderings
 //! (AMD, nnz-sort, random, RCM — [`ordering`]), elimination-tree
 //! analytics ([`etree`]), PCG with level-scheduled triangular solves
-//! ([`solve`]), and baseline preconditioners (IC(0), ICT,
+//! ([`solve`]), the persistent worker pool behind every parallel
+//! section ([`par`] — the CPU stand-in for the paper's resident
+//! kernel), and baseline preconditioners (IC(0), ICT,
 //! smoothed-aggregation AMG, Jacobi — [`precond`]). A PJRT runtime
 //! ([`runtime`], gated behind the off-by-default `xla` cargo feature)
 //! loads AOT-compiled JAX/Pallas artifacts for the L1/L2 layers (see
@@ -90,6 +102,7 @@ pub mod factor;
 pub mod gpusim;
 pub mod graph;
 pub mod ordering;
+pub mod par;
 pub mod precond;
 pub mod rng;
 pub mod runtime;

@@ -11,6 +11,7 @@ use parac::factor::{Engine, ParacOptions};
 use parac::graph::suite::{self, Scale};
 use parac::ordering::Ordering;
 use parac::solve::pcg::PcgOptions;
+use parac::solver::PrecondKind;
 use parac::util::fmt_count;
 
 fn main() {
@@ -48,9 +49,11 @@ USAGE:
   parac suite [--scale tiny|small|medium]  list the benchmark suite
   parac factor --matrix NAME [--engine seq|cpu[:T]|gpusim[:B]]
                [--ordering amd|nnz|random|natural|rcm] [--seed S]
-  parac solve  --matrix NAME [--method parac|ichol0|icholt|amg|jacobi|ssor|identity]
+               (\"gpu\" is an accepted alias for gpusim: gpu, gpu:8)
+  parac solve  --matrix NAME
+               [--method parac[:T]|ichol0|icholt[:DROPTOL]|amg|jacobi|ssor[:OMEGA]|identity]
                [--tol 1e-8] [--max-iter 1000] [--level-threads T] [--omega 1.5]
-               [engine/ordering flags]
+               [--droptol 1e-3] [engine/ordering flags]
   parac repro table2|table3|fig3|fig4|hash [--scale tiny|small|medium] [--threads T]
 "
     );
@@ -151,24 +154,24 @@ fn solve_cmd(args: &Args) -> Result<(), ParacError> {
         max_iter: args.get_parse("max-iter", 1000usize),
         ..Default::default()
     };
-    let method_name = args.get("method", "parac");
-    let method = match method_name {
-        "parac" => Method::Parac {
+    // `--method` accepts the same parameterized spellings as
+    // `PrecondKind::parse` (`parac:8`, `icholt:1e-4`, `ssor:1.2`);
+    // explicit flags (`--level-threads`, `--droptol`, `--omega`) win
+    // over the inline parameter when both are given.
+    let method = match PrecondKind::parse(args.get("method", "parac"))? {
+        PrecondKind::Parac { level_threads } => Method::Parac {
             opts: parac_opts(args)?,
-            level_threads: args.get_parse("level-threads", 0usize),
+            level_threads: args.get_parse("level-threads", level_threads),
         },
-        "ichol0" => Method::Ichol0,
-        "icholt" => Method::IcholT {
-            droptol: Some(args.get_parse("droptol", 1e-3f64)),
-            fill_target: None,
+        PrecondKind::Ichol0 => Method::Ichol0,
+        PrecondKind::IcholT { droptol, fill_target } => Method::IcholT {
+            droptol: Some(args.get_parse("droptol", droptol.unwrap_or(1e-3))),
+            fill_target,
         },
-        "amg" => Method::Amg,
-        "jacobi" => Method::Jacobi,
-        "ssor" => Method::Ssor { omega: args.get_parse("omega", 1.5f64) },
-        "identity" | "none" => Method::Identity,
-        other => {
-            return Err(ParacError::InvalidOption { what: "method", got: other.into() });
-        }
+        PrecondKind::Amg => Method::Amg,
+        PrecondKind::Jacobi => Method::Jacobi,
+        PrecondKind::Ssor { omega } => Method::Ssor { omega: args.get_parse("omega", omega) },
+        PrecondKind::Identity => Method::Identity,
     };
     let r = pipeline::run(&lap, &method, &pcg_opts, args.get_parse("rhs-seed", 7u64))?;
     let mut t = Table::new(&["method", "setup (s)", "solve (s)", "iters", "rel residual"]);

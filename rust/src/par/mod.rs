@@ -1,0 +1,134 @@
+//! Crate-wide persistent parallelism — the CPU analogue of the paper's
+//! persistent GPU kernel (§5.1).
+//!
+//! The paper's GPU design launches one kernel whose blocks stay
+//! resident while work is fed to them through queues. The CPU
+//! reproduction used to do the opposite: every parallel section —
+//! every level of every triangular-solve sweep of every PCG iteration
+//! — spawned and joined fresh OS threads, thousands of times per
+//! solve. This module replaces all of that with one
+//! [`WorkerPool`]: fixed worker threads created once, jobs dispatched
+//! as chunked index ranges with a completion barrier, and **zero heap
+//! allocation on the steady-state dispatch path** (asserted by the
+//! tracking-allocator test in `rust/tests/alloc_free.rs`).
+//!
+//! Users:
+//! * [`crate::solve::trisolve`] — level-scheduled sweeps dispatch each
+//!   level's vertex slice through the pool.
+//! * [`crate::sparse::Csr::spmv_par`] — SpMV split by row ranges.
+//! * [`crate::factor::cpu`] / [`crate::factor::gpusim`] — the engine
+//!   worker/block loops run as one pool job per factorization.
+//!
+//! [`global`] returns the process-wide pool. Its size is fixed at
+//! first use: `PARAC_THREADS` if set (respected exactly, so a
+//! constrained container can bound the thread count), otherwise the
+//! larger of the available parallelism and [`MIN_GLOBAL_POOL`] (a
+//! floor so the concurrent engines still run genuinely multi-threaded
+//! — and their schedule-independence guarantees stay exercised — on
+//! small CI machines). Requests beyond the pool size are clamped:
+//! engine `threads`/`blocks` counts above it run with the pool's
+//! actual width (and report it — `FactorStats` carries the effective
+//! count).
+
+mod pool;
+
+pub use pool::WorkerPool;
+
+use std::sync::OnceLock;
+
+/// Minimum size of the [`global`] pool (see the module docs).
+pub const MIN_GLOBAL_POOL: usize = 4;
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide worker pool, created on first use and kept for the
+/// lifetime of the process. Idle workers park on a condvar, so an
+/// unused pool costs nothing but its stacks. Sizing: an explicit
+/// `PARAC_THREADS` is respected exactly; the auto-detected size gets
+/// the [`MIN_GLOBAL_POOL`] floor (see the module docs).
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        let size = match std::env::var("PARAC_THREADS").ok().and_then(|s| s.parse().ok()) {
+            Some(n) if n >= 1 => n,
+            _ => crate::util::default_threads().max(MIN_GLOBAL_POOL),
+        };
+        WorkerPool::new(size)
+    })
+}
+
+/// Contiguous index range of part `part` out of `parts` over `len`
+/// items: ceil-divided chunks, so every index is covered exactly once
+/// and parts differ in size by at most one chunk tail.
+#[inline]
+pub fn chunk_range(len: usize, part: usize, parts: usize) -> (usize, usize) {
+    let chunk = len.div_ceil(parts.max(1));
+    let lo = (part * chunk).min(len);
+    let hi = (lo + chunk).min(len);
+    (lo, hi)
+}
+
+/// A `Send + Sync` raw-pointer wrapper so pool parts can write disjoint
+/// entries of one buffer (level-scheduled solves, row-split SpMV). All
+/// safety obligations sit on the reader/writer: callers guarantee that
+/// no two parts touch the same index and that the buffer outlives the
+/// dispatch.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T: Copy> SendPtr<T> {
+    /// Wrap a buffer's base pointer.
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr(ptr)
+    }
+
+    /// Read entry `i`.
+    ///
+    /// # Safety
+    /// `i` is in bounds and no other part writes it concurrently.
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T {
+        *self.0.add(i)
+    }
+
+    /// Write entry `i`.
+    ///
+    /// # Safety
+    /// `i` is in bounds and this part has exclusive access to it.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        *self.0.add(i) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for len in [0usize, 1, 7, 256, 1000] {
+            for parts in [1usize, 2, 3, 8] {
+                let mut covered = 0usize;
+                let mut prev_hi = 0usize;
+                for part in 0..parts {
+                    let (lo, hi) = chunk_range(len, part, parts);
+                    assert!(lo <= hi && hi <= len, "len={len} parts={parts} part={part}");
+                    assert!(lo >= prev_hi, "parts must not overlap");
+                    prev_hi = hi;
+                    covered += hi - lo;
+                }
+                assert_eq!(covered, len, "len={len} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let p = global();
+        assert!(p.size() >= 1);
+        assert!(std::ptr::eq(p, global()));
+    }
+}

@@ -1,0 +1,416 @@
+//! The persistent worker pool.
+//!
+//! One fixed set of OS threads is created once and then fed *jobs*: a
+//! job is a `Fn(part, parts)` closure that every participant runs with
+//! its own part index, splitting the work by index ranges. Dispatch is
+//! the CPU analogue of the paper's persistent GPU kernel (§5.1): the
+//! workers never exit, they spin briefly on an epoch counter and park
+//! on a condvar when idle, and publishing a job is a pointer write + an
+//! epoch bump + a wakeup — **no heap allocation on the steady-state
+//! dispatch path** (the futex-based `std` mutex/condvar do not allocate
+//! after construction, and the job closure is borrowed from the
+//! dispatcher's stack, never boxed).
+//!
+//! The dispatching thread participates as part `0`, so a pool of size
+//! `N` spawns `N − 1` threads and `threads == 1` degenerates to a plain
+//! inline call with zero synchronization.
+
+use std::cell::Cell;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Spins on the epoch counter before a worker parks on the condvar
+/// (persistent-kernel-style polling keeps per-level dispatch latency in
+/// the nanosecond range while levels are streaming in back-to-back).
+const IDLE_SPINS: u32 = 4096;
+
+/// Spins the dispatcher waits for job completion before parking.
+const DONE_SPINS: u32 = 65_536;
+
+thread_local! {
+    /// Set inside pool workers so nested dispatch degrades to an inline
+    /// call instead of deadlocking on the pool's own capacity.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A type-erased borrowed job: `call(data, part, parts)` invokes the
+/// dispatcher's closure. Valid only while the dispatcher is blocked in
+/// [`WorkerPool::run`], which is exactly when workers read it.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+    parts: usize,
+}
+
+impl Job {
+    const IDLE: Job = Job { data: std::ptr::null(), call: noop_call, parts: 0 };
+}
+
+/// `Job::IDLE` placeholder target; never invoked.
+unsafe fn noop_call(_: *const (), _: usize, _: usize) {}
+
+/// Monomorphized trampoline from the erased pointer back to `F`.
+///
+/// # Safety
+/// `data` must point to a live `F` shared with `&F` semantics.
+unsafe fn call_shim<F: Fn(usize, usize) + Sync>(data: *const (), part: usize, parts: usize) {
+    (*(data as *const F))(part, parts)
+}
+
+/// State shared between the dispatcher and the workers.
+struct Inner {
+    /// The current job; written by the dispatcher only while every
+    /// worker is idle (`remaining == 0` and the dispatch lock held).
+    job: std::cell::UnsafeCell<Job>,
+    /// Bumped (under `sleep`) each time a new job is published.
+    epoch: AtomicUsize,
+    /// Paired with `cv` for idle workers.
+    sleep: Mutex<()>,
+    cv: Condvar,
+    /// Workers that have not yet finished the current epoch.
+    remaining: AtomicUsize,
+    /// Paired with `done_cv` for the waiting dispatcher.
+    done: Mutex<()>,
+    done_cv: Condvar,
+    /// A job closure panicked on a worker.
+    panicked: AtomicBool,
+    /// Pool is being dropped.
+    shutdown: AtomicBool,
+}
+
+// SAFETY: `job` is only mutated by the dispatcher between epochs (all
+// workers idle, dispatch lock held) and only read by workers during an
+// epoch; the epoch bump under `sleep` publishes the write. The raw
+// pointers inside `Job` are only dereferenced while the dispatcher —
+// which owns the pointee — is blocked in `run`, so moving/sharing
+// `Inner` across threads is sound.
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+/// A persistent fork-join worker pool (see the module docs).
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    /// Serializes concurrent dispatchers (the pool is one shared
+    /// resource; jobs from different sessions queue up FIFO-ish).
+    dispatch: Mutex<()>,
+    /// Total participants including the dispatching caller.
+    size: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Create a pool with `threads` total participants (the calling
+    /// thread counts as one, so this spawns `threads − 1` workers;
+    /// `threads` is clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let size = threads.max(1);
+        let inner = Arc::new(Inner {
+            job: std::cell::UnsafeCell::new(Job::IDLE),
+            epoch: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
+            cv: Condvar::new(),
+            remaining: AtomicUsize::new(0),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..size)
+            .map(|part| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("parac-pool-{part}"))
+                    .spawn(move || worker_loop(&inner, part))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { inner, dispatch: Mutex::new(()), size, handles }
+    }
+
+    /// Total participants (spawned workers + the dispatching caller).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(part, parts)` for every `part in 0..parts`, split across
+    /// the pool, and block until all parts finished. `parts` is clamped
+    /// to the pool size; the caller executes part 0. Panics from `f`
+    /// are re-raised here after every part has stopped.
+    ///
+    /// `f` must not dispatch onto the pool itself — nested calls
+    /// degrade to an inline `f(0, 1)`.
+    pub fn run<F: Fn(usize, usize) + Sync>(&self, parts: usize, f: F) {
+        let parts = parts.clamp(1, self.size);
+        if parts == 1 || IN_POOL_WORKER.with(|w| w.get()) {
+            f(0, 1);
+            return;
+        }
+        let _d = lock(&self.dispatch);
+        let inner = &*self.inner;
+        // SAFETY: every worker is idle between epochs (remaining == 0
+        // observed by the previous run's completion wait) and the
+        // dispatch lock excludes other writers.
+        unsafe {
+            *inner.job.get() = Job { data: &f as *const F as *const (), call: call_shim::<F>, parts };
+        }
+        // Every spawned worker acknowledges every epoch, including the
+        // ones with `part >= parts` that skip the call: the barrier is
+        // what makes it safe to overwrite the job slot on the next
+        // dispatch (a participants-only ack would let a slow idle
+        // worker tear-read the next job). Cost: one wakeup + one
+        // decrement per idle worker per dispatch.
+        inner.remaining.store(self.size - 1, Ordering::Release);
+        {
+            let _g = lock(&inner.sleep);
+            inner.epoch.fetch_add(1, Ordering::Release);
+        }
+        inner.cv.notify_all();
+
+        // The caller is part 0. A panic here must still wait for the
+        // workers — they borrow `f` from this stack frame. The flag is
+        // set for the duration of the shard so a nested dispatch from
+        // part 0 degrades inline like it does on the spawned workers
+        // (re-locking the non-reentrant dispatch mutex would deadlock);
+        // it cannot already be set here, or the entry check above would
+        // have taken the inline path.
+        IN_POOL_WORKER.with(|w| w.set(true));
+        let caller = std::panic::catch_unwind(AssertUnwindSafe(|| f(0, parts)));
+        IN_POOL_WORKER.with(|w| w.set(false));
+
+        let mut spins = 0u32;
+        while inner.remaining.load(Ordering::Acquire) != 0 {
+            spins += 1;
+            if spins < DONE_SPINS {
+                std::hint::spin_loop();
+            } else {
+                let mut g = lock(&inner.done);
+                while inner.remaining.load(Ordering::Acquire) != 0 {
+                    g = wait(&inner.done_cv, g);
+                }
+                break;
+            }
+        }
+
+        // Clear the workers' panic flag before re-raising the caller's
+        // own panic: a caught dispatch failure must not poison the next
+        // (healthy) job.
+        let worker_panicked = inner.panicked.swap(false, Ordering::AcqRel);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("a worker-pool job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        {
+            let _g = lock(&self.inner.sleep);
+        }
+        self.inner.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lock a mutex, ignoring poisoning (pool state is all atomics; the
+/// guards protect nothing but the condvar protocol).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Condvar wait, ignoring poisoning (see [`lock`]).
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|p| p.into_inner())
+}
+
+/// Block until the epoch moves past `seen` (or shutdown): bounded spin,
+/// then park on the condvar. Returns the epoch observed.
+fn wait_for_work(inner: &Inner, seen: usize) -> usize {
+    let mut spins = 0u32;
+    loop {
+        let e = inner.epoch.load(Ordering::Acquire);
+        if e != seen || inner.shutdown.load(Ordering::Acquire) {
+            return e;
+        }
+        spins += 1;
+        if spins < IDLE_SPINS {
+            std::hint::spin_loop();
+        } else {
+            let mut g = lock(&inner.sleep);
+            loop {
+                let e = inner.epoch.load(Ordering::Acquire);
+                if e != seen || inner.shutdown.load(Ordering::Acquire) {
+                    return e;
+                }
+                g = wait(&inner.cv, g);
+            }
+        }
+    }
+}
+
+/// The persistent worker body: wait for an epoch, run this worker's
+/// part, acknowledge, repeat until shutdown.
+fn worker_loop(inner: &Inner, part: usize) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    let mut seen = 0usize;
+    loop {
+        let e = wait_for_work(inner, seen);
+        if inner.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        seen = e;
+        // SAFETY: published by the epoch bump; the dispatcher keeps the
+        // closure alive until `remaining` drops to zero.
+        let job = unsafe { *inner.job.get() };
+        if part < job.parts {
+            let ok = std::panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, part, job.parts)
+            }))
+            .is_ok();
+            if !ok {
+                inner.panicked.store(true, Ordering::Release);
+            }
+        }
+        if inner.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = lock(&inner.done);
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_parts_run_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        for _ in 0..100 {
+            pool.run(4, |part, parts| {
+                assert_eq!(parts, 4);
+                hits[part].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 100);
+        }
+    }
+
+    #[test]
+    fn parts_clamped_to_pool_size() {
+        let pool = WorkerPool::new(2);
+        let seen = AtomicU64::new(0);
+        pool.run(64, |part, parts| {
+            assert!(parts <= 2);
+            assert!(part < parts);
+            seen.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn single_part_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicU64::new(0);
+        pool.run(8, |part, parts| {
+            assert_eq!((part, parts), (0, 1));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunked_sum_matches_sequential() {
+        let pool = WorkerPool::new(3);
+        let xs: Vec<u64> = (0..10_000).collect();
+        let partial: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        pool.run(3, |part, parts| {
+            let (lo, hi) = super::super::chunk_range(xs.len(), part, parts);
+            let s: u64 = xs[lo..hi].iter().sum();
+            partial[part].store(s, Ordering::Relaxed);
+        });
+        let total: u64 = partial.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, xs.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, |part, _| {
+                if part == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must surface to the dispatcher");
+        // The pool must still dispatch after a failed job.
+        let ok = AtomicU64::new(0);
+        pool.run(2, |_, _| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn nested_dispatch_degrades_inline() {
+        // From spawned workers AND from the dispatching caller (part
+        // 0), a nested `run` must degrade to an inline call instead of
+        // re-locking the non-reentrant dispatch mutex.
+        let pool = WorkerPool::new(2);
+        let hits = AtomicU64::new(0);
+        pool.run(2, |_, _| {
+            pool.run(2, |part, parts| {
+                assert_eq!((part, parts), (0, 1));
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn caller_panic_does_not_poison_next_dispatch() {
+        // Every part panics (caller included). The caller's panic is
+        // re-raised, but the workers' panic flag must be cleared so the
+        // next healthy job doesn't report a stale failure.
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, |part, _| panic!("part {part} fails"));
+        }));
+        assert!(r.is_err());
+        let ok = AtomicU64::new(0);
+        pool.run(2, |_, _| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn sequential_reuse_many_epochs() {
+        // Hammer the epoch protocol: results must be deterministic.
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 1 << 12];
+        for round in 0..200u64 {
+            let ptr = crate::par::SendPtr::new(data.as_mut_ptr());
+            let n = data.len();
+            pool.run(4, |part, parts| {
+                let (lo, hi) = super::super::chunk_range(n, part, parts);
+                for i in lo..hi {
+                    // SAFETY: [lo, hi) ranges are disjoint across parts.
+                    unsafe { ptr.write(i, ptr.read(i) + round) };
+                }
+            });
+        }
+        let want: u64 = (0..200).sum();
+        assert!(data.iter().all(|&v| v == want));
+    }
+}

@@ -2,13 +2,14 @@
 //! level-scheduled parallel triangular solve (the paper's GPU solve
 //! path; cf. Table 3's SPSV analysis stage).
 //!
-//! The apply itself is allocation-free: the permuted intermediate
-//! lives in a scratch buffer sized once at construction (behind an
-//! uncontended `Mutex` so the preconditioner stays `Sync`; PCG applies
-//! it sequentially, so the lock never blocks and never allocates).
-//! Exception: level-scheduled mode with `threads > 1` spawns scoped
-//! worker threads (which allocate) for levels wider than the
-//! parallelism cutoff — see `solve::trisolve`.
+//! The apply is allocation-free in **both** modes: the permuted
+//! intermediate lives in a scratch buffer sized once at construction
+//! (behind an uncontended `Mutex` so the preconditioner stays `Sync`;
+//! PCG applies it sequentially, so the lock never blocks and never
+//! allocates), and level-scheduled mode with `threads > 1` dispatches
+//! wide levels onto the persistent [`crate::par`] worker pool — no
+//! thread spawns, no heap allocation after the pool is warm (see
+//! `solve::trisolve` and the assertion in `rust/tests/alloc_free.rs`).
 
 use super::Preconditioner;
 use crate::factor::LdlFactor;
@@ -78,7 +79,7 @@ impl Preconditioner for LdlPrecond {
                 for (yk, &d) in y.iter_mut().zip(&f.diag) {
                     *yk = if d > 0.0 { *yk / d } else { 0.0 };
                 }
-                sched.backward(y, self.threads);
+                sched.backward(&f.g, y, self.threads);
                 if let Some(p) = &f.perm {
                     for (i, zi) in z.iter_mut().enumerate() {
                         *zi = scratch[p[i] as usize];

@@ -12,10 +12,12 @@
 //! * [`trisolve`] — level-scheduled parallel triangular solves with the
 //!   unit-lower factor `G`: [`trisolve::LevelSchedule`] groups columns
 //!   by depth in the solve DAG once per factor ("analysis"), then
-//!   forward/backward sweeps run each level in parallel — mirroring
-//!   cuSPARSE's SPSV analysis/solve split (paper §6.2). Both sweeps
-//!   operate in place on caller buffers. The sequential alternative
-//!   lives on [`crate::factor::LdlFactor`] itself (`forward_inplace` /
+//!   forward/backward sweeps dispatch each sufficiently wide level onto
+//!   the persistent [`crate::par`] worker pool — mirroring cuSPARSE's
+//!   SPSV analysis/solve split (paper §6.2), with no thread spawns and
+//!   no allocation per sweep. Both sweeps operate in place on caller
+//!   buffers. The sequential alternative lives on
+//!   [`crate::factor::LdlFactor`] itself (`forward_inplace` /
 //!   `backward_inplace` / `solve` / `solve_into`).
 
 pub mod linop;

@@ -8,18 +8,31 @@
 //!   why nnz-sort/random beat AMD on the GPU).
 //!
 //! The level schedule is computed once per factor and reused across PCG
-//! iterations, mirroring cuSPARSE's analysis + solve split.
+//! iterations, mirroring cuSPARSE's analysis + solve split. Parallel
+//! levels are dispatched through the persistent [`crate::par`] worker
+//! pool, so a sweep costs one pool dispatch per sufficiently wide level
+//! and **no thread spawns and no heap allocations** — the analysis
+//! phase owns the only materialized copy (`G` in CSR for the forward
+//! sweep); the backward sweep borrows the factor's own CSC storage at
+//! call time.
 
 use crate::etree;
 use crate::factor::LdlFactor;
-use crate::sparse::Csr;
+use crate::par::{self, SendPtr};
+use crate::sparse::{Csc, Csr};
+
+/// Below this many vertices a level runs sequentially on the calling
+/// thread — dispatch latency would dominate the arithmetic.
+const LEVEL_PAR_CUTOFF: usize = 256;
 
 /// Precomputed level schedule for both sweeps of `G D Gᵀ` solves.
+///
+/// Stores `G` row-wise (CSR) for the forward sweep; the backward sweep
+/// reads columns and borrows the factor's CSC storage per call, so the
+/// schedule holds exactly one extra copy of the factor structure.
 pub struct LevelSchedule {
     /// Rows of `G` (strictly lower), CSR — forward sweep reads rows.
     g_rows: Csr,
-    /// Columns of `G` (strictly lower), CSC — backward sweep reads cols.
-    g_cols: crate::sparse::Csc,
     /// Vertices grouped by forward level, concatenated.
     fwd_order: Vec<u32>,
     /// Level boundaries into `fwd_order`.
@@ -76,8 +89,9 @@ impl LevelSchedule {
         let (fwd_order, fwd_ptr) = bucket(&fwd_levels, maxl);
         let (bwd_order, bwd_ptr) = bucket(&bwd_levels, bmax as usize);
         LevelSchedule {
-            g_rows: f.g.clone().transpose_view_csr().transpose(),
-            g_cols: f.g.clone(),
+            // Single direct CSC→CSR transpose of the borrowed factor —
+            // no intermediate clones of `G` are materialized.
+            g_rows: f.g.to_csr(),
             fwd_order,
             fwd_ptr,
             bwd_order,
@@ -87,11 +101,11 @@ impl LevelSchedule {
     }
 
     /// Forward solve `G y = r` in place using the level schedule with
-    /// `threads` workers.
+    /// up to `threads` pool workers.
     pub fn forward(&self, y: &mut [f64], threads: usize) {
         // y[k] = r[k] − Σ_{j<k} G[k,j]·y[j]; all k in a level are
         // independent.
-        let yptr = SendPtr(y.as_mut_ptr());
+        let yptr = SendPtr::new(y.as_mut_ptr());
         for lev in 0..self.fwd_ptr.len() - 1 {
             let verts = &self.fwd_order[self.fwd_ptr[lev]..self.fwd_ptr[lev + 1]];
             parallel_chunks(verts, threads, |v| {
@@ -99,85 +113,58 @@ impl LevelSchedule {
                 // SAFETY: level discipline — all reads are from earlier
                 // levels, the single write is to this vertex's slot.
                 unsafe {
-                    let mut acc = yptr.get(k);
+                    let mut acc = yptr.read(k);
                     for (&j, &g) in
                         self.g_rows.row_indices(k).iter().zip(self.g_rows.row_data(k))
                     {
-                        acc -= g * yptr.get(j as usize);
+                        acc -= g * yptr.read(j as usize);
                     }
-                    yptr.set(k, acc);
+                    yptr.write(k, acc);
                 }
             });
         }
     }
 
-    /// Backward solve `Gᵀ z = y` in place using the level schedule.
-    pub fn backward(&self, y: &mut [f64], threads: usize) {
+    /// Backward solve `Gᵀ z = y` in place using the level schedule;
+    /// `g` is the factor's own CSC storage (strictly lower), borrowed
+    /// rather than copied into the schedule.
+    pub fn backward(&self, g: &Csc, y: &mut [f64], threads: usize) {
         // z[k] = y[k] − Σ_{r>k} G[r,k]·z[r]; read column k of G.
-        let yptr = SendPtr(y.as_mut_ptr());
-        let g = &self.g_cols;
+        debug_assert_eq!(g.ncols, self.g_rows.nrows);
+        let yptr = SendPtr::new(y.as_mut_ptr());
         for lev in 0..self.bwd_ptr.len() - 1 {
             let verts = &self.bwd_order[self.bwd_ptr[lev]..self.bwd_ptr[lev + 1]];
             parallel_chunks(verts, threads, |v| {
                 let k = v as usize;
                 // SAFETY: level discipline (transpose DAG).
                 unsafe {
-                    let mut acc = yptr.get(k);
+                    let mut acc = yptr.read(k);
                     for (&r, &gv) in g.col_rows(k).iter().zip(g.col_data(k)) {
-                        acc -= gv * yptr.get(r as usize);
+                        acc -= gv * yptr.read(r as usize);
                     }
-                    yptr.set(k, acc);
+                    yptr.write(k, acc);
                 }
             });
         }
     }
-
 }
 
-/// Pointer wrapper so level workers can write disjoint entries.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    /// Read entry `i`.
-    ///
-    /// # Safety
-    /// Caller guarantees no concurrent write to `i`.
-    #[inline]
-    unsafe fn get(&self, i: usize) -> f64 {
-        *self.0.add(i)
-    }
-
-    /// Write entry `i`.
-    ///
-    /// # Safety
-    /// Caller guarantees exclusive access to `i` (level discipline).
-    #[inline]
-    unsafe fn set(&self, i: usize, v: f64) {
-        *self.0.add(i) = v;
-    }
-}
-
-/// Run `f(v)` for every vertex in `verts`, split across `threads`.
+/// Run `f(v)` for every vertex in `verts`, split across up to
+/// `threads` persistent pool workers (sequential below the
+/// [`LEVEL_PAR_CUTOFF`]). Allocation-free: the pool dispatch borrows
+/// the closure from this stack frame.
 fn parallel_chunks(verts: &[u32], threads: usize, f: impl Fn(u32) + Sync) {
     let threads = threads.max(1);
-    if threads == 1 || verts.len() < 256 {
+    if threads == 1 || verts.len() < LEVEL_PAR_CUTOFF {
         for &v in verts {
             f(v);
         }
         return;
     }
-    let chunk = verts.len().div_ceil(threads);
-    std::thread::scope(|s| {
-        for part in verts.chunks(chunk) {
-            let f = &f;
-            s.spawn(move || {
-                for &v in part {
-                    f(v);
-                }
-            });
+    par::global().run(threads, |part, parts| {
+        let (lo, hi) = par::chunk_range(verts.len(), part, parts);
+        for &v in &verts[lo..hi] {
+            f(v);
         }
     });
 }
@@ -210,10 +197,47 @@ mod tests {
         }
 
         f.backward_inplace(&mut want);
-        sched.backward(&mut lvl, 4);
+        sched.backward(&f.g, &mut lvl, 4);
         for (a, b) in want.iter().zip(&lvl) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn wide_levels_dispatch_through_the_pool() {
+        // A star with the hub eliminated last has one level of width
+        // n − 1, guaranteed past the parallel cutoff — so this
+        // exercises the pool dispatch path, not just the sequential
+        // fallback.
+        let n = 6 * LEVEL_PAR_CUTOFF + 1;
+        let hub = (n - 1) as u32;
+        let edges: Vec<(u32, u32, f64)> =
+            (0..hub).map(|i| (i, hub, 1.0 + (i % 5) as f64)).collect();
+        let l = crate::graph::Laplacian::from_edges(n, &edges, "star");
+        let f = factorize(
+            &l,
+            &ParacOptions {
+                engine: Engine::Seq,
+                ordering: crate::ordering::Ordering::Natural,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let sched = LevelSchedule::analyze(&f);
+        let widest = (0..sched.fwd_ptr.len() - 1)
+            .map(|lev| sched.fwd_ptr[lev + 1] - sched.fwd_ptr[lev])
+            .max()
+            .unwrap();
+        assert!(widest >= LEVEL_PAR_CUTOFF, "widest level {widest}");
+        let r: Vec<f64> = (0..n).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+        let mut want = crate::ordering::perm::apply_vec(f.perm.as_ref().unwrap(), &r);
+        let mut got = want.clone();
+        f.forward_inplace(&mut want);
+        sched.forward(&mut got, 4);
+        assert_eq!(want, got, "pool-dispatched forward sweep must be bit-identical");
+        f.backward_inplace(&mut want);
+        sched.backward(&f.g, &mut got, 4);
+        assert_eq!(want, got, "pool-dispatched backward sweep must be bit-identical");
     }
 
     #[test]

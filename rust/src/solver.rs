@@ -16,11 +16,21 @@
 //! vectors live in an internal [`PcgWorkspace`], and every
 //! preconditioner applies via
 //! [`Preconditioner::apply_into`](crate::precond::Preconditioner::apply_into).
-//! Two configurations allocate by design and are exempt from that
-//! contract: AMG (V-cycle temporaries) and level-scheduled ParAC with
-//! `level_threads > 1` (wide levels spawn scoped worker threads per
-//! sweep); the default sequential ParAC path and every other baseline
-//! are allocation-free.
+//! One configuration allocates by design and is exempt from that
+//! contract: AMG (V-cycle temporaries). Everything else — including
+//! multi-threaded sessions, whose SpMV and level-scheduled triangular
+//! solves dispatch onto the persistent [`crate::par`] worker pool —
+//! allocates nothing after the pool is warm.
+//!
+//! Parallelism and batching are session knobs:
+//! * [`SolverBuilder::threads`] sets how many pool workers the solve
+//!   phase uses (row-split SpMV via
+//!   [`Csr::spmv_par`](crate::sparse::Csr::spmv_par), and — for the
+//!   ParAC preconditioner — level-scheduled triangular solves). The
+//!   default of 1 keeps the solve fully sequential.
+//! * [`Solver::solve_batch`] runs many right-hand sides through one
+//!   session: one factor, one pool, one workspace, results
+//!   **bit-identical** to looping [`Solver::solve_into`] per RHS.
 //!
 //! Three entry points cover the workload spectrum:
 //! * [`SolverBuilder::build`] — a graph [`Laplacian`] (possibly
@@ -40,16 +50,17 @@
 //! let mut solver = Solver::builder()
 //!     .seed(7)
 //!     .tol(1e-8)
+//!     .threads(2)
 //!     .build(&lap)
 //!     .expect("solver setup");
 //!
-//! // Solve two right-hand sides with one reused workspace.
-//! let mut x = vec![0.0; lap.n()];
-//! for seed in [1, 2] {
-//!     let b = pcg::random_rhs(&lap, seed);
-//!     let stats = solver.solve_into(&b, &mut x).expect("dimensions match");
-//!     assert!(stats.converged, "rel residual {}", stats.rel_residual);
-//! }
+//! // Solve a batch of right-hand sides with one reused workspace —
+//! // bit-identical to looping `solve_into` per RHS.
+//! let b1 = pcg::random_rhs(&lap, 1);
+//! let b2 = pcg::random_rhs(&lap, 2);
+//! let mut xs = vec![Vec::new(); 2];
+//! let stats = solver.solve_batch(&[&b1, &b2], &mut xs).expect("dimensions match");
+//! assert!(stats.iter().all(|s| s.converged));
 //! ```
 
 use crate::error::ParacError;
@@ -70,9 +81,12 @@ use crate::util::Timer;
 #[derive(Clone, Debug, PartialEq)]
 pub enum PrecondKind {
     /// The ParAC `G D Gᵀ` factor; `level_threads > 0` uses the
-    /// level-scheduled parallel triangular solve with that many workers.
+    /// level-scheduled parallel triangular solve with that many pool
+    /// workers.
     Parac {
-        /// Workers for the level-scheduled solve (0 = sequential).
+        /// Workers for the level-scheduled solve. 0 = inherit the
+        /// session-wide [`SolverBuilder::threads`] knob (sequential
+        /// when that is 1, its default).
         level_threads: usize,
     },
     /// Zero fill-in incomplete Cholesky (cuSPARSE `csric02` proxy).
@@ -111,20 +125,53 @@ impl PrecondKind {
         }
     }
 
-    /// Parse a CLI name (`parac`, `ichol0`, `icholt`, `amg`, `jacobi`,
-    /// `ssor`, `identity`/`none`).
-    pub fn parse(s: &str) -> Option<PrecondKind> {
-        match s {
-            "parac" => Some(PrecondKind::Parac { level_threads: 0 }),
-            "ichol0" => Some(PrecondKind::Ichol0),
+    /// Parse a CLI name, with optional `name:value` parameters the same
+    /// way [`Engine::parse`] accepts `cpu:8`:
+    ///
+    /// * `parac`, `parac:8` — level-scheduled solve threads;
+    /// * `ichol0`;
+    /// * `icholt` / `ichol-t`, `icholt:1e-4` — drop tolerance;
+    /// * `amg`, `jacobi`;
+    /// * `ssor`, `ssor:1.2` — relaxation factor;
+    /// * `identity` / `none`.
+    ///
+    /// Unknown names, malformed parameters, and parameters on kinds
+    /// that take none are all
+    /// [`ParacError::InvalidOption`] — never a silent fallback.
+    /// (Out-of-range values such as `ssor:7.0` parse here and are
+    /// rejected with a typed error at build time.)
+    pub fn parse(s: &str) -> Result<PrecondKind, ParacError> {
+        let invalid = || ParacError::InvalidOption { what: "preconditioner", got: s.to_string() };
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let no_param = |kind: PrecondKind| if param.is_none() { Ok(kind) } else { Err(invalid()) };
+        match name {
+            "parac" => Ok(PrecondKind::Parac {
+                level_threads: match param {
+                    None => 0,
+                    Some(p) => p.parse().map_err(|_| invalid())?,
+                },
+            }),
+            "ichol0" => no_param(PrecondKind::Ichol0),
             "icholt" | "ichol-t" => {
-                Some(PrecondKind::IcholT { droptol: Some(1e-3), fill_target: None })
+                let droptol = match param {
+                    None => 1e-3,
+                    Some(p) => p.parse().map_err(|_| invalid())?,
+                };
+                Ok(PrecondKind::IcholT { droptol: Some(droptol), fill_target: None })
             }
-            "amg" => Some(PrecondKind::Amg),
-            "jacobi" => Some(PrecondKind::Jacobi),
-            "ssor" => Some(PrecondKind::Ssor { omega: 1.5 }),
-            "identity" | "none" => Some(PrecondKind::Identity),
-            _ => None,
+            "amg" => no_param(PrecondKind::Amg),
+            "jacobi" => no_param(PrecondKind::Jacobi),
+            "ssor" => Ok(PrecondKind::Ssor {
+                omega: match param {
+                    None => 1.5,
+                    Some(p) => p.parse().map_err(|_| invalid())?,
+                },
+            }),
+            "identity" | "none" => no_param(PrecondKind::Identity),
+            _ => Err(invalid()),
         }
     }
 }
@@ -139,6 +186,9 @@ pub struct SolverBuilder {
     /// Mean-zero projection override; `None` = decide from the input
     /// (`LapKind::Graph` projects, SPD inputs don't).
     project: Option<bool>,
+    /// Pool workers for the solve phase (SpMV + ParAC triangular
+    /// solves); 1 = sequential, 0 = every pool worker.
+    threads: usize,
 }
 
 impl Default for SolverBuilder {
@@ -148,6 +198,7 @@ impl Default for SolverBuilder {
             precond: PrecondKind::Parac { level_threads: 0 },
             pcg: PcgOptions::default(),
             project: None,
+            threads: 1,
         }
     }
 }
@@ -201,6 +252,19 @@ impl SolverBuilder {
         self
     }
 
+    /// Worker threads for the **solve phase**, served by the persistent
+    /// [`crate::par`] pool: `threads > 1` row-splits the operator SpMV
+    /// ([`Csr::spmv_par`](crate::sparse::Csr::spmv_par)) and — when the
+    /// preconditioner is ParAC and `level_threads` was left at 0 —
+    /// switches the triangular solves to the level-scheduled parallel
+    /// path with this many workers. `1` (the default) keeps the solve
+    /// sequential; `0` means "all pool workers". Dispatch allocates
+    /// nothing after the pool is warm.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// PCG relative-residual tolerance.
     pub fn tol(mut self, tol: f64) -> Self {
         self.pcg.tol = tol;
@@ -245,7 +309,8 @@ impl SolverBuilder {
         let timer = Timer::start();
         let (pre, stats) = self.build_precond(lap)?;
         let project = self.project.unwrap_or(lap.kind == LapKind::Graph);
-        Ok(self.assemble(&lap.matrix, pre, stats, project, timer.secs()))
+        let op = SessionOp::Matrix { a: &lap.matrix, threads: self.solve_threads() };
+        Ok(self.assemble(op, pre, stats, project, timer.secs()))
     }
 
     /// Build a solver session for a raw SPD/SDD matrix (e.g. a
@@ -264,12 +329,13 @@ impl SolverBuilder {
             PrecondKind::Parac { level_threads } => {
                 let f = factor::factorize_sdd(a, &self.parac)?;
                 let stats = f.stats.clone();
-                (wrap_ldl(f, *level_threads), Some(stats))
+                (wrap_ldl(f, self.level_threads(*level_threads)), Some(stats))
             }
             other => (build_baseline(a, other)?, None),
         };
         let project = self.project.unwrap_or(false);
-        Ok(self.assemble(a, pre, stats, project, timer.secs()))
+        let op = SessionOp::Matrix { a, threads: self.solve_threads() };
+        Ok(self.assemble(op, pre, stats, project, timer.secs()))
     }
 
     /// Build a solver session for a matrix-free operator with a
@@ -289,12 +355,13 @@ impl SolverBuilder {
         let project = self.project.unwrap_or(false);
         let mut pcg = self.pcg.clone();
         pcg.project = project;
+        let n = op.n();
         Ok(Solver {
-            op,
+            op: SessionOp::Dyn(op),
             pre,
             pcg,
-            ws: PcgWorkspace::new(op.n()),
-            n: op.n(),
+            ws: PcgWorkspace::new(n),
+            n,
             setup_secs: 0.0,
             factor_stats: None,
         })
@@ -302,7 +369,7 @@ impl SolverBuilder {
 
     fn assemble<'a>(
         &self,
-        op: &'a dyn LinearOperator,
+        op: SessionOp<'a>,
         pre: Box<dyn Preconditioner>,
         factor_stats: Option<FactorStats>,
         project: bool,
@@ -310,12 +377,13 @@ impl SolverBuilder {
     ) -> Solver<'a> {
         let mut pcg = self.pcg.clone();
         pcg.project = project;
+        let n = op.n();
         Solver {
             op,
             pre,
             pcg,
-            ws: PcgWorkspace::new(op.n()),
-            n: op.n(),
+            ws: PcgWorkspace::new(n),
+            n,
             setup_secs,
             factor_stats,
         }
@@ -329,9 +397,31 @@ impl SolverBuilder {
             PrecondKind::Parac { level_threads } => {
                 let f = factor::factorize(lap, &self.parac)?;
                 let stats = f.stats.clone();
-                Ok((wrap_ldl(f, *level_threads), Some(stats)))
+                Ok((wrap_ldl(f, self.level_threads(*level_threads)), Some(stats)))
             }
             other => Ok((build_baseline(&lap.matrix, other)?, None)),
+        }
+    }
+
+    /// Resolve the `threads` knob (0 = every worker of the global pool).
+    fn solve_threads(&self) -> usize {
+        match self.threads {
+            0 => crate::par::global().size(),
+            n => n,
+        }
+    }
+
+    /// Effective level-scheduled solve width for a ParAC
+    /// preconditioner: an explicit `level_threads` wins; otherwise the
+    /// session-wide `threads` knob (sequential when that is 1).
+    fn level_threads(&self, configured: usize) -> usize {
+        if configured > 0 {
+            configured
+        } else {
+            match self.solve_threads() {
+                0 | 1 => 0,
+                st => st,
+            }
         }
     }
 }
@@ -363,12 +453,45 @@ fn build_baseline(a: &Csr, kind: &PrecondKind) -> Result<Box<dyn Preconditioner>
     })
 }
 
+/// The operator a session applies each PCG iteration: either a
+/// caller-supplied matrix-free operator, or an assembled CSR matrix
+/// whose SpMV is row-split across the persistent pool when the session
+/// was built with `threads > 1`.
+enum SessionOp<'a> {
+    /// Abstract operator from [`SolverBuilder::build_operator`].
+    Dyn(&'a dyn LinearOperator),
+    /// Assembled matrix; `threads > 1` dispatches [`Csr::spmv_par`].
+    Matrix {
+        /// The borrowed operator matrix.
+        a: &'a Csr,
+        /// Row-split width (1 = sequential SpMV).
+        threads: usize,
+    },
+}
+
+impl LinearOperator for SessionOp<'_> {
+    fn n(&self) -> usize {
+        match self {
+            SessionOp::Dyn(op) => op.n(),
+            SessionOp::Matrix { a, .. } => a.nrows,
+        }
+    }
+
+    fn apply_to(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            SessionOp::Dyn(op) => op.apply_to(x, y),
+            SessionOp::Matrix { a, threads } => a.spmv_par(x, y, *threads),
+        }
+    }
+}
+
 /// A configured, factored solver session: borrow of the operator, owned
 /// preconditioner, PCG options, and the reusable workspace. Create via
-/// [`Solver::builder`]; call [`Solver::solve`] /
-/// [`Solver::solve_into`] as many times as there are right-hand sides.
+/// [`Solver::builder`]; call [`Solver::solve`] / [`Solver::solve_into`]
+/// / [`Solver::solve_batch`] as many times as there are right-hand
+/// sides.
 pub struct Solver<'a> {
-    op: &'a dyn LinearOperator,
+    op: SessionOp<'a>,
     pre: Box<dyn Preconditioner>,
     pcg: PcgOptions,
     ws: PcgWorkspace,
@@ -430,10 +553,9 @@ impl<'a> Solver<'a> {
     }
 
     /// Solve `A x = b` into a caller buffer, reusing the internal
-    /// workspace: zero heap allocations per PCG iteration (see the
-    /// module docs for the two documented exceptions). `x` is
-    /// overwritten (the initial guess is zero). Non-convergence is
-    /// data, not an error.
+    /// workspace: zero heap allocations per PCG iteration (AMG is the
+    /// one exception — see the module docs). `x` is overwritten (the
+    /// initial guess is zero). Non-convergence is data, not an error.
     pub fn solve_into(&mut self, b: &[f64], x: &mut [f64]) -> Result<SolveStats, ParacError> {
         if b.len() != self.n {
             return Err(ParacError::DimensionMismatch {
@@ -449,7 +571,49 @@ impl<'a> Solver<'a> {
                 got: x.len(),
             });
         }
-        Ok(pcg::solve_into(self.op, b, self.pre.as_ref(), &self.pcg, &mut self.ws, x))
+        Ok(pcg::solve_into(&self.op, b, self.pre.as_ref(), &self.pcg, &mut self.ws, x))
+    }
+
+    /// Solve the same system for a **batch** of right-hand sides,
+    /// reusing one factor, one pool, and one workspace across all of
+    /// them — the "amortize setup across traffic" half of the paper's
+    /// cheap-construction economics. Each `xs[i]` is resized to the
+    /// operator dimension once (so passing empty vectors is fine), then
+    /// overwritten.
+    ///
+    /// Results are **bit-identical** to calling [`Solver::solve_into`]
+    /// once per right-hand side in order (property-tested per engine in
+    /// `rust/tests/solver.rs`): batching changes amortization, never
+    /// answers. Dimension errors are reported before any solve runs.
+    pub fn solve_batch(
+        &mut self,
+        bs: &[&[f64]],
+        xs: &mut [Vec<f64>],
+    ) -> Result<Vec<SolveStats>, ParacError> {
+        if bs.len() != xs.len() {
+            return Err(ParacError::DimensionMismatch {
+                what: "batch solutions",
+                expected: bs.len(),
+                got: xs.len(),
+            });
+        }
+        for b in bs {
+            if b.len() != self.n {
+                return Err(ParacError::DimensionMismatch {
+                    what: "rhs",
+                    expected: self.n,
+                    got: b.len(),
+                });
+            }
+        }
+        for x in xs.iter_mut() {
+            x.resize(self.n, 0.0);
+        }
+        let mut stats = Vec::with_capacity(bs.len());
+        for (b, x) in bs.iter().zip(xs.iter_mut()) {
+            stats.push(pcg::solve_into(&self.op, b, self.pre.as_ref(), &self.pcg, &mut self.ws, x));
+        }
+        Ok(stats)
     }
 }
 
@@ -591,6 +755,99 @@ mod tests {
             let k = PrecondKind::parse(s).unwrap();
             assert!(!k.name().is_empty());
         }
-        assert_eq!(PrecondKind::parse("nonsense"), None);
+        assert!(matches!(
+            PrecondKind::parse("nonsense"),
+            Err(ParacError::InvalidOption { what: "preconditioner", .. })
+        ));
+    }
+
+    #[test]
+    fn precond_kind_parse_accepts_parameters() {
+        assert_eq!(
+            PrecondKind::parse("parac:8").unwrap(),
+            PrecondKind::Parac { level_threads: 8 }
+        );
+        assert_eq!(
+            PrecondKind::parse("ssor:1.2").unwrap(),
+            PrecondKind::Ssor { omega: 1.2 }
+        );
+        assert_eq!(
+            PrecondKind::parse("icholt:1e-4").unwrap(),
+            PrecondKind::IcholT { droptol: Some(1e-4), fill_target: None }
+        );
+        assert_eq!(
+            PrecondKind::parse("ichol-t:1e-2").unwrap(),
+            PrecondKind::IcholT { droptol: Some(1e-2), fill_target: None }
+        );
+        // Malformed or misplaced parameters are typed errors, not
+        // silent fallbacks.
+        for bad in ["parac:x", "ssor:", "icholt:tiny", "jacobi:2", "identity:0", "amg:3"] {
+            assert!(
+                matches!(
+                    PrecondKind::parse(bad),
+                    Err(ParacError::InvalidOption { what: "preconditioner", .. })
+                ),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn threads_knob_changes_nothing_numerically() {
+        // Hold the arithmetic fixed (level-scheduled triangular solves
+        // in both sessions — the level schedule accumulates in row
+        // order, unlike the sequential CSC sweep) and vary only the
+        // dispatch: one pool worker vs four, sequential SpMV vs the
+        // row-split parallel SpMV. Per-entry arithmetic is identical,
+        // so the solutions must be bit-identical. The grid clears
+        // `PAR_SPMV_CUTOFF`, so the parallel SpMV really dispatches.
+        let lap = generators::grid2d(40, 40, generators::Coeff::Uniform, 0);
+        assert!(lap.n() >= crate::sparse::csr::PAR_SPMV_CUTOFF);
+        let b = pcg::random_rhs(&lap, 6);
+        let narrow = Solver::builder()
+            .seed(2)
+            .engine(crate::factor::Engine::Seq)
+            .preconditioner(PrecondKind::Parac { level_threads: 1 })
+            .build(&lap)
+            .unwrap()
+            .solve(&b)
+            .unwrap();
+        let wide = Solver::builder()
+            .seed(2)
+            .engine(crate::factor::Engine::Seq)
+            .preconditioner(PrecondKind::Parac { level_threads: 4 })
+            .threads(4)
+            .build(&lap)
+            .unwrap()
+            .solve(&b)
+            .unwrap();
+        assert_eq!(narrow.x, wide.x, "threads(4) must be bit-identical to threads(1)");
+        assert_eq!(narrow.iters, wide.iters);
+        assert!(wide.converged);
+    }
+
+    #[test]
+    fn solve_batch_smoke() {
+        let lap = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let mut s = Solver::builder().seed(3).build(&lap).unwrap();
+        let b1 = pcg::random_rhs(&lap, 1);
+        let b2 = pcg::random_rhs(&lap, 2);
+        let mut xs = vec![Vec::new(), vec![0.0; 3]]; // wrong sizes grow/shrink to n
+        let stats = s.solve_batch(&[&b1, &b2], &mut xs).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|st| st.converged));
+        assert!(xs.iter().all(|x| x.len() == lap.n()));
+
+        // Mismatched batch shapes are typed errors.
+        assert!(matches!(
+            s.solve_batch(&[&b1], &mut []),
+            Err(ParacError::DimensionMismatch { what: "batch solutions", .. })
+        ));
+        let short = vec![1.0; 3];
+        let mut one = vec![Vec::new()];
+        assert!(matches!(
+            s.solve_batch(&[&short], &mut one),
+            Err(ParacError::DimensionMismatch { what: "rhs", .. })
+        ));
     }
 }

@@ -58,17 +58,31 @@ impl Csc {
         }
     }
 
-    /// Materialize as CSR of the same matrix.
+    /// Materialize as CSR of the same matrix: a direct counting
+    /// transpose from the borrowed CSC arrays — no intermediate copy of
+    /// the input is made, so the peak footprint is the input plus the
+    /// output. Column indices come out sorted within each row because
+    /// columns are scattered in ascending order.
     pub fn to_csr(&self) -> Csr {
-        // CSC(A) == CSR(Aᵀ); transpose once to get CSR(A).
-        let t = Csr {
-            nrows: self.ncols,
-            ncols: self.nrows,
-            indptr: self.colptr.clone(),
-            indices: self.rowidx.clone(),
-            data: self.data.clone(),
-        };
-        t.transpose()
+        let mut counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rowidx {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let mut cursor = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        for c in 0..self.ncols {
+            for k in self.colptr[c]..self.colptr[c + 1] {
+                let slot = cursor[self.rowidx[k] as usize];
+                indices[slot] = c as u32;
+                data[slot] = self.data[k];
+                cursor[self.rowidx[k] as usize] += 1;
+            }
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, indptr: counts, indices, data }
     }
 
     /// Build from CSR.

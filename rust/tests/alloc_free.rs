@@ -1,10 +1,16 @@
 //! Proof of the session API's zero-allocation contract: a counting
 //! global allocator wraps the system allocator, and repeated
 //! `Solver::solve_into` calls after warm-up must not allocate at all —
-//! not per iteration, not per solve.
+//! not per iteration, not per solve. The contract covers the parallel
+//! paths too: multi-threaded sessions dispatch SpMV row splits and
+//! level-scheduled triangular sweeps onto the persistent `parac::par`
+//! worker pool, whose steady-state dispatch is allocation-free by
+//! construction (what used to be a documented exception when every
+//! wide level spawned scoped OS threads is now an asserted guarantee).
 //!
-//! This lives in its own integration-test binary (one `#[test]`) so no
-//! concurrently running test can touch the allocation counter.
+//! This lives in its own integration-test binary (one `#[test]`, two
+//! phases) so no concurrently running test can touch the allocation
+//! counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,9 +50,8 @@ fn solve_into_allocates_nothing_after_warmup() {
     use parac::solve::pcg;
     use parac::solver::Solver;
 
+    // ---- Phase 1: the sequential session (no pool involved). ----
     let lap = generators::grid2d(20, 20, generators::Coeff::Uniform, 0);
-    // Sequential engine + sequential ParAC solve: the documented
-    // allocation-free configuration (threads would allocate stacks).
     let mut solver = Solver::builder()
         .engine(Engine::Seq)
         .seed(9)
@@ -71,8 +76,47 @@ fn solve_into_allocates_nothing_after_warmup() {
     assert_eq!(
         after - before,
         0,
-        "solve_into allocated {} times across 24 warm solves — the \
+        "sequential solve_into allocated {} times across 24 warm solves — the \
          zero-allocation contract is broken",
+        after - before
+    );
+
+    // ---- Phase 2: the pooled parallel session. ----
+    // threads(2) row-splits every SpMV (the grid clears the parallel
+    // cutoff, so the pool dispatches every iteration) and runs the
+    // ParAC triangular solves level-scheduled. The warm-up solve
+    // creates the global worker pool; after that, dispatch is pure
+    // atomics + futex wakeups — steady state must stay at zero
+    // allocations, exactly like the sequential path.
+    let lap_wide = generators::grid2d(48, 48, generators::Coeff::Uniform, 1);
+    assert!(
+        lap_wide.n() >= parac::sparse::csr::PAR_SPMV_CUTOFF,
+        "phase-2 grid must be large enough to exercise the parallel SpMV dispatch"
+    );
+    let mut pooled = Solver::builder()
+        .engine(Engine::Seq)
+        .threads(2)
+        .seed(9)
+        .tol(1e-8)
+        .build(&lap_wide)
+        .expect("pooled solver setup");
+    let rhs_wide: Vec<Vec<f64>> = (1..=4).map(|s| pcg::random_rhs(&lap_wide, s)).collect();
+    let mut xw = vec![0.0; lap_wide.n()];
+
+    let warm = pooled.solve_into(&rhs_wide[0], &mut xw).expect("pool warm-up solve");
+    assert!(warm.converged, "pool warm-up must converge (rel={})", warm.rel_residual);
+
+    let before = allocations();
+    for b in rhs_wide.iter().cycle().take(12) {
+        let stats = pooled.solve_into(b, &mut xw).expect("pooled steady-state solve");
+        assert!(stats.converged);
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "level-scheduled/pooled solve_into allocated {} times across 12 warm \
+         solves — pool dispatch must be allocation-free",
         after - before
     );
 }

@@ -176,6 +176,7 @@ fn engine_parse_name_roundtrip() {
         ("cpu:8", "cpu", Engine::Cpu { threads: 8 }),
         ("gpusim", "gpusim", Engine::GpuSim { blocks: 0 }),
         ("gpu", "gpusim", Engine::GpuSim { blocks: 0 }),
+        ("gpu:8", "gpusim", Engine::GpuSim { blocks: 8 }),
         ("gpusim:64", "gpusim", Engine::GpuSim { blocks: 64 }),
     ] {
         let e = Engine::parse(spec).unwrap_or_else(|| panic!("{spec} must parse"));

@@ -130,6 +130,38 @@ fn non_convergence_is_data() {
     assert!(out.rel_residual > 0.0);
 }
 
+/// `solve_batch` is sugar for looping `solve_into`: for every engine,
+/// batched solutions and stats must be bit-identical to per-RHS
+/// `solve_into` calls through an identically configured session
+/// (factors are deterministic per `(matrix, ordering, seed)`, so a
+/// fresh build reproduces the same factor).
+#[test]
+fn solve_batch_matches_looped_solve_into_for_every_engine() {
+    let lap = generators::grid2d(16, 16, generators::Coeff::Uniform, 0);
+    let bs: Vec<Vec<f64>> = (1..=5).map(|s| pcg::random_rhs(&lap, s)).collect();
+    for engine in [Engine::Seq, Engine::Cpu { threads: 2 }, Engine::GpuSim { blocks: 2 }] {
+        let builder = Solver::builder().engine(engine).seed(13).threads(2).tol(1e-9);
+        let mut batch = builder.build(&lap).unwrap();
+        let refs: Vec<&[f64]> = bs.iter().map(|b| b.as_slice()).collect();
+        let mut xs = vec![Vec::new(); bs.len()];
+        let stats = batch.solve_batch(&refs, &mut xs).unwrap();
+        assert_eq!(stats.len(), bs.len());
+
+        let mut single = builder.build(&lap).unwrap();
+        let mut x = vec![0.0; lap.n()];
+        for (i, b) in bs.iter().enumerate() {
+            let st = single.solve_into(b, &mut x).unwrap();
+            assert_eq!(xs[i], x, "{engine:?}: rhs {i} solution must be bit-identical");
+            assert_eq!(stats[i].iters, st.iters, "{engine:?}: rhs {i} iterations");
+            assert_eq!(stats[i].converged, st.converged, "{engine:?}: rhs {i}");
+            assert_eq!(
+                stats[i].rel_residual, st.rel_residual,
+                "{engine:?}: rhs {i} residual must be bit-identical"
+            );
+        }
+    }
+}
+
 /// The builder spans every ordering and engine combination.
 #[test]
 fn builder_spans_orderings_and_engines() {
