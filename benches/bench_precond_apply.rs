@@ -1,0 +1,146 @@
+//! Preconditioner-apply bench: the packed sweep executor (one pool
+//! dispatch per triangular sweep over a contiguous level-major factor)
+//! vs the PR3 per-level executor (one dispatch per wide level, factor
+//! in elimination order, gathered through `order[]` indirection) —
+//! graph × threads × executor wall time, the paper's §6.2 SPSV solve
+//! stage.
+//!
+//! Emits `BENCH_precond_apply.json` through the hand-rolled JSON
+//! writer so successive PRs can diff the trajectory mechanically; CI
+//! smoke-runs this binary at `PARAC_SCALE=tiny`, which also guards the
+//! bit-identity of the two executors (asserted below) and the packed
+//! executor's O(1)-dispatch invariant.
+
+mod bench_common;
+
+use parac::coordinator::pipeline::{self, BenchRow};
+use parac::coordinator::report::Table;
+use parac::factor::{factorize, Engine, LdlFactor, ParacOptions};
+use parac::graph::suite;
+use parac::solve::packed::PackedSweeps;
+use parac::solve::pcg;
+use parac::solve::trisolve::LevelSchedule;
+
+/// The PR3 apply, verbatim: scatter into permuted space, per-level
+/// forward sweep, `D⁻¹` pass, per-level backward sweep, gather out —
+/// every wide level its own pool dispatch.
+fn pr3_apply(
+    f: &LdlFactor,
+    sched: &LevelSchedule,
+    r: &[f64],
+    z: &mut [f64],
+    scratch: &mut [f64],
+    threads: usize,
+) {
+    let y: &mut [f64] = match &f.perm {
+        Some(p) => {
+            for (i, &ri) in r.iter().enumerate() {
+                scratch[p[i] as usize] = ri;
+            }
+            &mut scratch[..]
+        }
+        None => {
+            z.copy_from_slice(r);
+            &mut *z
+        }
+    };
+    sched.forward(y, threads);
+    for (yk, &d) in y.iter_mut().zip(&f.diag) {
+        *yk = if d > 0.0 { *yk / d } else { 0.0 };
+    }
+    sched.backward(&f.g, y, threads);
+    if let Some(p) = &f.perm {
+        for (i, zi) in z.iter_mut().enumerate() {
+            *zi = scratch[p[i] as usize];
+        }
+    }
+}
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let max_threads = bench_common::bench_threads();
+    let mut thread_counts = vec![1usize];
+    if max_threads > 1 {
+        thread_counts.push(max_threads);
+    }
+    let reps = 7;
+    println!("## Preconditioner apply: packed (1 dispatch/sweep) vs PR3 (1 dispatch/level)  [scale {scale:?}]\n");
+    let mut table = Table::new(&[
+        "problem", "threads", "critical path", "pr3 (ms)", "packed (ms)", "speedup",
+        "dispatches/apply",
+    ]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for name in ["uniform_3d_poisson", "GAP-road"] {
+        let e = suite::by_name(name).unwrap();
+        let lap = (e.build)(scale);
+        let opts = ParacOptions { engine: Engine::Cpu { threads: 0 }, seed: 1, ..Default::default() };
+        let f = match factorize(&lap, &opts) {
+            Ok(f) => f,
+            Err(err) => {
+                eprintln!("error: {err}");
+                std::process::exit(1);
+            }
+        };
+        let b = pcg::random_rhs(&lap, 3);
+        // The analysis phase is thread-independent — one level schedule
+        // and one packed copy serve every thread count below (only the
+        // apply takes a `threads` argument).
+        let sched = LevelSchedule::analyze(&f);
+        let packed = PackedSweeps::analyze(&f);
+        let n = lap.n();
+        let mut z_pr3 = vec![0.0; n];
+        let mut z_packed = vec![0.0; n];
+        let mut scratch = vec![0.0; n];
+        let (mut y_fwd, mut y_bwd) = (vec![0.0; n], vec![0.0; n]);
+        for &threads in &thread_counts {
+            // Warm both paths (pool creation), then pin bit-identity —
+            // a silent numeric divergence between the executors must
+            // fail the CI smoke run, not just a property test.
+            pr3_apply(&f, &sched, &b, &mut z_pr3, &mut scratch, threads);
+            packed.apply_into(&b, &mut z_packed, threads, &mut y_fwd, &mut y_bwd);
+            assert_eq!(z_pr3, z_packed, "{name}: executors must be bit-identical");
+
+            let (_, t_pr3) = bench_common::median_time(reps, || {
+                pr3_apply(&f, &sched, &b, &mut z_pr3, &mut scratch, threads)
+            });
+            let c0 = packed.counters();
+            let (_, t_packed) = bench_common::median_time(reps, || {
+                packed.apply_into(&b, &mut z_packed, threads, &mut y_fwd, &mut y_bwd)
+            });
+            let dispatches = packed.counters().since(c0).dispatches as f64 / reps as f64;
+            let cp = packed.critical_path;
+            table.row(vec![
+                e.name.into(),
+                threads.to_string(),
+                cp.to_string(),
+                format!("{:.3}", t_pr3 * 1e3),
+                format!("{:.3}", t_packed * 1e3),
+                format!("{:.2}x", t_pr3 / t_packed.max(1e-12)),
+                format!("{dispatches:.0}"),
+            ]);
+            rows.push(BenchRow {
+                name: format!("{} n={} threads={threads}", e.name, n),
+                fields: vec![
+                    ("threads", threads as f64),
+                    ("critical_path", cp as f64),
+                    ("pr3_secs", t_pr3),
+                    ("packed_secs", t_packed),
+                    ("speedup", t_pr3 / t_packed.max(1e-12)),
+                    ("dispatches_per_apply", dispatches),
+                ],
+            });
+        }
+    }
+    print!("{}", table.render());
+    let json_path = std::path::Path::new("BENCH_precond_apply.json");
+    match pipeline::write_bench_rows_json(json_path, "precond_apply", &rows) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", json_path.display()),
+    }
+    println!(
+        "(packed: one pool dispatch per sweep, contiguous level-major factor; \
+         pr3: one dispatch per wide level, elimination-order factor — on a \
+         1-core testbed the dispatch-count column carries the architectural \
+         signal; see EXPERIMENTS.md)"
+    );
+}

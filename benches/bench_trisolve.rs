@@ -51,5 +51,5 @@ fn main() {
         }
     }
     print!("{}", table.render());
-    println!("\n(level sweeps dispatch onto the persistent `par` worker pool — no per-level thread spawns; on a 1-core testbed the dispatch still pays without parallel payoff, so the `critical path` / `avg width` columns carry the architectural signal — see EXPERIMENTS.md)");
+    println!("\n(the `level` column runs the packed sweep executor: one persistent-pool dispatch per sweep over a contiguous level-major factor — `benches/bench_precond_apply.rs` compares it against the per-level-dispatch executor directly; on a 1-core testbed the `critical path` / `avg width` columns carry the architectural signal — see EXPERIMENTS.md)");
 }

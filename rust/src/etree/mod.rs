@@ -12,6 +12,11 @@
 //! * [`trisolve_levels`] — level schedule / critical path of the
 //!   triangular-solve DAG of the factor ("longest path" in Fig. 4),
 //!   which bounds parallel triangular-solve performance.
+//! * [`trisolve_levels_bwd`] / [`bucket_by_level`] — the transpose-DAG
+//!   levels of the backward sweep and the level-major vertex grouping;
+//!   together with [`trisolve_levels`] these are the full "analysis
+//!   phase" consumed by [`crate::solve::trisolve::LevelSchedule`] and
+//!   the packed executor [`crate::solve::packed::PackedSweeps`].
 
 use crate::sparse::{Csc, Csr};
 
@@ -104,6 +109,61 @@ pub fn trisolve_levels(g: &Csc) -> (Vec<u32>, usize) {
         }
     }
     (level, maxl)
+}
+
+/// Level schedule of the **backward** (transpose) triangular-solve DAG:
+/// `level[k] = 1 + max level over rows r in column k of G` — dependencies
+/// run from the far end of the elimination order, so the pass walks the
+/// columns descending. Returns `(levels, critical_path_len)`. `g` in CSC
+/// (strictly lower). The backward critical path can differ from the
+/// forward one level-by-level, but both sweeps share the same DAG depth
+/// bound.
+pub fn trisolve_levels_bwd(g: &Csc) -> (Vec<u32>, usize) {
+    let n = g.ncols;
+    let mut level = vec![1u32; n];
+    let mut maxl = if n == 0 { 0 } else { 1 };
+    // Column k depends on every row below it; descending order
+    // finalizes all of those rows' levels first.
+    for k in (0..n).rev() {
+        let mut l = 1u32;
+        for &r in g.col_rows(k) {
+            let lr = level[r as usize];
+            if lr + 1 > l {
+                l = lr + 1;
+            }
+        }
+        level[k] = l;
+        if l as usize > maxl {
+            maxl = l as usize;
+        }
+    }
+    (level, maxl)
+}
+
+/// Group vertices by level into one concatenated, level-major order:
+/// returns `(order, ptr)` where `order[ptr[t]..ptr[t + 1]]` lists the
+/// vertices of level `t + 1` (levels are 1-based) in ascending vertex
+/// id. This is the renumbering both sweep executors schedule by; the
+/// packed executor additionally *stores* the factor in this order so a
+/// sweep streams memory contiguously.
+pub fn bucket_by_level(levels: &[u32], maxl: usize) -> (Vec<u32>, Vec<usize>) {
+    let mut ptr = vec![0usize; maxl + 1];
+    for &l in levels {
+        ptr[(l - 1) as usize] += 1;
+    }
+    let mut acc = 0;
+    for p in ptr.iter_mut() {
+        let c = *p;
+        *p = acc;
+        acc += c;
+    }
+    let mut order = vec![0u32; levels.len()];
+    let mut cursor = ptr.clone();
+    for (v, &l) in levels.iter().enumerate() {
+        order[cursor[(l - 1) as usize]] = v as u32;
+        cursor[(l - 1) as usize] += 1;
+    }
+    (order, ptr)
 }
 
 /// Histogram of level widths — the parallelism profile (how many columns
@@ -199,6 +259,35 @@ mod tests {
         assert_eq!(levels, vec![1, 2, 3, 2]);
         assert_eq!(cp, 3);
         assert_eq!(level_histogram(&levels), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn backward_levels_mirror_the_transpose_dag() {
+        // Same hand-built factor as `factor_etree_and_levels`:
+        // col0 -> rows {1,3}, col1 -> {2}. Backward dependencies point
+        // from each column to its rows, so col0 waits on col1 (via row
+        // 1) which waits on col2.
+        let mut coo = Coo::new(4, 4);
+        coo.push(1, 0, -0.5);
+        coo.push(3, 0, -0.5);
+        coo.push(2, 1, -1.0);
+        let g = crate::sparse::Csc::from_csr(&coo.to_csr());
+        let (levels, cp) = trisolve_levels_bwd(&g);
+        assert_eq!(levels, vec![3, 2, 1, 1]);
+        assert_eq!(cp, 3);
+    }
+
+    #[test]
+    fn bucket_by_level_is_level_major_and_stable() {
+        let levels = vec![2u32, 1, 2, 1, 3];
+        let (order, ptr) = bucket_by_level(&levels, 3);
+        assert_eq!(ptr, vec![0, 2, 4, 5]);
+        // Within a level, vertices stay in ascending id order.
+        assert_eq!(order, vec![1, 3, 0, 2, 4]);
+        // Every vertex appears exactly once.
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

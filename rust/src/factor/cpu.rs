@@ -256,6 +256,9 @@ fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
         diag.push(unsafe { sh.diag.read(k) });
     }
     sh.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
+    // `arena_used` is the *fill* arena occupancy; the bump pointer
+    // never rewinds, so its watermark is the peak node count — the
+    // same semantic the gpusim engine reports from its hash workspace.
     sh.stats.arena_used.store(sh.fills.bump.used(), Ordering::Relaxed);
     let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
     (g, diag)

@@ -256,7 +256,10 @@ fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
         diag.push(unsafe { sh.diag.read(k) });
     }
     sh.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
-    sh.stats.arena_used.store(sh.out_bump.used(), Ordering::Relaxed);
+    // `arena_used` is the *fill* workspace occupancy (peak occupied
+    // slots of `W`), matching the CPU engine's fill-arena watermark —
+    // not the output arena, whose size `out_entries` already reports.
+    sh.stats.arena_used.store(sh.w.peak_occupancy(), Ordering::Relaxed);
     (Csc { nrows: n, ncols: n, colptr, rowidx, data }, diag)
 }
 

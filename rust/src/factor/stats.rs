@@ -10,7 +10,14 @@ pub struct FactorStats {
     pub fills: u64,
     /// Entries written to the output factor.
     pub out_entries: u64,
-    /// Nodes consumed from the shared fill arena.
+    /// Peak occupancy of the **fill workspace**, in nodes/slots — the
+    /// number the `arena_factor` sizing knob has to cover. Engines
+    /// report the same semantic from their respective structures: the
+    /// cpu engine's bump-allocated fill arena never frees, so its
+    /// watermark *is* the peak; the gpusim engine reports the
+    /// high-water mark of occupied slots in the hash workspace `W`
+    /// (slots are freed on gather, so peak < total fills there). The
+    /// seq engine has no shared fill workspace and reports 0.
     pub arena_used: usize,
     /// gpusim only: worst linear-probe distance observed in the
     /// workspace hash map.

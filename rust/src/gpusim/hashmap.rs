@@ -15,7 +15,7 @@
 
 use crate::factor::chunk::SharedBuf;
 use crate::rng::Rng;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
 const FREE: u32 = 0;
 const BUSY: u32 = 1;
@@ -48,6 +48,11 @@ pub struct Workspace {
     /// Worst probe distance observed (perf counter, reported as
     /// [`crate::factor::FactorStats::max_probe`]).
     pub max_probe: AtomicU64,
+    /// Currently occupied slots (relaxed; see [`Workspace::peak_occupancy`]).
+    live: AtomicUsize,
+    /// High-water mark of `live` — the fill-workspace occupancy
+    /// reported as [`crate::factor::FactorStats::arena_used`].
+    peak: AtomicUsize,
 }
 
 impl Workspace {
@@ -76,6 +81,8 @@ impl Workspace {
             cap,
             probe_steps: AtomicU64::new(0),
             max_probe: AtomicU64::new(0),
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
         }
     }
 
@@ -105,6 +112,8 @@ impl Workspace {
                 self.fill_count[v as usize].fetch_add(1, Ordering::AcqRel);
                 self.probe_steps.fetch_add(probes, Ordering::Relaxed);
                 self.max_probe.fetch_max(probes, Ordering::Relaxed);
+                let now = self.live.fetch_add(1, Ordering::Relaxed) + 1;
+                self.peak.fetch_max(now, Ordering::Relaxed);
                 return Ok(());
             }
         }
@@ -158,6 +167,7 @@ impl Workspace {
         self.fill_count[v as usize].store(0, Ordering::Relaxed);
         self.probe_steps.fetch_add(probes, Ordering::Relaxed);
         self.max_probe.fetch_max(probes, Ordering::Relaxed);
+        self.live.fetch_sub(found as usize, Ordering::Relaxed);
     }
 
     /// Current number of pending fills for `v`.
@@ -168,6 +178,17 @@ impl Workspace {
     /// Table capacity.
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// High-water mark of occupied slots — the fill-workspace
+    /// occupancy ([`crate::factor::FactorStats::arena_used`] for the
+    /// gpusim engine, the slot-table analogue of the CPU engine's
+    /// never-freed fill-arena bump watermark). Relaxed counters: under
+    /// concurrent inserts the reported peak can lag the true
+    /// instantaneous maximum by a few slots; it is a capacity-planning
+    /// stat, not a synchronization primitive.
+    pub fn peak_occupancy(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
     }
 }
 
@@ -200,6 +221,8 @@ mod tests {
             w.gather(1, &mut out);
             assert_eq!(out.len(), 10, "round {round}");
         }
+        // 10 concurrent residents max, however many rounds ran.
+        assert_eq!(w.peak_occupancy(), 10);
     }
 
     #[test]

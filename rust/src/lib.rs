@@ -73,10 +73,12 @@
 //! paper's evaluation depends on: sparse kernels ([`sparse`]), graph
 //! generators mirroring the paper's matrix suite ([`graph`]), orderings
 //! (AMD, nnz-sort, random, RCM — [`ordering`]), elimination-tree
-//! analytics ([`etree`]), PCG with level-scheduled triangular solves
-//! ([`solve`]), the persistent worker pool behind every parallel
-//! section ([`par`] — the CPU stand-in for the paper's resident
-//! kernel), and baseline preconditioners (IC(0), ICT,
+//! analytics ([`etree`]), PCG with fused vector kernels and packed
+//! level-scheduled triangular solves — one pool dispatch per sweep
+//! over a contiguous level-major factor ([`solve`],
+//! [`solve::packed`]), the persistent worker pool behind every
+//! parallel section ([`par`] — the CPU stand-in for the paper's
+//! resident kernel), and baseline preconditioners (IC(0), ICT,
 //! smoothed-aggregation AMG, Jacobi — [`precond`]). A PJRT runtime
 //! ([`runtime`], gated behind the off-by-default `xla` cargo feature)
 //! loads AOT-compiled JAX/Pallas artifacts for the L1/L2 layers (see

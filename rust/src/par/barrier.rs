@@ -1,0 +1,139 @@
+//! A lightweight in-job barrier for pool workers.
+//!
+//! The packed sweep executor ([`crate::solve::packed`]) runs a whole
+//! level-scheduled triangular sweep as **one** pool dispatch: the
+//! participants stay resident for every level and synchronize at level
+//! boundaries with a [`SweepBarrier`] instead of returning to the
+//! dispatcher — the CPU analogue of the paper's persistent GPU kernel
+//! (§5.1), where thread blocks grid-sync between dependency levels
+//! rather than paying a kernel launch per level.
+//!
+//! The barrier is the classic sense-reversing centralized design on two
+//! atomics: arrivals count up on `arrived`; the last arriver resets the
+//! count and bumps `generation`, releasing everyone spinning on it.
+//! Waiters spin briefly and then `yield_now` (level boundaries are
+//! microseconds apart when the sweep is healthy, but the crate's
+//! testbeds are routinely oversubscribed, so unbounded spinning would
+//! invert the priority of the worker everyone is waiting for). A wait
+//! costs no heap allocation and no syscalls on the fast path, which is
+//! what keeps the packed executor inside the crate's zero-allocation
+//! solve contract (`rust/tests/alloc_free.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Spins before a waiter starts yielding the CPU between polls.
+const BARRIER_SPINS: u32 = 512;
+
+/// A reusable fork-join barrier for the participants of a single pool
+/// job (see the module docs). All participants must call
+/// [`SweepBarrier::wait`] with the same `parts` value, the same number
+/// of times — exactly the discipline a deterministic level schedule
+/// provides, since every participant walks the same level list.
+#[derive(Default)]
+pub struct SweepBarrier {
+    /// Participants that have arrived at the current episode.
+    arrived: AtomicUsize,
+    /// Episode counter; bumped by the last arriver of each episode.
+    generation: AtomicUsize,
+}
+
+impl SweepBarrier {
+    /// A fresh barrier (no participants in flight).
+    pub const fn new() -> SweepBarrier {
+        SweepBarrier { arrived: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    /// Block until all `parts` participants of the current episode have
+    /// arrived. Memory ordering: every write sequenced before a
+    /// participant's `wait` happens-before everything sequenced after
+    /// any participant's return from the same episode (the arrival
+    /// counter's release/acquire RMW chain feeds the last arriver, and
+    /// the generation bump publishes it to every waiter).
+    #[inline]
+    pub fn wait(&self, parts: usize) {
+        if parts <= 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == parts {
+            // Last arriver: reset for the next episode, then release.
+            // The reset is sequenced before the generation bump, so no
+            // participant of the *next* episode (who must first observe
+            // the bump) can race it.
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                spins = spins.saturating_add(1);
+                if spins < BARRIER_SPINS {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::WorkerPool;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn single_part_is_a_no_op() {
+        let b = SweepBarrier::new();
+        b.wait(1); // must not block
+        b.wait(0);
+        assert_eq!(b.generation.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn phases_are_totally_ordered_across_participants() {
+        // Each of 4 participants bumps its phase counter between
+        // barrier episodes; after every episode all counters must agree
+        // — a torn episode would let one participant run ahead.
+        let pool = WorkerPool::new(4);
+        let barrier = SweepBarrier::new();
+        let phases: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        pool.run(4, |part, parts| {
+            for _round in 0..200 {
+                phases[part].fetch_add(1, Ordering::Relaxed);
+                barrier.wait(parts);
+                let mine = phases[part].load(Ordering::Relaxed);
+                for other in &phases {
+                    assert_eq!(other.load(Ordering::Relaxed), mine);
+                }
+                barrier.wait(parts);
+            }
+        });
+        assert!(phases.iter().all(|p| p.load(Ordering::Relaxed) == 200));
+    }
+
+    #[test]
+    fn publishes_plain_writes_between_episodes() {
+        // Part 0 writes a slot before the barrier; every other part
+        // must read the value after it — the release/acquire chain the
+        // packed sweeps rely on between a narrow (worker-0-only) level
+        // and the parallel level that consumes it.
+        let pool = WorkerPool::new(3);
+        let barrier = SweepBarrier::new();
+        let mut slot = 0u64;
+        let ptr = crate::par::SendPtr::new(&mut slot as *mut u64);
+        pool.run(3, |part, parts| {
+            for round in 1..=100u64 {
+                if part == 0 {
+                    // SAFETY: only part 0 writes; readers are fenced by
+                    // the barrier below.
+                    unsafe { ptr.write(0, round) };
+                }
+                barrier.wait(parts);
+                // SAFETY: the write above happens-before this read.
+                assert_eq!(unsafe { ptr.read(0) }, round);
+                barrier.wait(parts);
+            }
+        });
+    }
+}

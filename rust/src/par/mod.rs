@@ -13,8 +13,13 @@
 //! tracking-allocator test in `rust/tests/alloc_free.rs`).
 //!
 //! Users:
-//! * [`crate::solve::trisolve`] — level-scheduled sweeps dispatch each
-//!   level's vertex slice through the pool.
+//! * [`crate::solve::packed`] — the packed sweep executor runs each
+//!   whole triangular sweep as **one** pool job; the participants stay
+//!   resident across every level and synchronize at level boundaries
+//!   with a [`SweepBarrier`] instead of returning to the dispatcher.
+//! * [`crate::solve::trisolve`] — the reference level-scheduled sweeps
+//!   dispatch each level's vertex slice as its own pool job (the
+//!   pre-packed executor, kept for comparison benches and tests).
 //! * [`crate::sparse::Csr::spmv_par`] — SpMV split by row ranges.
 //! * [`crate::factor::cpu`] / [`crate::factor::gpusim`] — the engine
 //!   worker/block loops run as one pool job per factorization.
@@ -30,8 +35,10 @@
 //! actual width (and report it — `FactorStats` carries the effective
 //! count).
 
+mod barrier;
 mod pool;
 
+pub use barrier::SweepBarrier;
 pub use pool::WorkerPool;
 
 use std::sync::OnceLock;

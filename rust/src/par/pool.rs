@@ -17,7 +17,7 @@
 
 use std::cell::Cell;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// Spins on the epoch counter before a worker parks on the condvar
@@ -95,6 +95,11 @@ pub struct WorkerPool {
     /// Serializes concurrent dispatchers (the pool is one shared
     /// resource; jobs from different sessions queue up FIFO-ish).
     dispatch: Mutex<()>,
+    /// Jobs actually published to the workers (inline degradations —
+    /// `parts == 1` and nested calls — are not counted). Diagnostic
+    /// counter behind the O(1)-dispatch claim of the packed sweep
+    /// executor; see [`WorkerPool::dispatch_count`].
+    dispatches: AtomicU64,
     /// Total participants including the dispatching caller.
     size: usize,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -126,12 +131,21 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { inner, dispatch: Mutex::new(()), size, handles }
+        WorkerPool { inner, dispatch: Mutex::new(()), dispatches: AtomicU64::new(0), size, handles }
     }
 
     /// Total participants (spawned workers + the dispatching caller).
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// How many jobs have been published to the workers over the
+    /// pool's lifetime (inline degradations are free and not counted).
+    /// This is the observable behind the packed sweep executor's
+    /// O(1)-dispatches-per-sweep claim: snapshot before/after a solve
+    /// and diff. Monotone, relaxed — a diagnostic, not a fence.
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
     }
 
     /// Run `f(part, parts)` for every `part in 0..parts`, split across
@@ -148,6 +162,7 @@ impl WorkerPool {
             return;
         }
         let _d = lock(&self.dispatch);
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
         let inner = &*self.inner;
         // SAFETY: every worker is idle between epochs (remaining == 0
         // observed by the previous run's completion wait) and the
@@ -303,6 +318,22 @@ mod tests {
         for h in &hits {
             assert_eq!(h.load(Ordering::Relaxed), 100);
         }
+    }
+
+    #[test]
+    fn dispatch_count_tracks_published_jobs_only() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.dispatch_count(), 0);
+        pool.run(2, |_, _| {});
+        pool.run(2, |_, _| {});
+        assert_eq!(pool.dispatch_count(), 2, "real dispatches are counted");
+        // Inline degradations are free and uncounted: single-part...
+        pool.run(1, |_, _| {});
+        // ...and nested calls from inside a job.
+        pool.run(2, |_, _| {
+            pool.run(2, |_, _| {});
+        });
+        assert_eq!(pool.dispatch_count(), 3, "inline/nested calls must not count");
     }
 
     #[test]

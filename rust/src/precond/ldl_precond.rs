@@ -2,43 +2,71 @@
 //! level-scheduled parallel triangular solve (the paper's GPU solve
 //! path; cf. Table 3's SPSV analysis stage).
 //!
-//! The apply is allocation-free in **both** modes: the permuted
-//! intermediate lives in a scratch buffer sized once at construction
-//! (behind an uncontended `Mutex` so the preconditioner stays `Sync`;
-//! PCG applies it sequentially, so the lock never blocks and never
-//! allocates), and level-scheduled mode with `threads > 1` dispatches
-//! wide levels onto the persistent [`crate::par`] worker pool — no
-//! thread spawns, no heap allocation after the pool is warm (see
-//! `solve::trisolve` and the assertion in `rust/tests/alloc_free.rs`).
+//! Level-scheduled mode runs the **packed sweep executor**
+//! ([`crate::solve::packed::PackedSweeps`]): at construction the factor
+//! is renumbered into level-major order and copied contiguously per
+//! sweep direction, and each apply then costs at most one persistent
+//! worker-pool dispatch per sweep — two total, independent of the DAG
+//! depth — with the `D⁻¹` scaling and the fill-reducing permutation
+//! fused into the boundary/scatter passes.
+//!
+//! The apply is allocation-free in **both** modes: the intermediates
+//! live in scratch buffers sized once at construction (behind an
+//! uncontended `Mutex` so the preconditioner stays `Sync`; PCG applies
+//! it sequentially, so the lock never blocks and never allocates), and
+//! pool dispatch allocates nothing after warm-up (see the assertion in
+//! `rust/tests/alloc_free.rs`).
 
 use super::Preconditioner;
 use crate::factor::LdlFactor;
-use crate::solve::trisolve::LevelSchedule;
+use crate::solve::packed::{PackedSweeps, SweepCounters};
 use std::sync::Mutex;
 
-/// `z = (G D Gᵀ)⁺ r`, sequential or level-parallel.
+/// Reusable apply intermediates (one buffer per sweep direction; the
+/// sequential mode uses only the first).
+struct Scratch {
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
+/// `z = (G D Gᵀ)⁺ r`, sequential or level-parallel (packed executor).
 pub struct LdlPrecond {
     factor: LdlFactor,
-    schedule: Option<LevelSchedule>,
+    packed: Option<PackedSweeps>,
     threads: usize,
-    /// Pre-sized scratch for the permuted intermediate (empty when the
-    /// factor stores no permutation and the sequential path is used).
-    scratch: Mutex<Vec<f64>>,
+    scratch: Mutex<Scratch>,
 }
 
 impl LdlPrecond {
     /// Sequential-solve preconditioner.
     pub fn new(factor: LdlFactor) -> LdlPrecond {
-        let scratch = vec![0.0; if factor.perm.is_some() { factor.n() } else { 0 }];
-        LdlPrecond { factor, schedule: None, threads: 1, scratch: Mutex::new(scratch) }
+        let scratch = Scratch {
+            a: vec![0.0; if factor.perm.is_some() { factor.n() } else { 0 }],
+            b: Vec::new(),
+        };
+        LdlPrecond { factor, packed: None, threads: 1, scratch: Mutex::new(scratch) }
     }
 
-    /// Level-scheduled parallel solves with `threads` workers (the
-    /// "analysis" runs here, once — mirroring cuSPARSE SPSV analysis).
+    /// Level-scheduled parallel solves with `threads` workers and the
+    /// [default cutoff](crate::solve::packed::default_cutoff) (the
+    /// "analysis" — level schedules plus the packed level-major copy —
+    /// runs here, once, mirroring cuSPARSE SPSV analysis).
     pub fn with_level_schedule(factor: LdlFactor, threads: usize) -> LdlPrecond {
-        let schedule = LevelSchedule::analyze(&factor);
-        let scratch = vec![0.0; factor.n()];
-        LdlPrecond { factor, schedule: Some(schedule), threads, scratch: Mutex::new(scratch) }
+        Self::with_level_schedule_cutoff(factor, threads, crate::solve::packed::default_cutoff())
+    }
+
+    /// [`LdlPrecond::with_level_schedule`] with an explicit level-width
+    /// cutoff (the [`crate::solver::SolverBuilder::level_cutoff`]
+    /// knob): levels narrower than `cutoff` run sequentially on the
+    /// resident participant 0 instead of being split.
+    pub fn with_level_schedule_cutoff(
+        factor: LdlFactor,
+        threads: usize,
+        cutoff: usize,
+    ) -> LdlPrecond {
+        let packed = PackedSweeps::analyze_with_cutoff(&factor, cutoff);
+        let scratch = Scratch { a: vec![0.0; factor.n()], b: vec![0.0; factor.n()] };
+        LdlPrecond { factor, packed: Some(packed), threads, scratch: Mutex::new(scratch) }
     }
 
     /// Access the wrapped factor.
@@ -48,7 +76,7 @@ impl LdlPrecond {
 
     /// Critical path of the solve DAG (None if sequential mode).
     pub fn critical_path(&self) -> Option<usize> {
-        self.schedule.as_ref().map(|s| s.critical_path)
+        self.packed.as_ref().map(|p| p.critical_path)
     }
 }
 
@@ -57,34 +85,11 @@ impl Preconditioner for LdlPrecond {
         // A poisoned lock only means another apply panicked mid-solve;
         // the buffer contents are overwritten anyway, so recover.
         let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
-        match &self.schedule {
-            None => self.factor.solve_into(r, z, &mut scratch[..]),
-            Some(sched) => {
-                let f = &self.factor;
-                // Work in the permuted space in `scratch` (or directly
-                // in `z` when no permutation is stored).
-                let y: &mut [f64] = match &f.perm {
-                    Some(p) => {
-                        for (i, &ri) in r.iter().enumerate() {
-                            scratch[p[i] as usize] = ri;
-                        }
-                        &mut scratch[..]
-                    }
-                    None => {
-                        z.copy_from_slice(r);
-                        &mut *z
-                    }
-                };
-                sched.forward(y, self.threads);
-                for (yk, &d) in y.iter_mut().zip(&f.diag) {
-                    *yk = if d > 0.0 { *yk / d } else { 0.0 };
-                }
-                sched.backward(&f.g, y, self.threads);
-                if let Some(p) = &f.perm {
-                    for (i, zi) in z.iter_mut().enumerate() {
-                        *zi = scratch[p[i] as usize];
-                    }
-                }
+        match &self.packed {
+            None => self.factor.solve_into(r, z, &mut scratch.a[..]),
+            Some(packed) => {
+                let Scratch { a, b } = &mut *scratch;
+                packed.apply_into(r, z, self.threads, &mut a[..], &mut b[..]);
             }
         }
     }
@@ -95,6 +100,10 @@ impl Preconditioner for LdlPrecond {
 
     fn nnz(&self) -> usize {
         self.factor.nnz() + self.factor.n()
+    }
+
+    fn sweep_counters(&self) -> Option<SweepCounters> {
+        self.packed.as_ref().map(|p| p.counters())
     }
 }
 
@@ -129,14 +138,17 @@ mod tests {
         let l = generators::grid3d(6, 6, 6, generators::Coeff::Uniform, 0);
         let f = factorize(&l, &ParacOptions::default()).unwrap();
         let seq = LdlPrecond::new(f.clone());
-        let par = LdlPrecond::with_level_schedule(f, 4);
+        // A small cutoff so the packed executor genuinely dispatches
+        // and barriers on this grid.
+        let par = LdlPrecond::with_level_schedule_cutoff(f, 4, 8);
         let b = pcg::random_rhs(&l, 9);
         let a = seq.apply(&b);
         let c = par.apply(&b);
-        for (x, y) in a.iter().zip(&c) {
-            assert!((x - y).abs() < 1e-12);
-        }
+        assert_eq!(a, c, "packed parallel apply must be bit-identical to sequential");
         assert!(par.critical_path().unwrap() >= 1);
+        let counters = par.sweep_counters().unwrap();
+        assert_eq!(counters.dispatches, 2, "one pool dispatch per sweep direction");
+        assert!(seq.sweep_counters().is_none());
     }
 
     #[test]

@@ -14,12 +14,12 @@
 //! [`Preconditioner::apply_into`] — PCG calls it once per iteration
 //! with reused buffers; the `Vec`-returning [`Preconditioner::apply`]
 //! is a default-method convenience shim on top. Every impl writes into
-//! the caller buffer without internal allocation, with two documented
-//! exceptions: [`AmgPrecond`] (its V-cycle allocates per-level
-//! temporaries; a setup-heavy baseline, not the hot path) and
-//! [`LdlPrecond`] in level-scheduled mode with `threads > 1`, whose
-//! wide levels spawn scoped worker threads (and thus allocate) per
-//! sweep — its sequential mode is allocation-free.
+//! the caller buffer without internal allocation, with one documented
+//! exception: [`AmgPrecond`] (its V-cycle allocates per-level
+//! temporaries; a setup-heavy baseline, not the hot path).
+//! [`LdlPrecond`] in level-scheduled mode runs the packed sweep
+//! executor ([`crate::solve::packed`]) on the persistent worker pool —
+//! one dispatch per sweep, zero allocation after pool warm-up.
 
 pub mod amg;
 pub mod ichol0;
@@ -59,6 +59,16 @@ pub trait Preconditioner: Sync {
     /// Stored nonzeros (for fill comparisons); 0 if not applicable.
     fn nnz(&self) -> usize {
         0
+    }
+
+    /// Cumulative sweep dispatch/barrier counters, for preconditioners
+    /// whose apply runs level-scheduled sweeps on the worker pool
+    /// ([`LdlPrecond`] via [`crate::solve::packed::PackedSweeps`]).
+    /// `None` for everything else. [`crate::solve::pcg::solve_into`]
+    /// snapshots this around each solve so the O(1)-dispatch behaviour
+    /// is visible in the solve stats.
+    fn sweep_counters(&self) -> Option<crate::solve::packed::SweepCounters> {
+        None
     }
 }
 

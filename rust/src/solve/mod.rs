@@ -5,22 +5,30 @@
 //!   implementing `n()` + `apply_to()`.
 //! * [`pcg`] — preconditioned conjugate gradients with optional
 //!   mean-zero nullspace projection (singular graph Laplacians) and a
-//!   recomputed true-residual check on exit. [`pcg::solve_into`] +
-//!   [`pcg::PcgWorkspace`] is the allocation-free session primitive
-//!   that [`crate::solver::Solver`] drives; [`pcg::random_rhs`] builds
-//!   the reproducible unit-norm right-hand sides every experiment uses.
-//! * [`trisolve`] — level-scheduled parallel triangular solves with the
-//!   unit-lower factor `G`: [`trisolve::LevelSchedule`] groups columns
-//!   by depth in the solve DAG once per factor ("analysis"), then
-//!   forward/backward sweeps dispatch each sufficiently wide level onto
-//!   the persistent [`crate::par`] worker pool — mirroring cuSPARSE's
-//!   SPSV analysis/solve split (paper §6.2), with no thread spawns and
-//!   no allocation per sweep. Both sweeps operate in place on caller
-//!   buffers. The sequential alternative lives on
-//!   [`crate::factor::LdlFactor`] itself (`forward_inplace` /
-//!   `backward_inplace` / `solve` / `solve_into`).
+//!   recomputed true-residual check on exit. The vector passes are
+//!   fused ([`crate::sparse::ops`]): the α-update of `x` and `r` shares
+//!   one pass with the residual norm, and the projection folds into the
+//!   search-direction update — roughly half the full-vector memory
+//!   traffic per iteration, bit-identical to the unfused kernels.
+//!   [`pcg::solve_into`] + [`pcg::PcgWorkspace`] is the allocation-free
+//!   session primitive that [`crate::solver::Solver`] drives;
+//!   [`pcg::random_rhs`] builds the reproducible unit-norm right-hand
+//!   sides every experiment uses.
+//! * [`packed`] — the **packed sweep executor**: triangular sweeps over
+//!   a contiguous level-major copy of the factor, one persistent-pool
+//!   dispatch per sweep with resident workers barrier-syncing at level
+//!   boundaries (paper §6.2 / §5.1 persistent-kernel analogue). This is
+//!   what the ParAC preconditioner applies in level-scheduled mode.
+//! * [`trisolve`] — the level-schedule analysis and the reference
+//!   per-level executor ([`trisolve::LevelSchedule`]): one pool
+//!   dispatch per sufficiently wide level, kept bit-identical to the
+//!   packed path for comparison benches and property tests. The
+//!   sequential alternative lives on [`crate::factor::LdlFactor`]
+//!   itself (`forward_inplace` / `backward_inplace` / `solve` /
+//!   `solve_into`).
 
 pub mod linop;
+pub mod packed;
 pub mod pcg;
 pub mod trisolve;
 

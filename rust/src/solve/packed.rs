@@ -1,0 +1,547 @@
+//! The packed sweep executor: whole triangular sweeps as **one** pool
+//! dispatch over a contiguous, level-major copy of the factor.
+//!
+//! This is the production preconditioner-apply path (paper §6.2, the
+//! SPSV analysis/solve split of Table 3). The pre-packed executor
+//! ([`crate::solve::trisolve::LevelSchedule`], kept as the reference)
+//! leaves the factor in elimination order and pays two costs per PCG
+//! iteration that this module removes:
+//!
+//! * **O(levels) pool dispatches per sweep.** Each level used to be its
+//!   own [`crate::par`] job; deep DAGs (AMD orderings, 3-D grids) have
+//!   hundreds of levels, so dispatch latency — not arithmetic — bounded
+//!   the sweep. Here a sweep is **one** dispatch: the participants stay
+//!   resident across every level and synchronize at level boundaries on
+//!   a [`SweepBarrier`], the CPU analogue of the paper's persistent GPU
+//!   kernel grid-syncing between dependency levels. Runs of levels
+//!   narrower than the [cutoff](PackedSweeps::cutoff) execute
+//!   sequentially on participant 0 behind the barrier instead of
+//!   costing anything extra, and a factor whose levels are *all* narrow
+//!   skips the pool entirely (zero dispatches).
+//! * **Scattered memory traffic.** The level schedule used to gather
+//!   rows through `order[]` indirection, hopping over the factor in
+//!   elimination order. At analysis time this module *renumbers the
+//!   vertices into level order* and copies rows/columns into contiguous
+//!   `ptr/idx/val` arrays per sweep direction, so a sweep streams both
+//!   the factor and the solution vector front to back. The input/output
+//!   scatter of [`PackedSweeps::apply_into`] composes the fill-reducing
+//!   permutation with the level renumbering into a single index map
+//!   (one gather in, one scatter out — not two), and the `D⁻¹` scaling
+//!   is fused into the forward→backward boundary pass.
+//!
+//! Every result is **bit-identical** to the sequential reference
+//! ([`crate::factor::LdlFactor::forward_inplace`] /
+//! [`backward_inplace`](crate::factor::LdlFactor::backward_inplace)):
+//! packing permutes *storage*, never the per-entry accumulation order
+//! (row/column entries keep their original ascending-neighbor order).
+//! Property-tested across engines, orderings, and thread counts in
+//! `rust/tests/properties.rs`. One pedantic caveat, shared with the
+//! reference executor: `forward_inplace` skips source columns whose
+//! value is exactly `0.0`, while the gather formulations subtract
+//! `v·0.0`; for an accumulator holding `-0.0` that turns `-0.0` into
+//! `+0.0`, so equality is `==`-exact (what the tests pin) but the sign
+//! of a zero can differ. No downstream arithmetic observes it.
+//!
+//! The executor is allocation-free after construction — sweeps borrow
+//! caller buffers and the barrier is two atomics — so it lives inside
+//! the solve path's zero-allocation contract
+//! (`rust/tests/alloc_free.rs`). Dispatch and barrier counts are
+//! recorded per executor ([`PackedSweeps::counters`]) and surfaced
+//! through the solver stats, making the O(1)-dispatch claim observable.
+
+use crate::etree;
+use crate::factor::LdlFactor;
+use crate::par::{self, SendPtr, SweepBarrier};
+use crate::solve::trisolve::LEVEL_PAR_CUTOFF;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative dispatch/barrier counts of one [`PackedSweeps`] executor
+/// (snapshot of relaxed counters; subtract two snapshots for a
+/// per-apply delta). One preconditioner apply with at least one level
+/// past the cutoff costs exactly **2 dispatches** (one per sweep
+/// direction) regardless of level count; an all-narrow factor costs 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepCounters {
+    /// Pool jobs published (one per pooled sweep).
+    pub dispatches: u64,
+    /// In-sweep level-boundary barrier episodes.
+    pub barriers: u64,
+}
+
+impl SweepCounters {
+    /// Counts accumulated since an `earlier` snapshot.
+    pub fn since(self, earlier: SweepCounters) -> SweepCounters {
+        SweepCounters {
+            dispatches: self.dispatches - earlier.dispatches,
+            barriers: self.barriers - earlier.barriers,
+        }
+    }
+}
+
+/// The default level-width cutoff: the `PARAC_LEVEL_CUTOFF` environment
+/// variable when set to a positive integer, otherwise
+/// [`LEVEL_PAR_CUTOFF`]. Builders resolve this once at analysis time;
+/// an explicit [`crate::solver::SolverBuilder::level_cutoff`] wins over
+/// the environment.
+pub fn default_cutoff() -> usize {
+    cutoff_from(std::env::var("PARAC_LEVEL_CUTOFF").ok().as_deref())
+}
+
+/// Parse an optional `PARAC_LEVEL_CUTOFF` value (pure helper behind
+/// [`default_cutoff`]; non-numeric and zero values fall back).
+fn cutoff_from(var: Option<&str>) -> usize {
+    var.and_then(|s| s.parse::<usize>().ok())
+        .filter(|&c| c >= 1)
+        .unwrap_or(LEVEL_PAR_CUTOFF)
+}
+
+/// One sweep direction of the packed factor: vertices renumbered into
+/// level-major order, rows (forward) or columns (backward) copied into
+/// contiguous CSR-style arrays whose indices are packed positions.
+/// Levels are contiguous position ranges, so the schedule needs no
+/// `order[]` indirection at solve time.
+struct PackedTri {
+    /// Entry pointer per packed position (`len = n + 1`).
+    ptr: Vec<usize>,
+    /// Dependency packed positions (always < the consuming position).
+    idx: Vec<u32>,
+    /// Factor values, parallel to `idx`, in the original ascending
+    /// neighbor order (bit-identical accumulation).
+    val: Vec<f64>,
+    /// Level boundaries in packed positions (`lev_ptr[t]..lev_ptr[t+1]`
+    /// is level `t`).
+    lev_ptr: Vec<usize>,
+    /// Any level at least as wide as the cutoff? If not, the sweep
+    /// never pays a pool dispatch.
+    any_wide: bool,
+}
+
+impl PackedTri {
+    /// Pack one direction: position `i` holds vertex `order[i]`, whose
+    /// dependency list is supplied by `entries(vertex)` (row of the CSR
+    /// forward view, column of the CSC backward view) and remapped
+    /// through `pos`.
+    fn build<'a>(
+        order: &[u32],
+        lev_ptr: Vec<usize>,
+        pos: &[u32],
+        nnz_hint: usize,
+        mut entries: impl FnMut(usize) -> (&'a [u32], &'a [f64]),
+        cutoff: usize,
+    ) -> PackedTri {
+        let n = order.len();
+        let mut ptr = Vec::with_capacity(n + 1);
+        ptr.push(0usize);
+        let mut idx = Vec::with_capacity(nnz_hint);
+        let mut val = Vec::with_capacity(nnz_hint);
+        for &v in order {
+            let (deps, vals) = entries(v as usize);
+            for (&d, &w) in deps.iter().zip(vals) {
+                idx.push(pos[d as usize]);
+                val.push(w);
+            }
+            ptr.push(idx.len());
+        }
+        let any_wide = lev_ptr.windows(2).any(|w| w[1] - w[0] >= cutoff);
+        PackedTri { ptr, idx, val, lev_ptr, any_wide }
+    }
+
+    /// Number of packed positions.
+    fn n(&self) -> usize {
+        self.ptr.len() - 1
+    }
+}
+
+/// The packed analysis product for both sweeps of `G D Gᵀ` solves (see
+/// the module docs). Analyze once per factor, apply every PCG
+/// iteration; `Sync`, allocation-free after construction.
+pub struct PackedSweeps {
+    /// Forward sweep (`G y = r`), level-major packed rows of `G`.
+    fwd: PackedTri,
+    /// Backward sweep (`Gᵀ z = y`), level-major packed columns of `G`.
+    bwd: PackedTri,
+    /// `fwd_pos[vertex] = forward packed position` (permuted space).
+    fwd_pos: Vec<u32>,
+    /// `bwd_pos[vertex] = backward packed position` (permuted space).
+    bwd_pos: Vec<u32>,
+    /// Composed input scatter: `y_fwd[fwd_in[i]] = r[i]` folds the
+    /// fill-reducing permutation into the forward renumbering. `None`
+    /// when the factor stores no permutation — the composition would
+    /// equal `fwd_pos`, so it is not duplicated.
+    fwd_in: Option<Vec<u32>>,
+    /// Boundary gather: backward position `i` reads forward position
+    /// `mid[i]` (same vertex, both renumberings).
+    mid: Vec<u32>,
+    /// `D` arranged in backward packed order (scaling fused into the
+    /// boundary pass; zero pivots apply pseudo-inversely).
+    diag_bwd: Vec<f64>,
+    /// Composed output gather: `z[i] = y_bwd[bwd_out[i]]`; `None` ≡
+    /// `bwd_pos` (same rationale as `fwd_in`).
+    bwd_out: Option<Vec<u32>>,
+    /// Level-width threshold below which a level (run) executes
+    /// sequentially on participant 0.
+    cutoff: usize,
+    /// Critical path of the forward solve DAG (number of levels).
+    pub critical_path: usize,
+    /// Level-boundary synchronization for the resident participants.
+    barrier: SweepBarrier,
+    /// See [`PackedSweeps::counters`].
+    dispatches: AtomicU64,
+    /// See [`PackedSweeps::counters`].
+    barriers: AtomicU64,
+}
+
+impl PackedSweeps {
+    /// Analyze a factor with the [`default_cutoff`].
+    pub fn analyze(f: &LdlFactor) -> PackedSweeps {
+        PackedSweeps::analyze_with_cutoff(f, default_cutoff())
+    }
+
+    /// Analyze a factor (the "analysis phase"): compute both level
+    /// schedules, renumber into level order, and pack rows/columns
+    /// contiguously. `cutoff` is the minimum level width dispatched in
+    /// parallel (clamped to at least 1).
+    pub fn analyze_with_cutoff(f: &LdlFactor, cutoff: usize) -> PackedSweeps {
+        let cutoff = cutoff.max(1);
+        let n = f.n();
+        let (fwd_levels, fwd_max) = etree::trisolve_levels(&f.g);
+        let (bwd_levels, bwd_max) = etree::trisolve_levels_bwd(&f.g);
+        let (fwd_order, fwd_lev) = etree::bucket_by_level(&fwd_levels, fwd_max);
+        let (bwd_order, bwd_lev) = etree::bucket_by_level(&bwd_levels, bwd_max);
+        let mut fwd_pos = vec![0u32; n];
+        for (i, &v) in fwd_order.iter().enumerate() {
+            fwd_pos[v as usize] = i as u32;
+        }
+        let mut bwd_pos = vec![0u32; n];
+        for (i, &v) in bwd_order.iter().enumerate() {
+            bwd_pos[v as usize] = i as u32;
+        }
+        // Forward packing reads rows of `G`; one transient CSR
+        // transpose is materialized here and dropped after packing, so
+        // the resident footprint is two packed copies (one per sweep)
+        // and nothing else.
+        let g_rows = f.g.to_csr();
+        let fwd = PackedTri::build(
+            &fwd_order,
+            fwd_lev,
+            &fwd_pos,
+            f.g.nnz(),
+            |k| (g_rows.row_indices(k), g_rows.row_data(k)),
+            cutoff,
+        );
+        let bwd = PackedTri::build(
+            &bwd_order,
+            bwd_lev,
+            &bwd_pos,
+            f.g.nnz(),
+            |k| (f.g.col_rows(k), f.g.col_data(k)),
+            cutoff,
+        );
+        let (fwd_in, bwd_out) = match &f.perm {
+            Some(p) => (
+                Some(p.iter().map(|&pi| fwd_pos[pi as usize]).collect()),
+                Some(p.iter().map(|&pi| bwd_pos[pi as usize]).collect()),
+            ),
+            // No permutation: the compositions degenerate to the
+            // renumberings themselves — don't duplicate them.
+            None => (None, None),
+        };
+        let mid = bwd_order.iter().map(|&v| fwd_pos[v as usize]).collect();
+        let diag_bwd = bwd_order.iter().map(|&v| f.diag[v as usize]).collect();
+        PackedSweeps {
+            fwd,
+            bwd,
+            fwd_pos,
+            bwd_pos,
+            fwd_in,
+            mid,
+            diag_bwd,
+            bwd_out,
+            cutoff,
+            critical_path: fwd_max,
+            barrier: SweepBarrier::new(),
+            dispatches: AtomicU64::new(0),
+            barriers: AtomicU64::new(0),
+        }
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.fwd.n()
+    }
+
+    /// The effective level-width cutoff (builder knob or
+    /// `PARAC_LEVEL_CUTOFF` or [`LEVEL_PAR_CUTOFF`]).
+    pub fn cutoff(&self) -> usize {
+        self.cutoff
+    }
+
+    /// Snapshot of the cumulative dispatch/barrier counters.
+    pub fn counters(&self) -> SweepCounters {
+        SweepCounters {
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            barriers: self.barriers.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Full preconditioner apply `z = (G D Gᵀ)⁺ r` with up to `threads`
+    /// pool workers: composed scatter-in, forward sweep, fused `D⁻¹`
+    /// boundary, backward sweep, composed scatter-out. `y_fwd`/`y_bwd`
+    /// are caller scratch of length `n` (prior contents ignored).
+    /// Bit-identical to [`LdlFactor::solve_into`].
+    pub fn apply_into(
+        &self,
+        r: &[f64],
+        z: &mut [f64],
+        threads: usize,
+        y_fwd: &mut [f64],
+        y_bwd: &mut [f64],
+    ) {
+        let n = self.n();
+        debug_assert_eq!(r.len(), n);
+        debug_assert_eq!(z.len(), n);
+        debug_assert_eq!(y_fwd.len(), n);
+        debug_assert_eq!(y_bwd.len(), n);
+        let fwd_in = self.fwd_in.as_deref().unwrap_or(&self.fwd_pos);
+        let bwd_out = self.bwd_out.as_deref().unwrap_or(&self.bwd_pos);
+        for (&slot, &ri) in fwd_in.iter().zip(r) {
+            y_fwd[slot as usize] = ri;
+        }
+        self.sweep(&self.fwd, y_fwd, threads);
+        for i in 0..n {
+            let d = self.diag_bwd[i];
+            y_bwd[i] = if d > 0.0 { y_fwd[self.mid[i] as usize] / d } else { 0.0 };
+        }
+        self.sweep(&self.bwd, y_bwd, threads);
+        for (zi, &slot) in z.iter_mut().zip(bwd_out) {
+            *zi = y_bwd[slot as usize];
+        }
+    }
+
+    /// Forward solve `G y = r` in place on a vector in **permuted
+    /// vertex space** (the space of
+    /// [`LdlFactor::forward_inplace`], which it matches bit for bit).
+    /// `scratch` (length `n`) holds the packed intermediate. Mainly for
+    /// parity tests and benches; the production path is
+    /// [`PackedSweeps::apply_into`], whose scatters are composed.
+    pub fn forward(&self, y: &mut [f64], scratch: &mut [f64], threads: usize) {
+        debug_assert_eq!(y.len(), self.n());
+        debug_assert_eq!(scratch.len(), self.n());
+        for (&p, &yi) in self.fwd_pos.iter().zip(y.iter()) {
+            scratch[p as usize] = yi;
+        }
+        self.sweep(&self.fwd, scratch, threads);
+        for (&p, yi) in self.fwd_pos.iter().zip(y.iter_mut()) {
+            *yi = scratch[p as usize];
+        }
+    }
+
+    /// Backward solve `Gᵀ z = y` in place on a vector in permuted
+    /// vertex space (bit-identical to
+    /// [`LdlFactor::backward_inplace`]); see [`PackedSweeps::forward`].
+    pub fn backward(&self, y: &mut [f64], scratch: &mut [f64], threads: usize) {
+        debug_assert_eq!(y.len(), self.n());
+        debug_assert_eq!(scratch.len(), self.n());
+        for (&p, &yi) in self.bwd_pos.iter().zip(y.iter()) {
+            scratch[p as usize] = yi;
+        }
+        self.sweep(&self.bwd, scratch, threads);
+        for (&p, yi) in self.bwd_pos.iter().zip(y.iter_mut()) {
+            *yi = scratch[p as usize];
+        }
+    }
+
+    /// Run one packed sweep over `y` (packed order). Sequential inline
+    /// when `threads <= 1` or no level clears the cutoff; otherwise one
+    /// pool dispatch for the whole sweep, with resident participants
+    /// barrier-syncing at level boundaries.
+    fn sweep(&self, tri: &PackedTri, y: &mut [f64], threads: usize) {
+        let n = tri.n();
+        if threads.max(1) == 1 || !tri.any_wide {
+            // Dependencies always sit at smaller packed positions, so
+            // one ascending pass is the whole solve.
+            for i in 0..n {
+                let mut acc = y[i];
+                for e in tri.ptr[i]..tri.ptr[i + 1] {
+                    acc -= tri.val[e] * y[tri.idx[e] as usize];
+                }
+                y[i] = acc;
+            }
+            return;
+        }
+        let yptr = SendPtr::new(y.as_mut_ptr());
+        let nlev = tri.lev_ptr.len() - 1;
+        par::global().run(threads, |part, parts| {
+            // SAFETY (whole job): level discipline — position `i` reads
+            // only positions from earlier levels (published by the
+            // previous barrier episode or the dispatch itself) and is
+            // the sole writer of its own slot within its level.
+            let eliminate = |i: usize| unsafe {
+                let mut acc = yptr.read(i);
+                for e in tri.ptr[i]..tri.ptr[i + 1] {
+                    acc -= tri.val[e] * yptr.read(tri.idx[e] as usize);
+                }
+                yptr.write(i, acc);
+            };
+            if part == 0 && parts > 1 {
+                self.dispatches.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut lev = 0usize;
+            while lev < nlev {
+                let (lo, hi) = (tri.lev_ptr[lev], tri.lev_ptr[lev + 1]);
+                if parts > 1 && hi - lo >= self.cutoff {
+                    // Wide level: split across the resident parts.
+                    let (a, b) = par::chunk_range(hi - lo, part, parts);
+                    for i in lo + a..lo + b {
+                        eliminate(i);
+                    }
+                    lev += 1;
+                } else {
+                    // Run of narrow levels (or the whole sweep when the
+                    // dispatch degraded to one part): participant 0
+                    // walks it sequentially, the rest go straight to
+                    // the barrier. In-level order is ascending packed
+                    // position — identical to the sequential reference.
+                    let start = lev;
+                    while lev < nlev
+                        && (parts == 1
+                            || tri.lev_ptr[lev + 1] - tri.lev_ptr[lev] < self.cutoff)
+                    {
+                        lev += 1;
+                    }
+                    if part == 0 {
+                        for i in tri.lev_ptr[start]..tri.lev_ptr[lev] {
+                            eliminate(i);
+                        }
+                    }
+                }
+                // Publish this level (run) to every participant before
+                // anyone consumes it. The final run needs no in-sweep
+                // barrier: the pool's own completion barrier publishes
+                // the sweep to the dispatcher.
+                if lev < nlev {
+                    self.barrier.wait(parts);
+                    if part == 0 {
+                        self.barriers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::{factorize, Engine, ParacOptions};
+    use crate::graph::generators;
+    use crate::ordering::perm;
+
+    fn seq_factor(l: &crate::graph::Laplacian) -> LdlFactor {
+        factorize(l, &ParacOptions { engine: Engine::Seq, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn packed_apply_matches_factor_solve() {
+        let l = generators::grid3d(6, 6, 6, generators::Coeff::Uniform, 0);
+        let f = seq_factor(&l);
+        // Cutoff of 4 forces real pool dispatches + barriers even on
+        // this small grid.
+        let packed = PackedSweeps::analyze_with_cutoff(&f, 4);
+        let n = f.n();
+        let r: Vec<f64> = (0..n).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let want = f.solve(&r);
+        let (mut z, mut a, mut b) = (vec![f64::NAN; n], vec![0.0; n], vec![0.0; n]);
+        for threads in [1usize, 4] {
+            packed.apply_into(&r, &mut z, threads, &mut a, &mut b);
+            assert_eq!(z, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn packed_sweeps_match_inplace_reference() {
+        let l = generators::random_connected(300, 460, 5);
+        let f = seq_factor(&l);
+        let packed = PackedSweeps::analyze_with_cutoff(&f, 8);
+        let p = f.perm.as_ref().unwrap();
+        let r: Vec<f64> = (0..f.n()).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+        let mut want = perm::apply_vec(p, &r);
+        let mut got = want.clone();
+        let mut scratch = vec![0.0; f.n()];
+        f.forward_inplace(&mut want);
+        packed.forward(&mut got, &mut scratch, 4);
+        assert_eq!(want, got, "forward sweep must be bit-identical");
+        f.backward_inplace(&mut want);
+        packed.backward(&mut got, &mut scratch, 4);
+        assert_eq!(want, got, "backward sweep must be bit-identical");
+    }
+
+    #[test]
+    fn one_dispatch_per_sweep_regardless_of_level_count() {
+        // Deep-and-wide graph: a 3-D grid factor has many levels, and a
+        // cutoff of 2 makes essentially all of them "wide" — the old
+        // executor would pay one dispatch per level, the packed one
+        // must pay exactly one per sweep.
+        let l = generators::grid3d(7, 7, 7, generators::Coeff::Uniform, 1);
+        let f = seq_factor(&l);
+        let packed = PackedSweeps::analyze_with_cutoff(&f, 2);
+        assert!(packed.critical_path > 3, "need a multi-level DAG");
+        let n = f.n();
+        let r = vec![1.0; n];
+        let (mut z, mut a, mut b) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let before = packed.counters();
+        packed.apply_into(&r, &mut z, 4, &mut a, &mut b);
+        let delta = packed.counters().since(before);
+        assert_eq!(
+            delta.dispatches, 2,
+            "one pool dispatch per sweep direction, independent of the {} levels",
+            packed.critical_path
+        );
+        assert!(delta.barriers >= 1, "multi-level sweeps must barrier between levels");
+        // A second apply costs the same again.
+        packed.apply_into(&r, &mut z, 4, &mut a, &mut b);
+        assert_eq!(packed.counters().since(before).dispatches, 4);
+    }
+
+    #[test]
+    fn all_narrow_factor_never_dispatches() {
+        // A path graph's factor is one long chain: every level has
+        // width 1, so even a threaded apply stays inline.
+        let l = generators::path(200);
+        let f = seq_factor(&l);
+        let packed = PackedSweeps::analyze(&f);
+        let n = f.n();
+        let r: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 8.0).collect();
+        let want = f.solve(&r);
+        let (mut z, mut a, mut b) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        packed.apply_into(&r, &mut z, 4, &mut a, &mut b);
+        assert_eq!(z, want);
+        assert_eq!(packed.counters(), SweepCounters::default());
+    }
+
+    #[test]
+    fn zero_pivots_apply_pseudo_inversely() {
+        // Two disconnected components → two zero pivots; the fused
+        // boundary must zero them exactly like the sequential solve.
+        let mut edges: Vec<(u32, u32, f64)> = (0..40u32).map(|i| (i, i + 1, 1.0)).collect();
+        edges.extend((41..90u32).map(|i| (i, i + 1, 2.0)));
+        let l = crate::graph::Laplacian::from_edges(91, &edges, "two-comp");
+        let f = seq_factor(&l);
+        assert_eq!(f.diag.iter().filter(|&&d| d == 0.0).count(), 2);
+        let packed = PackedSweeps::analyze_with_cutoff(&f, 4);
+        let r: Vec<f64> = (0..f.n()).map(|i| ((i * 29) % 13) as f64 - 6.0).collect();
+        let want = f.solve(&r);
+        let n = f.n();
+        let (mut z, mut a, mut b) = (vec![f64::NAN; n], vec![0.0; n], vec![0.0; n]);
+        packed.apply_into(&r, &mut z, 4, &mut a, &mut b);
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn cutoff_parsing_and_default() {
+        assert_eq!(cutoff_from(None), LEVEL_PAR_CUTOFF);
+        assert_eq!(cutoff_from(Some("64")), 64);
+        assert_eq!(cutoff_from(Some("0")), LEVEL_PAR_CUTOFF);
+        assert_eq!(cutoff_from(Some("not-a-number")), LEVEL_PAR_CUTOFF);
+    }
+}

@@ -1,31 +1,50 @@
-//! Sparse triangular solves with the unit-lower factor `G`.
+//! Level-scheduled triangular solves — the analysis phase and the
+//! **reference** per-level executor behind the packed production path.
 //!
-//! Two schedules:
-//! * sequential CSC forward/backward (the LdlFactor built-ins), and
-//! * **level-scheduled parallel** solves: vertices grouped by their
-//!   depth in the triangular-solve DAG (paper §6.2 — GPU triangular
-//!   solve performance is governed by the DAG's critical path, which is
-//!   why nnz-sort/random beat AMD on the GPU).
+//! The solve phase of the paper (§6.2, Table 3's SPSV analysis/solve
+//! split) is governed by the triangular-solve DAG: vertices grouped by
+//! depth can be eliminated concurrently, and the critical path bounds
+//! any parallel sweep (which is why nnz-sort/random orderings beat AMD
+//! on the GPU). Two executors share that analysis:
 //!
-//! The level schedule is computed once per factor and reused across PCG
-//! iterations, mirroring cuSPARSE's analysis + solve split. Parallel
-//! levels are dispatched through the persistent [`crate::par`] worker
-//! pool, so a sweep costs one pool dispatch per sufficiently wide level
-//! and **no thread spawns and no heap allocations** — the analysis
-//! phase owns the only materialized copy (`G` in CSR for the forward
-//! sweep); the backward sweep borrows the factor's own CSC storage at
-//! call time.
+//! * [`crate::solve::packed::PackedSweeps`] — the **production**
+//!   executor. At analysis time it renumbers vertices into level order
+//!   and copies the factor into contiguous level-major `ptr/idx/val`
+//!   arrays per sweep direction, then executes each whole sweep as
+//!   **one** persistent-pool dispatch, barrier-syncing the resident
+//!   workers at level boundaries ([`crate::par::SweepBarrier`]). O(1)
+//!   dispatches per sweep, streaming memory access, `D⁻¹` and the
+//!   fill-reducing permutation fused into the boundary/scatter passes.
+//! * [`LevelSchedule`] (this module) — the pre-packing executor, kept
+//!   as the bit-identical reference: the factor stays in elimination
+//!   order, each sufficiently wide level is its own pool dispatch, and
+//!   rows are gathered through `order[]` indirection. Comparison
+//!   benches (`benches/bench_precond_apply.rs`) and property tests
+//!   drive both paths against each other; production code should reach
+//!   for the packed executor.
+//!
+//! Both executors compute results bit-identical to the sequential
+//! sweeps on [`crate::factor::LdlFactor`]: level scheduling and packing
+//! permute *storage and execution*, never the per-entry accumulation
+//! order. The schedule is computed once per factor and reused across
+//! PCG iterations, mirroring cuSPARSE's analysis + solve split.
 
 use crate::etree;
 use crate::factor::LdlFactor;
 use crate::par::{self, SendPtr};
 use crate::sparse::{Csc, Csr};
 
-/// Below this many vertices a level runs sequentially on the calling
-/// thread — dispatch latency would dominate the arithmetic.
-const LEVEL_PAR_CUTOFF: usize = 256;
+/// Default minimum level width dispatched in parallel — below this many
+/// vertices a level runs sequentially on the calling (or resident-0)
+/// thread, where dispatch/barrier latency would dominate the
+/// arithmetic. Tunable per solver session via
+/// [`crate::solver::SolverBuilder::level_cutoff`] or the
+/// `PARAC_LEVEL_CUTOFF` environment variable (see
+/// [`crate::solve::packed::default_cutoff`]).
+pub const LEVEL_PAR_CUTOFF: usize = 256;
 
-/// Precomputed level schedule for both sweeps of `G D Gᵀ` solves.
+/// Precomputed level schedule for both sweeps of `G D Gᵀ` solves (the
+/// reference per-level executor; see the module docs).
 ///
 /// Stores `G` row-wise (CSR) for the forward sweep; the backward sweep
 /// reads columns and borrows the factor's CSC storage per call, so the
@@ -46,48 +65,14 @@ pub struct LevelSchedule {
 }
 
 impl LevelSchedule {
-    /// Analyze a factor (the "analysis phase").
+    /// Analyze a factor (the "analysis phase"): forward levels from the
+    /// solve DAG, backward levels from its transpose, vertices bucketed
+    /// level-major.
     pub fn analyze(f: &LdlFactor) -> LevelSchedule {
-        let n = f.n();
         let (fwd_levels, maxl) = etree::trisolve_levels(&f.g);
-        // Backward sweep dependencies are the transpose DAG: level from
-        // the other end. bwd_level[k] = 1 + max over rows r in col k of
-        // bwd_level[r].
-        let mut bwd_levels = vec![1u32; n];
-        let mut bmax = 1u32;
-        for k in (0..n).rev() {
-            let mut l = 1u32;
-            for &r in f.g.col_rows(k) {
-                let lr = bwd_levels[r as usize];
-                if lr + 1 > l {
-                    l = lr + 1;
-                }
-            }
-            bwd_levels[k] = l;
-            bmax = bmax.max(l);
-        }
-        let bucket = |levels: &[u32], maxl: usize| {
-            // ptr[t] = start offset of level t+1 (levels are 1-based).
-            let mut ptr = vec![0usize; maxl + 1];
-            for &l in levels {
-                ptr[(l - 1) as usize] += 1;
-            }
-            let mut acc = 0;
-            for p in ptr.iter_mut() {
-                let c = *p;
-                *p = acc;
-                acc += c;
-            }
-            let mut order = vec![0u32; levels.len()];
-            let mut cursor = ptr.clone();
-            for (v, &l) in levels.iter().enumerate() {
-                order[cursor[(l - 1) as usize]] = v as u32;
-                cursor[(l - 1) as usize] += 1;
-            }
-            (order, ptr)
-        };
-        let (fwd_order, fwd_ptr) = bucket(&fwd_levels, maxl);
-        let (bwd_order, bwd_ptr) = bucket(&bwd_levels, bmax as usize);
+        let (bwd_levels, bmax) = etree::trisolve_levels_bwd(&f.g);
+        let (fwd_order, fwd_ptr) = etree::bucket_by_level(&fwd_levels, maxl);
+        let (bwd_order, bwd_ptr) = etree::bucket_by_level(&bwd_levels, bmax);
         LevelSchedule {
             // Single direct CSC→CSR transpose of the borrowed factor —
             // no intermediate clones of `G` are materialized.
@@ -101,7 +86,8 @@ impl LevelSchedule {
     }
 
     /// Forward solve `G y = r` in place using the level schedule with
-    /// up to `threads` pool workers.
+    /// up to `threads` pool workers (one dispatch per wide level — the
+    /// pre-packed cost model).
     pub fn forward(&self, y: &mut [f64], threads: usize) {
         // y[k] = r[k] − Σ_{j<k} G[k,j]·y[j]; all k in a level are
         // independent.

@@ -26,8 +26,14 @@
 //! * [`SolverBuilder::threads`] sets how many pool workers the solve
 //!   phase uses (row-split SpMV via
 //!   [`Csr::spmv_par`](crate::sparse::Csr::spmv_par), and — for the
-//!   ParAC preconditioner — level-scheduled triangular solves). The
-//!   default of 1 keeps the solve fully sequential.
+//!   ParAC preconditioner — level-scheduled triangular solves through
+//!   the packed executor ([`crate::solve::packed`]): one pool dispatch
+//!   per sweep over a contiguous level-major factor copy, observable
+//!   via [`Solver::sweep_counters`] and the per-solve
+//!   `precond_dispatches`/`precond_barriers` fields of [`SolveStats`];
+//!   [`SolverBuilder::level_cutoff`] tunes the width below which a
+//!   level stays sequential). The default of 1 keeps the solve fully
+//!   sequential.
 //! * [`Solver::solve_batch`] runs many right-hand sides through one
 //!   session: one factor, one pool, one workspace, results
 //!   **bit-identical** to looping [`Solver::solve_into`] per RHS.
@@ -189,6 +195,9 @@ pub struct SolverBuilder {
     /// Pool workers for the solve phase (SpMV + ParAC triangular
     /// solves); 1 = sequential, 0 = every pool worker.
     threads: usize,
+    /// Level-width cutoff for the packed sweep executor; `None` =
+    /// `PARAC_LEVEL_CUTOFF` env override or the built-in default.
+    level_cutoff: Option<usize>,
 }
 
 impl Default for SolverBuilder {
@@ -199,6 +208,7 @@ impl Default for SolverBuilder {
             pcg: PcgOptions::default(),
             project: None,
             threads: 1,
+            level_cutoff: None,
         }
     }
 }
@@ -262,6 +272,18 @@ impl SolverBuilder {
     /// nothing after the pool is warm.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Minimum level width the packed sweep executor splits across the
+    /// pool (levels narrower than this run sequentially on the resident
+    /// participant 0, behind the in-sweep barrier). Default: the
+    /// `PARAC_LEVEL_CUTOFF` environment variable when set, otherwise
+    /// [`crate::solve::trisolve::LEVEL_PAR_CUTOFF`]; an explicit call
+    /// here wins over both. Only affects the ParAC preconditioner in
+    /// level-scheduled mode. Clamped to at least 1.
+    pub fn level_cutoff(mut self, cutoff: usize) -> Self {
+        self.level_cutoff = Some(cutoff.max(1));
         self
     }
 
@@ -329,7 +351,10 @@ impl SolverBuilder {
             PrecondKind::Parac { level_threads } => {
                 let f = factor::factorize_sdd(a, &self.parac)?;
                 let stats = f.stats.clone();
-                (wrap_ldl(f, self.level_threads(*level_threads)), Some(stats))
+                (
+                    wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff),
+                    Some(stats),
+                )
             }
             other => (build_baseline(a, other)?, None),
         };
@@ -397,7 +422,10 @@ impl SolverBuilder {
             PrecondKind::Parac { level_threads } => {
                 let f = factor::factorize(lap, &self.parac)?;
                 let stats = f.stats.clone();
-                Ok((wrap_ldl(f, self.level_threads(*level_threads)), Some(stats)))
+                Ok((
+                    wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff),
+                    Some(stats),
+                ))
             }
             other => Ok((build_baseline(&lap.matrix, other)?, None)),
         }
@@ -427,10 +455,18 @@ impl SolverBuilder {
 }
 
 /// Wrap a ParAC factor as a preconditioner, with or without the
-/// level-scheduled parallel solve.
-fn wrap_ldl(f: crate::factor::LdlFactor, level_threads: usize) -> Box<dyn Preconditioner> {
+/// level-scheduled (packed-executor) parallel solve; `cutoff = None`
+/// resolves to the environment/default cutoff.
+fn wrap_ldl(
+    f: crate::factor::LdlFactor,
+    level_threads: usize,
+    cutoff: Option<usize>,
+) -> Box<dyn Preconditioner> {
     if level_threads > 0 {
-        Box::new(LdlPrecond::with_level_schedule(f, level_threads))
+        Box::new(match cutoff {
+            Some(c) => LdlPrecond::with_level_schedule_cutoff(f, level_threads, c),
+            None => LdlPrecond::with_level_schedule(f, level_threads),
+        })
     } else {
         Box::new(LdlPrecond::new(f))
     }
@@ -525,6 +561,16 @@ impl<'a> Solver<'a> {
     /// ParAC factor statistics (None for baseline preconditioners).
     pub fn factor_stats(&self) -> Option<&FactorStats> {
         self.factor_stats.as_ref()
+    }
+
+    /// Cumulative sweep dispatch/barrier counters of the packed
+    /// triangular-solve executor (None unless the preconditioner is
+    /// ParAC in level-scheduled mode). Per-solve deltas are also
+    /// recorded on every returned
+    /// [`SolveStats`] (`precond_dispatches` / `precond_barriers`) —
+    /// the observable behind the O(1)-dispatches-per-sweep claim.
+    pub fn sweep_counters(&self) -> Option<crate::solve::packed::SweepCounters> {
+        self.pre.sweep_counters()
     }
 
     /// Per-iteration relative residuals of the most recent solve (empty
@@ -824,6 +870,45 @@ mod tests {
         assert_eq!(narrow.x, wide.x, "threads(4) must be bit-identical to threads(1)");
         assert_eq!(narrow.iters, wide.iters);
         assert!(wide.converged);
+    }
+
+    #[test]
+    fn dispatch_counters_observe_one_dispatch_per_sweep() {
+        // Two applies per iteration never happen — PCG applies the
+        // preconditioner once per iteration plus once at setup — and
+        // each apply must cost exactly 2 pool dispatches (one per sweep
+        // direction) no matter how many levels the DAG has. A cutoff of
+        // 1 makes every level "wide", so the old executor would have
+        // paid O(levels × applies) dispatches here.
+        let lap = generators::grid2d(20, 20, generators::Coeff::Uniform, 0);
+        let mut s = Solver::builder()
+            .seed(4)
+            .engine(crate::factor::Engine::Seq)
+            .preconditioner(PrecondKind::Parac { level_threads: 4 })
+            .level_cutoff(1)
+            .build(&lap)
+            .unwrap();
+        assert_eq!(s.sweep_counters().unwrap(), Default::default());
+        let b = pcg::random_rhs(&lap, 1);
+        let mut x = vec![0.0; lap.n()];
+        let stats = s.solve_into(&b, &mut x).unwrap();
+        assert!(stats.converged);
+        // Applies = 1 at setup + one per iteration except the last
+        // (which converges before the tail apply) = `iters` exactly.
+        let applies = stats.iters as u64;
+        assert_eq!(stats.precond_dispatches, 2 * applies);
+        assert!(stats.precond_barriers >= stats.precond_dispatches);
+        assert_eq!(s.sweep_counters().unwrap().dispatches, stats.precond_dispatches);
+
+        // Baselines report no sweep counters and zeroed stats fields.
+        let mut jac = Solver::builder()
+            .preconditioner(PrecondKind::Jacobi)
+            .max_iter(2000)
+            .build(&lap)
+            .unwrap();
+        assert!(jac.sweep_counters().is_none());
+        let jstats = jac.solve_into(&b, &mut x).unwrap();
+        assert_eq!((jstats.precond_dispatches, jstats.precond_barriers), (0, 0));
     }
 
     #[test]

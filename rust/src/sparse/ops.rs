@@ -1,5 +1,17 @@
-//! Vector/matrix kernels: BLAS-1 helpers, sparse matrix–matrix product
-//! (Gustavson SpGEMM), and small dense Cholesky (AMG coarsest level).
+//! Vector/matrix kernels: BLAS-1 helpers, the fused PCG vector passes,
+//! sparse matrix–matrix product (Gustavson SpGEMM), and small dense
+//! Cholesky (AMG coarsest level).
+//!
+//! The `fused_*` kernels exist because PCG's per-iteration cost on a
+//! well-preconditioned system is dominated by streaming full-length
+//! vectors through memory, not by flops: fusing the α-update of `x` and
+//! `r` with the residual norm, and folding the mean-zero projection
+//! into the dot/search-direction passes, roughly halves the number of
+//! full-vector passes per iteration. Every fusion preserves the
+//! element-wise operation sequence of the unfused kernels exactly —
+//! same operands, same order — so results are **bit-identical** (IEEE
+//! 754 has no reassociation here; pinned by the parity test in
+//! `crate::solve::pcg`).
 
 use super::csr::Csr;
 
@@ -25,10 +37,101 @@ pub fn nrm2(x: &[f64]) -> f64 {
 /// Subtract the mean in place — projects onto the range of a connected
 /// graph Laplacian (orthogonal complement of the constant nullspace).
 pub fn project_mean_zero(x: &mut [f64]) {
-    let m = x.iter().sum::<f64>() / x.len() as f64;
+    let m = mean(x);
     for v in x.iter_mut() {
         *v -= m;
     }
+}
+
+/// Arithmetic mean (the exact expression [`project_mean_zero`]
+/// subtracts — callers that fold the projection into a later pass must
+/// use this so the fused and unfused paths stay bit-identical).
+pub fn mean(x: &[f64]) -> f64 {
+    x.iter().sum::<f64>() / x.len() as f64
+}
+
+/// Fused PCG α-update: `x ← x + α·p` and `r ← r − α·ap` in one pass
+/// (bit-identical to `axpy(α, p, x); axpy(−α, ap, r)` — IEEE 754
+/// negation commutes with multiplication exactly).
+pub fn fused_axpy2(alpha: f64, p: &[f64], ap: &[f64], x: &mut [f64], r: &mut [f64]) {
+    debug_assert_eq!(p.len(), x.len());
+    debug_assert_eq!(ap.len(), r.len());
+    debug_assert_eq!(x.len(), r.len());
+    for i in 0..x.len() {
+        x[i] += alpha * p[i];
+        r[i] -= alpha * ap[i];
+    }
+}
+
+/// [`fused_axpy2`] plus the squared residual norm `Σ rᵢ²` accumulated
+/// in the same pass (each `rᵢ` is final before it is squared, in
+/// ascending order — bit-identical to a separate [`dot`]`(r, r)`).
+/// For the unprojected PCG iteration: three passes become one.
+pub fn fused_axpy2_nrm2sq(alpha: f64, p: &[f64], ap: &[f64], x: &mut [f64], r: &mut [f64]) -> f64 {
+    debug_assert_eq!(p.len(), x.len());
+    debug_assert_eq!(ap.len(), r.len());
+    debug_assert_eq!(x.len(), r.len());
+    let mut acc = 0.0;
+    for i in 0..x.len() {
+        x[i] += alpha * p[i];
+        let ri = r[i] - alpha * ap[i];
+        r[i] = ri;
+        acc += ri * ri;
+    }
+    acc
+}
+
+/// Fused projection + squared norm: `r ← r − mean(r)` and `Σ rᵢ²` in
+/// one subtract-and-square pass (bit-identical to
+/// [`project_mean_zero`]`(r)` followed by [`dot`]`(r, r)`).
+pub fn fused_project_nrm2sq(r: &mut [f64]) -> f64 {
+    let m = mean(r);
+    let mut acc = 0.0;
+    for v in r.iter_mut() {
+        *v -= m;
+        acc += *v * *v;
+    }
+    acc
+}
+
+/// Dot product against a *virtually projected* vector:
+/// `Σ rᵢ·(zᵢ − mz)` without materializing the projection — `z` is left
+/// untouched. With `mz = mean(z)` this is bit-identical to
+/// `project_mean_zero(z); dot(r, z)`; with `mz = 0.0` it is exactly
+/// [`dot`] (IEEE: `x − 0.0 ≡ x`).
+pub fn fused_project_dot(r: &[f64], z: &[f64], mz: f64) -> f64 {
+    debug_assert_eq!(r.len(), z.len());
+    let mut acc = 0.0;
+    for (&ri, &zi) in r.iter().zip(z) {
+        acc += ri * (zi - mz);
+    }
+    acc
+}
+
+/// Fused search-direction update: `pᵢ ← (zᵢ − mz) + β·pᵢ` — the
+/// mean-zero projection of `z` folded into the `p = z + βp` pass, `z`
+/// untouched (it is dead after this point in the PCG iteration, so the
+/// projection is never materialized at all).
+pub fn fused_search_dir(z: &[f64], mz: f64, beta: f64, p: &mut [f64]) {
+    debug_assert_eq!(z.len(), p.len());
+    for (pi, &zi) in p.iter_mut().zip(z) {
+        *pi = (zi - mz) + beta * *pi;
+    }
+}
+
+/// Fused initial search direction: `pᵢ ← zᵢ − mz` and `Σ rᵢ·pᵢ` in one
+/// pass (bit-identical to `project_mean_zero(z); p.copy_from_slice(z);
+/// dot(r, z)`).
+pub fn fused_init_dir(z: &[f64], mz: f64, r: &[f64], p: &mut [f64]) -> f64 {
+    debug_assert_eq!(z.len(), p.len());
+    debug_assert_eq!(z.len(), r.len());
+    let mut acc = 0.0;
+    for i in 0..z.len() {
+        let zi = z[i] - mz;
+        p[i] = zi;
+        acc += r[i] * zi;
+    }
+    acc
 }
 
 /// Sparse × sparse (Gustavson row-wise SpGEMM): `C = A·B`.
@@ -158,6 +261,88 @@ mod tests {
         let mut x = vec![1.0, 2.0, 3.0, 6.0];
         project_mean_zero(&mut x);
         assert!(x.iter().sum::<f64>().abs() < 1e-12);
+    }
+
+    /// Awkward values (denormals-adjacent magnitudes, negative zeros,
+    /// near-cancellations) for the bit-identity checks below.
+    fn gnarly(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let v = rng.next_normal() * 10f64.powi((i % 7) as i32 - 3);
+                if i % 11 == 0 {
+                    -0.0
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_alpha_update_is_bit_identical() {
+        let (p, ap) = (gnarly(1, 257), gnarly(2, 257));
+        let alpha = 0.731_532_9;
+        for project in [true, false] {
+            let mut x0 = gnarly(3, 257);
+            let mut r0 = gnarly(4, 257);
+            let mut x1 = x0.clone();
+            let mut r1 = r0.clone();
+            // Unfused reference: two axpys, then project/norm.
+            axpy(alpha, &p, &mut x0);
+            axpy(-alpha, &ap, &mut r0);
+            let want = if project {
+                project_mean_zero(&mut r0);
+                nrm2(&r0)
+            } else {
+                nrm2(&r0)
+            };
+            let got = if project {
+                fused_axpy2(alpha, &p, &ap, &mut x1, &mut r1);
+                fused_project_nrm2sq(&mut r1).sqrt()
+            } else {
+                fused_axpy2_nrm2sq(alpha, &p, &ap, &mut x1, &mut r1).sqrt()
+            };
+            assert_eq!(x0, x1, "project={project}");
+            assert_eq!(r0, r1, "project={project}");
+            assert!(want.to_bits() == got.to_bits(), "project={project}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn fused_projection_folding_is_bit_identical() {
+        let r = gnarly(5, 193);
+        let z = gnarly(6, 193);
+        let beta = -0.234_567;
+        for project in [true, false] {
+            // Unfused reference materializes the projected z.
+            let mut zp = z.clone();
+            let mz = if project {
+                let m = mean(&zp);
+                project_mean_zero(&mut zp);
+                m
+            } else {
+                0.0
+            };
+            let want_dot = dot(&r, &zp);
+            assert_eq!(want_dot.to_bits(), fused_project_dot(&r, &z, mz).to_bits());
+
+            let mut p0 = gnarly(7, 193);
+            let mut p1 = p0.clone();
+            for (pi, zi) in p0.iter_mut().zip(zp.iter()) {
+                *pi = zi + beta * *pi;
+            }
+            fused_search_dir(&z, mz, beta, &mut p1);
+            assert_eq!(p0, p1, "project={project}");
+
+            let mut d0 = vec![0.0; r.len()];
+            let mut d1 = vec![f64::NAN; r.len()];
+            d0.copy_from_slice(&zp);
+            let want_rz = dot(&r, &d0);
+            let got_rz = fused_init_dir(&z, mz, &r, &mut d1);
+            assert_eq!(d0, d1, "project={project}");
+            assert_eq!(want_rz.to_bits(), got_rz.to_bits(), "project={project}");
+        }
     }
 
     #[test]

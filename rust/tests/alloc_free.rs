@@ -8,6 +8,13 @@
 //! construction (what used to be a documented exception when every
 //! wide level spawned scoped OS threads is now an asserted guarantee).
 //!
+//! The parallel phase runs the ParAC triangular solves through the
+//! packed sweep executor (`parac::solve::packed`): one pool dispatch
+//! per sweep, resident workers barrier-syncing at level boundaries —
+//! asserted both allocation-free *and* actually dispatching (the sweep
+//! counters must move, so the test cannot silently degrade to the
+//! sequential inline path).
+//!
 //! This lives in its own integration-test binary (one `#[test]`, two
 //! phases) so no concurrently running test can touch the allocation
 //! counter.
@@ -84,10 +91,13 @@ fn solve_into_allocates_nothing_after_warmup() {
     // ---- Phase 2: the pooled parallel session. ----
     // threads(2) row-splits every SpMV (the grid clears the parallel
     // cutoff, so the pool dispatches every iteration) and runs the
-    // ParAC triangular solves level-scheduled. The warm-up solve
-    // creates the global worker pool; after that, dispatch is pure
-    // atomics + futex wakeups — steady state must stay at zero
-    // allocations, exactly like the sequential path.
+    // ParAC triangular solves through the packed sweep executor; the
+    // small level cutoff guarantees the sweeps genuinely dispatch and
+    // barrier rather than falling back to the inline sequential path.
+    // The warm-up solve creates the global worker pool; after that,
+    // dispatch is pure atomics + futex wakeups and a level boundary is
+    // two atomics — steady state must stay at zero allocations,
+    // exactly like the sequential path.
     let lap_wide = generators::grid2d(48, 48, generators::Coeff::Uniform, 1);
     assert!(
         lap_wide.n() >= parac::sparse::csr::PAR_SPMV_CUTOFF,
@@ -96,6 +106,7 @@ fn solve_into_allocates_nothing_after_warmup() {
     let mut pooled = Solver::builder()
         .engine(Engine::Seq)
         .threads(2)
+        .level_cutoff(8)
         .seed(9)
         .tol(1e-8)
         .build(&lap_wide)
@@ -105,18 +116,28 @@ fn solve_into_allocates_nothing_after_warmup() {
 
     let warm = pooled.solve_into(&rhs_wide[0], &mut xw).expect("pool warm-up solve");
     assert!(warm.converged, "pool warm-up must converge (rel={})", warm.rel_residual);
+    assert!(
+        warm.precond_dispatches >= 2,
+        "packed sweeps must really dispatch onto the pool (got {})",
+        warm.precond_dispatches
+    );
 
     let before = allocations();
     for b in rhs_wide.iter().cycle().take(12) {
         let stats = pooled.solve_into(b, &mut xw).expect("pooled steady-state solve");
         assert!(stats.converged);
+        assert_eq!(
+            stats.precond_dispatches,
+            2 * stats.iters as u64,
+            "exactly one pool dispatch per sweep direction per apply"
+        );
     }
     let after = allocations();
     assert_eq!(
         after - before,
         0,
-        "level-scheduled/pooled solve_into allocated {} times across 12 warm \
-         solves — pool dispatch must be allocation-free",
+        "packed-sweep/pooled solve_into allocated {} times across 12 warm \
+         solves — one-dispatch-per-sweep execution must be allocation-free",
         after - before
     );
 }

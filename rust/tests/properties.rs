@@ -212,3 +212,98 @@ fn precond_apply_is_symmetric() {
         Ok(())
     });
 }
+
+/// The packed sweep executor is bit-identical to the sequential
+/// in-place sweeps (`LdlFactor::{forward,backward}_inplace`) and to the
+/// full sequential solve, across every engine, ordering, and thread
+/// count — including a graph whose widest level exceeds the cutoff
+/// (real pool dispatches + in-sweep barriers) and a disconnected graph
+/// (zero-diagonal pivot columns applied pseudo-inversely).
+#[test]
+fn packed_sweeps_bit_identical_to_sequential_reference() {
+    use parac::precond::{LdlPrecond, Preconditioner};
+    use parac::solve::packed::PackedSweeps;
+
+    // Two disconnected chains plus an isolated vertex (61): three
+    // components → three zero pivots, including a fully zero diagonal
+    // column in the input.
+    let mut edges: Vec<(u32, u32, f64)> = (0..60u32).map(|i| (i, i + 1, 1.0)).collect();
+    edges.extend((62..130u32).map(|i| (i, i + 1, 0.5 + (i % 3) as f64)));
+    let disconnected = parac::graph::Laplacian::from_edges(131, &edges, "two-chains");
+
+    // Star with the hub eliminated last (under Natural ordering): one
+    // level of width n − 1 ≫ any cutoff used here.
+    let star_edges: Vec<(u32, u32, f64)> =
+        (0..599u32).map(|i| (i, 599, 1.0 + (i % 4) as f64)).collect();
+    let graphs = [
+        ("random", generators::random_connected(150, 240, 3)),
+        ("wide-star", parac::graph::Laplacian::from_edges(600, &star_edges, "star-hub-last")),
+        ("disconnected", disconnected),
+    ];
+    let engines = [
+        Engine::Seq,
+        Engine::Cpu { threads: 2 },
+        Engine::GpuSim { blocks: 2 },
+    ];
+    let orderings = [Ordering::Natural, Ordering::Amd, Ordering::NnzSort, Ordering::Random];
+
+    for (gname, l) in &graphs {
+        for engine in engines {
+            for ordering in orderings {
+                let f = factorize(l, &opts(11, ordering, engine)).unwrap();
+                // Cutoff 16: the wide graphs really dispatch pooled
+                // sweeps with level-boundary barriers, narrow ones
+                // exercise the worker-0 sequential runs.
+                let packed = PackedSweeps::analyze_with_cutoff(&f, 16);
+                let pre = LdlPrecond::with_level_schedule_cutoff(f.clone(), 4, 16);
+                let n = f.n();
+                let r: Vec<f64> = (0..n).map(|i| ((i * 31) % 17) as f64 - 8.0).collect();
+                let ctx = format!("{gname}/{engine:?}/{ordering:?}");
+
+                // Sweep-level parity in permuted space.
+                let rp = match &f.perm {
+                    Some(p) => parac::ordering::perm::apply_vec(p, &r),
+                    None => r.clone(),
+                };
+                let mut scratch = vec![0.0; n];
+                for threads in [1usize, 2, 4] {
+                    let mut want = rp.clone();
+                    let mut got = rp.clone();
+                    f.forward_inplace(&mut want);
+                    packed.forward(&mut got, &mut scratch, threads);
+                    assert_eq!(want, got, "{ctx} t={threads}: forward sweep deviates");
+                    f.backward_inplace(&mut want);
+                    packed.backward(&mut got, &mut scratch, threads);
+                    assert_eq!(want, got, "{ctx} t={threads}: backward sweep deviates");
+                }
+
+                // Full apply parity (composed scatters + fused D⁻¹).
+                let want = f.solve(&r);
+                let mut z = vec![f64::NAN; n];
+                pre.apply_into(&r, &mut z);
+                assert_eq!(z, want, "{ctx}: packed apply deviates from solve");
+            }
+        }
+    }
+
+    // The wide-star really crossed the default cutoff too: its widest
+    // level beats LEVEL_PAR_CUTOFF, so the default-configured executor
+    // dispatches exactly once per sweep there.
+    let f = factorize(&graphs[1].1, &opts(11, Ordering::Natural, Engine::Seq)).unwrap();
+    let packed = PackedSweeps::analyze(&f);
+    let (levels, _) = parac::etree::trisolve_levels(&f.g);
+    let widest = parac::etree::level_histogram(&levels).into_iter().max().unwrap();
+    assert!(
+        widest >= parac::solve::trisolve::LEVEL_PAR_CUTOFF,
+        "star's widest level ({widest}) must clear the default cutoff"
+    );
+    let r: Vec<f64> = (0..f.n()).map(|i| (i % 5) as f64 - 2.0).collect();
+    let want = f.solve(&r);
+    let n = f.n();
+    let (mut z, mut a, mut b) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+    let before = packed.counters();
+    packed.apply_into(&r, &mut z, 4, &mut a, &mut b);
+    assert_eq!(z, want);
+    let delta = packed.counters().since(before);
+    assert_eq!(delta.dispatches, 2, "one dispatch per sweep at the default cutoff");
+}
