@@ -1,13 +1,30 @@
 //! Figure 3 bench — CPU factor-time scaling across threads × orderings
-//! over the full matrix suite.
+//! over the full matrix suite — plus the symbolic/numeric split: how
+//! much of a build is one-time analysis (ordering, e-tree, packed
+//! layout, workspace sizing) vs the per-reweighting numeric sweep, and
+//! the resulting rebuild-vs-refactorize speedup of
+//! `SymbolicFactor::refactorize_into` on a frozen pattern.
+//!
+//! Emits `BENCH_factor_scaling.json` through the hand-rolled JSON
+//! writer so successive PRs can diff the trajectory mechanically; CI
+//! smoke-runs this binary at `PARAC_SCALE=tiny` and uploads the
+//! artifact.
 //!
 //! NOTE (testbed): this environment exposes **one** CPU core, so
-//! wall-clock speedup is structurally flat; the dependency-level
-//! parallelism that drives the paper's Fig. 3 speedups is quantified by
-//! the fig4 bench's critical-path column (n / critical-path = available
-//! parallelism). See EXPERIMENTS.md.
+//! wall-clock speedup across threads is structurally flat; the
+//! dependency-level parallelism that drives the paper's Fig. 3 speedups
+//! is quantified by the fig4 bench's critical-path column (n /
+//! critical-path = available parallelism). See EXPERIMENTS.md. The
+//! rebuild/refactorize ratio below is thread-independent: it compares
+//! two runs at the *same* thread count.
 
 mod bench_common;
+
+use parac::coordinator::pipeline::{self, BenchRow};
+use parac::coordinator::report::Table;
+use parac::factor::{Engine, ParacOptions, SymbolicFactor};
+use parac::graph::suite::SUITE;
+use parac::graph::Laplacian;
 
 fn main() {
     let scale = bench_common::bench_scale();
@@ -16,4 +33,85 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+
+    // ---- Symbolic/numeric split + numeric-only refactorization. ----
+    println!(
+        "\n## Symbolic/numeric split: full rebuild vs numeric-only \
+         refactorize  [scale {scale:?}, {threads} threads]\n"
+    );
+    let mut table = Table::new(&[
+        "problem",
+        "n",
+        "nnz(L)",
+        "analyze(ms)",
+        "numeric(ms)",
+        "rebuild(ms)",
+        "refactor(ms)",
+        "speedup",
+    ]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for e in SUITE {
+        let lap = (e.build)(scale);
+        // Same pattern, perturbed weights — the refactorize workload.
+        let reweighted: Vec<(u32, u32, f64)> = lap
+            .edges()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (a, b, w))| (a, b, w * (1.0 + (i % 5) as f64 * 0.25)))
+            .collect();
+        let lap2 = Laplacian::from_edges(lap.n(), &reweighted, e.name);
+        let opts =
+            ParacOptions { engine: Engine::Cpu { threads }, seed: 1, ..Default::default() };
+
+        let ((mut sym, mut f), rebuild_secs) = bench_common::median_time(3, || {
+            let mut sym = SymbolicFactor::analyze(&lap, &opts).expect("analyze");
+            let f = sym.factorize(&lap).expect("factorize");
+            (sym, f)
+        });
+        let analyze_secs = f.stats.symbolic_secs;
+        let numeric_secs = f.stats.numeric_secs;
+        let nnz = f.nnz();
+
+        let (_, refactor_secs) = bench_common::median_time(3, || {
+            sym.refactorize_into(&lap2, &mut f).expect("refactorize")
+        });
+        assert!(f.stats.symbolic_reused, "refactorize must skip the symbolic phase");
+        let speedup = rebuild_secs / refactor_secs.max(1e-12);
+
+        table.row(vec![
+            e.name.into(),
+            lap.n().to_string(),
+            nnz.to_string(),
+            format!("{:.3}", analyze_secs * 1e3),
+            format!("{:.3}", numeric_secs * 1e3),
+            format!("{:.3}", rebuild_secs * 1e3),
+            format!("{:.3}", refactor_secs * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(BenchRow {
+            name: format!("{} n={} threads={threads}", e.name, lap.n()),
+            fields: vec![
+                ("n", lap.n() as f64),
+                ("factor_nnz", nnz as f64),
+                ("threads", threads as f64),
+                ("analyze_secs", analyze_secs),
+                ("numeric_secs", numeric_secs),
+                ("rebuild_secs", rebuild_secs),
+                ("refactorize_secs", refactor_secs),
+                ("speedup", speedup),
+            ],
+        });
+    }
+    print!("{}", table.render());
+    let json_path = std::path::Path::new("BENCH_factor_scaling.json");
+    match pipeline::write_bench_rows_json(json_path, "factor_scaling", &rows) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", json_path.display()),
+    }
+    println!(
+        "(analyze = ordering + e-tree + packed layout + workspace sizing, paid \
+         once per pattern; numeric = the randomized elimination sweep, paid per \
+         reweighting; refactorize reruns only the numeric phase on the frozen \
+         pattern)"
+    );
 }

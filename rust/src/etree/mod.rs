@@ -166,6 +166,78 @@ pub fn bucket_by_level(levels: &[u32], maxl: usize) -> (Vec<u32>, Vec<usize>) {
     (order, ptr)
 }
 
+/// [`bucket_by_level`] on the persistent worker pool: per-part level
+/// histograms over contiguous vertex chunks, an exact per-(part, level)
+/// offset table, then a disjoint parallel scatter. Chunks are ascending
+/// vertex ranges, so within each level the concatenation of the parts'
+/// contributions is globally ascending — the result is **bit-identical**
+/// to the sequential [`bucket_by_level`] for every input. Falls back to
+/// the sequential pass for one part or small inputs.
+pub fn bucket_by_level_par(levels: &[u32], maxl: usize, threads: usize) -> (Vec<u32>, Vec<usize>) {
+    let n = levels.len();
+    let pool = crate::par::global();
+    let parts = threads.min(pool.size()).min(n.max(1));
+    if parts <= 1 || n < 2048 {
+        return bucket_by_level(levels, maxl);
+    }
+
+    // Pass 1: per-part histograms over contiguous chunks.
+    let mut hist = vec![0usize; parts * maxl];
+    {
+        let hist_ptr = crate::par::SendPtr::new(hist.as_mut_ptr());
+        pool.run(parts, |part, parts| {
+            let (lo, hi) = crate::par::chunk_range(n, part, parts);
+            let base = part * maxl;
+            for &l in &levels[lo..hi] {
+                let at = base + (l - 1) as usize;
+                // Disjoint rows of the histogram matrix: safe.
+                unsafe { hist_ptr.write(at, hist_ptr.read(at) + 1) };
+            }
+        });
+    }
+
+    // Exact offsets: ptr[l] = total count below level l;
+    // offset(part, l) = ptr[l] + Σ_{q < part} hist[q][l].
+    let mut ptr = vec![0usize; maxl + 1];
+    for l in 0..maxl {
+        let mut c = 0;
+        for p in 0..parts {
+            c += hist[p * maxl + l];
+        }
+        ptr[l + 1] = ptr[l] + c;
+    }
+    let mut offsets = vec![0usize; parts * maxl];
+    for l in 0..maxl {
+        let mut acc = ptr[l];
+        for p in 0..parts {
+            offsets[p * maxl + l] = acc;
+            acc += hist[p * maxl + l];
+        }
+    }
+
+    // Pass 2: disjoint scatter — each (part, level) owns its own slice.
+    let mut order = vec![0u32; n];
+    {
+        let order_ptr = crate::par::SendPtr::new(order.as_mut_ptr());
+        let off_ptr = crate::par::SendPtr::new(offsets.as_mut_ptr());
+        pool.run(parts, |part, parts| {
+            let (lo, hi) = crate::par::chunk_range(n, part, parts);
+            let base = part * maxl;
+            for v in lo..hi {
+                let l = (levels[v] - 1) as usize;
+                // Each (part, level) pair owns a disjoint slice of
+                // `order` starting at its offset: safe.
+                unsafe {
+                    let slot = off_ptr.read(base + l);
+                    order_ptr.write(slot, v as u32);
+                    off_ptr.write(base + l, slot + 1);
+                }
+            }
+        });
+    }
+    (order, ptr)
+}
+
 /// Histogram of level widths — the parallelism profile (how many columns
 /// can be processed concurrently at each step of a level-scheduled
 /// solve).
@@ -288,6 +360,24 @@ mod tests {
         let mut seen = order.clone();
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bucket_by_level_par_matches_sequential() {
+        // Big enough to take the pooled path (n ≥ 2048), with a skewed
+        // level distribution including empty interior levels.
+        let n = 5000usize;
+        let maxl = 9;
+        let levels: Vec<u32> =
+            (0..n).map(|v| 1 + ((v * v + 3 * v) % 11).min(maxl - 1) as u32).collect();
+        let want = bucket_by_level(&levels, maxl);
+        for threads in [1, 2, 3, 4, 7] {
+            let got = bucket_by_level_par(&levels, maxl, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+        // Tiny input takes the sequential fallback but must agree too.
+        let small = vec![2u32, 1, 2, 1, 3];
+        assert_eq!(bucket_by_level_par(&small, 3, 4), bucket_by_level(&small, 3));
     }
 
     #[test]

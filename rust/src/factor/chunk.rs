@@ -94,6 +94,12 @@ impl Bump {
     pub fn cap(&self) -> usize {
         self.cap
     }
+
+    /// Rewind to empty so the arena can be reused for another run.
+    /// Caller must guarantee no concurrent allocations are in flight.
+    pub fn reset(&self) {
+        self.head.store(0, Ordering::Relaxed);
+    }
 }
 
 /// The fill arena: nodes `(row, val, next)` forming per-vertex
@@ -121,6 +127,14 @@ impl FillArena {
             next: next.into_boxed_slice(),
             bump: Bump::new(cap),
         }
+    }
+
+    /// Reuse the arena for another factorization: every node slot is
+    /// rewritten before it is published, so rewinding the bump counter
+    /// is all it takes (list heads live in the engine workspace and are
+    /// re-set to `NIL` there).
+    pub fn reset(&self) {
+        self.bump.reset();
     }
 
     /// Lock-free push of node `idx` (fields already written) onto the

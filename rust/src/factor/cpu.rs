@@ -26,15 +26,20 @@ use super::depend::DepCounts;
 use super::queue::JobQueue;
 use super::sample;
 use super::stats::{FactorStats, StatsCollector};
+use super::symbolic::{EngineScratch, FactorBufs};
 use super::FactorError;
 use crate::sparse::{Csc, Csr};
 use crate::util::{default_threads, Timer};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
-/// Shared engine state (borrowed by every worker).
-struct Shared<'a> {
-    a: &'a Csr,
+/// Reusable working state of the CPU engine: the shared arenas, queue,
+/// dependency counters, and per-worker elimination scratch. Everything
+/// is interior-mutable, so a factorization borrows the workspace
+/// immutably and `reset` rewinds it for the next run without touching
+/// the allocator.
+pub struct CpuWorkspace {
     fills: FillArena,
     heads: Box<[AtomicUsize]>,
     out_rows: SharedBuf<u32>,
@@ -45,6 +50,72 @@ struct Shared<'a> {
     dp: DepCounts,
     queue: JobQueue,
     stats: StatsCollector,
+    /// Per-part elimination scratch (part index ← the pool dispatch);
+    /// uncontended mutexes, locked once per worker run.
+    scratch: Box<[Mutex<EngineScratch>]>,
+    threads: usize,
+    cap_fill: usize,
+}
+
+impl CpuWorkspace {
+    /// Workspace sized for `a` with `threads` workers (0 = auto) and the
+    /// given fill-arena capacity multiplier.
+    pub fn new(a: &Csr, threads: usize, arena_factor: f64) -> CpuWorkspace {
+        let n = a.nrows;
+        let pool = crate::par::global();
+        let threads = if threads == 0 { default_threads() } else { threads }
+            .max(1)
+            .min(n.max(1))
+            .min(pool.size());
+        let cap_fill = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
+        // Output: every merged column entry; bounded by original lower
+        // triangle + every fill node.
+        let cap_out = a.nnz() / 2 + cap_fill + n;
+        let (dp, _ready) = DepCounts::init(a);
+        let mut heads = Vec::with_capacity(n);
+        heads.resize_with(n, || AtomicUsize::new(NIL));
+        let mut scratch = Vec::with_capacity(threads);
+        scratch.resize_with(threads, || Mutex::new(EngineScratch::new()));
+        CpuWorkspace {
+            fills: FillArena::new(cap_fill),
+            heads: heads.into_boxed_slice(),
+            out_rows: SharedBuf::new(cap_out),
+            out_vals: SharedBuf::new(cap_out),
+            out_bump: Bump::new(cap_out),
+            col_meta: SharedBuf::new(n),
+            diag: SharedBuf::new(n),
+            dp,
+            queue: JobQueue::new(n),
+            stats: StatsCollector::default(),
+            scratch: scratch.into_boxed_slice(),
+            threads,
+            cap_fill,
+        }
+    }
+
+    /// Worker count the workspace was resolved to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Rewind every shared structure and re-derive the dependency
+    /// counters + initial ready set from `a` — allocation-free.
+    fn reset(&self, a: &Csr) {
+        self.queue.reset();
+        self.dp.reinit(a, |v| self.queue.push(v));
+        for h in self.heads.iter() {
+            h.store(NIL, Ordering::Relaxed);
+        }
+        self.fills.reset();
+        self.out_bump.reset();
+        self.stats.reset();
+    }
+}
+
+/// Shared engine state (borrowed by every worker).
+struct Shared<'a> {
+    a: &'a Csr,
+    ws: &'a CpuWorkspace,
     seed: u64,
     sort_by_weight: bool,
     timing: bool,
@@ -59,66 +130,50 @@ pub fn factorize_csr(
     arena_factor: f64,
     stage_timing: bool,
 ) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
-    let timer = Timer::start();
-    let n = a.nrows;
-    let pool = crate::par::global();
-    let threads = if threads == 0 { default_threads() } else { threads }
-        .max(1)
-        .min(n.max(1))
-        .min(pool.size());
-    let cap_fill = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
-    // Output: every merged column entry; bounded by original lower
-    // triangle + every fill node.
-    let cap_out = a.nnz() / 2 + cap_fill + n;
-
-    let (dp, ready) = DepCounts::init(a);
-    let queue = JobQueue::new(n);
-    for v in ready {
-        queue.push(v);
-    }
-    let mut heads = Vec::with_capacity(n);
-    heads.resize_with(n, || AtomicUsize::new(NIL));
-    let shared = Shared {
-        a,
-        fills: FillArena::new(cap_fill),
-        heads: heads.into_boxed_slice(),
-        out_rows: SharedBuf::new(cap_out),
-        out_vals: SharedBuf::new(cap_out),
-        out_bump: Bump::new(cap_out),
-        col_meta: SharedBuf::new(n),
-        diag: SharedBuf::new(n),
-        dp,
-        queue,
-        stats: StatsCollector::default(),
-        seed,
-        sort_by_weight,
-        timing: stage_timing,
-    };
-
-    pool.run(threads, |_part, _parts| worker(&shared));
-
-    if shared.queue.is_poisoned() {
-        return Err(FactorError::ArenaFull { capacity: cap_fill });
-    }
-    let (g, diag) = assemble(&shared, n);
-    let stats = shared.stats.snapshot(threads, timer.secs());
+    let ws = CpuWorkspace::new(a, threads, arena_factor);
+    let mut out = FactorBufs::new();
+    let stats = factorize_into(a, seed, sort_by_weight, stage_timing, &ws, &mut out)?;
+    let (g, diag) = out.take_factor(a.nrows);
     Ok((g, diag, stats))
 }
 
+/// [`factorize_csr`] through a reusable workspace into caller-owned
+/// output buffers — the numeric phase of the symbolic/numeric split.
+/// Allocation-free when the workspace and `out` capacities already fit.
+pub fn factorize_into(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+    stage_timing: bool,
+    ws: &CpuWorkspace,
+    out: &mut FactorBufs,
+) -> Result<FactorStats, FactorError> {
+    let timer = Timer::start();
+    let n = a.nrows;
+    ws.reset(a);
+    let shared = Shared { a, ws, seed, sort_by_weight, timing: stage_timing };
+
+    crate::par::global().run(ws.threads, |part, _parts| worker(&shared, part));
+
+    if ws.queue.is_poisoned() {
+        return Err(FactorError::ArenaFull { capacity: ws.cap_fill });
+    }
+    assemble_into(&shared, n, out);
+    Ok(ws.stats.snapshot(ws.threads, timer.secs()))
+}
+
 /// Worker loop: claim → spin-wait → eliminate.
-fn worker(sh: &Shared<'_>) {
-    let mut raw: Vec<(u32, f64)> = Vec::new();
-    let mut merged: Vec<(u32, f64)> = Vec::new();
-    let mut mult: Vec<u32> = Vec::new();
-    let mut bysort: Vec<(u32, f64)> = Vec::new();
-    let mut cum: Vec<f64> = Vec::new();
+fn worker(sh: &Shared<'_>, part: usize) {
+    let mut scratch =
+        sh.ws.scratch[part].lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let EngineScratch { raw, merged, mult, bysort, cum } = &mut *scratch;
     let mut gather_ns = 0u64;
     let mut sample_ns = 0u64;
     let mut update_ns = 0u64;
     let mut fills_count = 0u64;
 
-    while let Some(pos) = sh.queue.claim() {
-        let Ok(k) = sh.queue.wait(pos) else { break };
+    while let Some(pos) = sh.ws.queue.claim() {
+        let Ok(k) = sh.ws.queue.wait(pos) else { break };
         let k = k as usize;
         let t0 = sh.timing.then(Instant::now);
 
@@ -129,43 +184,43 @@ fn worker(sh: &Shared<'_>) {
                 raw.push((c, -v));
             }
         }
-        let mut node = sh.heads[k].load(Ordering::Acquire);
+        let mut node = sh.ws.heads[k].load(Ordering::Acquire);
         while node != NIL {
             // SAFETY: node was fully written before being published to
             // this list, and all pushes happen-before this elimination
             // (dependency counters + queue release/acquire).
             unsafe {
-                raw.push((sh.fills.rows.read(node), sh.fills.vals.read(node)));
+                raw.push((sh.ws.fills.rows.read(node), sh.ws.fills.vals.read(node)));
             }
-            node = sh.fills.next[node].load(Ordering::Relaxed);
+            node = sh.ws.fills.next[node].load(Ordering::Relaxed);
         }
         if raw.is_empty() {
             unsafe {
-                sh.diag.write(k, 0.0);
-                sh.col_meta.write(k, (0, 0));
+                sh.ws.diag.write(k, 0.0);
+                sh.ws.col_meta.write(k, (0, 0));
             }
             if let Some(t0) = t0 {
                 gather_ns += t0.elapsed().as_nanos() as u64;
             }
             continue;
         }
-        sample::merge_neighbors(&mut raw, &mut merged, &mut mult);
+        sample::merge_neighbors(raw, merged, mult);
         let lkk: f64 = merged.iter().map(|x| x.1).sum();
         // Output column (merged is row-sorted).
-        let Some(start) = sh.out_bump.alloc(merged.len()) else {
-            sh.queue.poison();
+        let Some(start) = sh.ws.out_bump.alloc(merged.len()) else {
+            sh.ws.queue.poison();
             break;
         };
         for (t, &(r, w)) in merged.iter().enumerate() {
             // SAFETY: [start, start+len) was just reserved by this thread.
             unsafe {
-                sh.out_rows.write(start + t, r);
-                sh.out_vals.write(start + t, -w / lkk);
+                sh.ws.out_rows.write(start + t, r);
+                sh.ws.out_vals.write(start + t, -w / lkk);
             }
         }
         unsafe {
-            sh.diag.write(k, lkk);
-            sh.col_meta.write(k, (start, merged.len() as u32));
+            sh.ws.diag.write(k, lkk);
+            sh.ws.col_meta.write(k, (start, merged.len() as u32));
         }
         let t1 = sh.timing.then(Instant::now);
         if let (Some(a), Some(b)) = (t0, t1) {
@@ -174,17 +229,17 @@ fn worker(sh: &Shared<'_>) {
 
         // ---- Stage 2: weight sort + sampling. ----
         bysort.clear();
-        bysort.extend_from_slice(&merged);
+        bysort.extend_from_slice(merged);
         if sh.sort_by_weight {
-            sample::sort_by_weight(&mut bysort);
+            sample::sort_by_weight(bysort);
         }
         let mut rng = sample::pivot_rng(sh.seed, k as u32);
         let nsamples = bysort.len().saturating_sub(1);
         let base = if nsamples > 0 {
-            match sh.fills.bump.alloc(nsamples) {
+            match sh.ws.fills.bump.alloc(nsamples) {
                 Some(b) => b,
                 None => {
-                    sh.queue.poison();
+                    sh.ws.queue.poison();
                     break;
                 }
             }
@@ -192,19 +247,19 @@ fn worker(sh: &Shared<'_>) {
             0
         };
         let mut emitted = 0usize;
-        sample::sample_clique(&bysort, &mut cum, &mut rng, |i, j, w| {
+        sample::sample_clique(bysort, cum, &mut rng, |i, j, w| {
             let (lo, hi) = if i < j { (i, j) } else { (j, i) };
             let idx = base + emitted;
             emitted += 1;
             // SAFETY: idx is inside this thread's reservation.
             unsafe {
-                sh.fills.rows.write(idx, hi);
-                sh.fills.vals.write(idx, w);
+                sh.ws.fills.rows.write(idx, hi);
+                sh.ws.fills.vals.write(idx, w);
             }
             // Publish: new smaller-neighbor dependency first, then the
             // node itself.
-            sh.dp.inc(hi);
-            sh.fills.push(&sh.heads[lo as usize], idx);
+            sh.ws.dp.inc(hi);
+            sh.ws.fills.push(&sh.ws.heads[lo as usize], idx);
         });
         fills_count += emitted as u64;
         let t2 = sh.timing.then(Instant::now);
@@ -214,8 +269,8 @@ fn worker(sh: &Shared<'_>) {
 
         // ---- Stage 3: cut this vertex's edges, schedule ready ones. ----
         for (&(v, _), &m) in merged.iter().zip(mult.iter()) {
-            if sh.dp.dec(v, m) {
-                sh.queue.push(v);
+            if sh.ws.dp.dec(v, m) {
+                sh.ws.queue.push(v);
             }
         }
         if let Some(t2) = t2 {
@@ -223,45 +278,41 @@ fn worker(sh: &Shared<'_>) {
         }
     }
 
-    let st = &sh.stats;
+    let st = &sh.ws.stats;
     st.fills.fetch_add(fills_count, Ordering::Relaxed);
     st.stage_gather_ns.fetch_add(gather_ns, Ordering::Relaxed);
     st.stage_sample_ns.fetch_add(sample_ns, Ordering::Relaxed);
     st.stage_update_ns.fetch_add(update_ns, Ordering::Relaxed);
 }
 
-/// Collect the per-column slices into a CSC factor (single-threaded,
-/// O(nnz)).
-fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
-    let mut colptr = Vec::with_capacity(n + 1);
-    colptr.push(0usize);
+/// Collect the per-column slices into the caller's factor buffers
+/// (single-threaded, O(nnz); allocation-free within `out` capacity).
+fn assemble_into(sh: &Shared<'_>, n: usize, out: &mut FactorBufs) {
+    out.clear();
+    out.colptr.push(0usize);
     let mut total = 0usize;
     for k in 0..n {
         // SAFETY: all workers joined; engine writes happen-before.
-        let (_, len) = unsafe { sh.col_meta.read(k) };
+        let (_, len) = unsafe { sh.ws.col_meta.read(k) };
         total += len as usize;
-        colptr.push(total);
+        out.colptr.push(total);
     }
-    let mut rowidx = Vec::with_capacity(total);
-    let mut data = Vec::with_capacity(total);
-    let mut diag = Vec::with_capacity(n);
     for k in 0..n {
-        let (start, len) = unsafe { sh.col_meta.read(k) };
+        let (start, len) = unsafe { sh.ws.col_meta.read(k) };
         for t in 0..len as usize {
             unsafe {
-                rowidx.push(sh.out_rows.read(start + t));
-                data.push(sh.out_vals.read(start + t));
+                out.rowidx.push(sh.ws.out_rows.read(start + t));
+                out.data.push(sh.ws.out_vals.read(start + t));
             }
         }
-        diag.push(unsafe { sh.diag.read(k) });
+        out.diag.push(unsafe { sh.ws.diag.read(k) });
     }
-    sh.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
+    sh.ws.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
     // `arena_used` is the *fill* arena occupancy; the bump pointer
-    // never rewinds, so its watermark is the peak node count — the
-    // same semantic the gpusim engine reports from its hash workspace.
-    sh.stats.arena_used.store(sh.fills.bump.used(), Ordering::Relaxed);
-    let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
-    (g, diag)
+    // never rewinds within a run, so its watermark is the peak node
+    // count — the same semantic the gpusim engine reports from its
+    // hash workspace.
+    sh.ws.stats.arena_used.store(sh.ws.fills.bump.used(), Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -43,6 +43,27 @@ impl DepCounts {
         (DepCounts { dp: dp.into_boxed_slice() }, ready)
     }
 
+    /// Re-derive the counters from `a` in place (allocation-free
+    /// [`DepCounts::init`] for refactorization on a frozen pattern).
+    /// Calls `on_ready` for each initially-ready vertex in ascending
+    /// order. `a` must have the same dimension the counters were built
+    /// with.
+    pub fn reinit(&self, a: &Csr, mut on_ready: impl FnMut(u32)) {
+        debug_assert_eq!(a.nrows, self.dp.len());
+        for i in 0..a.nrows {
+            let count = a
+                .row_indices(i)
+                .iter()
+                .zip(a.row_data(i))
+                .filter(|(&c, &v)| (c as usize) < i && v < 0.0)
+                .count() as u32;
+            if count == 0 {
+                on_ready(i as u32);
+            }
+            self.dp[i].store(count, Ordering::Relaxed);
+        }
+    }
+
     /// A new fill edge makes `v` depend on one more smaller neighbor.
     #[inline]
     pub fn inc(&self, v: u32) {

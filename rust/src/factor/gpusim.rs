@@ -23,17 +23,21 @@ use super::depend::DepCounts;
 use super::queue::JobQueue;
 use super::sample;
 use super::stats::{FactorStats, StatsCollector};
+use super::symbolic::{EngineScratch, FactorBufs};
 use super::FactorError;
 use crate::gpusim::hashmap::{HashKind, Workspace};
 use crate::gpusim::primitives;
 use crate::sparse::{Csc, Csr};
 use crate::util::{default_threads, Timer};
 use std::sync::atomic::Ordering;
+use std::sync::Mutex;
 use std::time::Instant;
 
-/// Shared engine state.
-struct Shared<'a> {
-    a: &'a Csr,
+/// Reusable working state of the gpusim engine: the slot-state hash
+/// workspace `W`, output arenas, queue, dependency counters, and
+/// per-block elimination scratch. Interior-mutable like
+/// [`super::cpu::CpuWorkspace`]; `reset` rewinds it allocation-free.
+pub struct GpuWorkspace {
     w: Workspace,
     out_rows: SharedBuf<u32>,
     out_vals: SharedBuf<f64>,
@@ -43,6 +47,63 @@ struct Shared<'a> {
     dp: DepCounts,
     queue: JobQueue,
     stats: StatsCollector,
+    scratch: Box<[Mutex<EngineScratch>]>,
+    blocks: usize,
+    cap_w: usize,
+}
+
+impl GpuWorkspace {
+    /// Workspace sized for `a` with `blocks` simulated blocks (0 = auto),
+    /// the given capacity multiplier, and hash strategy (the hash bases
+    /// depend on `seed` only, so the workspace survives reweightings).
+    pub fn new(a: &Csr, blocks: usize, arena_factor: f64, hash: HashKind, seed: u64) -> Self {
+        let n = a.nrows;
+        let pool = crate::par::global();
+        let blocks = if blocks == 0 { default_threads() } else { blocks }
+            .max(1)
+            .min(n.max(1))
+            .min(pool.size());
+        let cap_w = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
+        let cap_out = a.nnz() / 2 + cap_w + n;
+        let (dp, _ready) = DepCounts::init(a);
+        let mut scratch = Vec::with_capacity(blocks);
+        scratch.resize_with(blocks, || Mutex::new(EngineScratch::new()));
+        GpuWorkspace {
+            w: Workspace::new(cap_w, n, hash, seed),
+            out_rows: SharedBuf::new(cap_out),
+            out_vals: SharedBuf::new(cap_out),
+            out_bump: Bump::new(cap_out),
+            col_meta: SharedBuf::new(n),
+            diag: SharedBuf::new(n),
+            dp,
+            queue: JobQueue::new(n),
+            stats: StatsCollector::default(),
+            scratch: scratch.into_boxed_slice(),
+            blocks,
+            cap_w,
+        }
+    }
+
+    /// Block count the workspace was resolved to.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Rewind every shared structure and re-derive the dependency
+    /// counters + initial ready set from `a` — allocation-free.
+    fn reset(&self, a: &Csr) {
+        self.queue.reset();
+        self.dp.reinit(a, |v| self.queue.push(v));
+        self.w.reset();
+        self.out_bump.reset();
+        self.stats.reset();
+    }
+}
+
+/// Shared engine state.
+struct Shared<'a> {
+    a: &'a Csr,
+    ws: &'a GpuWorkspace,
     seed: u64,
     sort_by_weight: bool,
     timing: bool,
@@ -79,63 +140,53 @@ pub fn factorize_csr_hash(
     hash: HashKind,
     stage_timing: bool,
 ) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
-    let timer = Timer::start();
-    let n = a.nrows;
-    let pool = crate::par::global();
-    let blocks = if blocks == 0 { default_threads() } else { blocks }
-        .max(1)
-        .min(n.max(1))
-        .min(pool.size());
-    let cap_w = ((arena_factor * (a.nnz() + n) as f64) as usize).max(64);
-    let cap_out = a.nnz() / 2 + cap_w + n;
-
-    let (dp, ready) = DepCounts::init(a);
-    let queue = JobQueue::new(n);
-    for v in ready {
-        queue.push(v);
-    }
-    let shared = Shared {
-        a,
-        w: Workspace::new(cap_w, n, hash, seed),
-        out_rows: SharedBuf::new(cap_out),
-        out_vals: SharedBuf::new(cap_out),
-        out_bump: Bump::new(cap_out),
-        col_meta: SharedBuf::new(n),
-        diag: SharedBuf::new(n),
-        dp,
-        queue,
-        stats: StatsCollector::default(),
-        seed,
-        sort_by_weight,
-        timing: stage_timing,
-    };
-
-    pool.run(blocks, |_part, _parts| block_loop(&shared));
-
-    if shared.queue.is_poisoned() {
-        return Err(FactorError::WorkspaceFull { capacity: cap_w });
-    }
-    let (g, diag) = assemble(&shared, n);
-    let mut stats = shared.stats.snapshot(blocks, timer.secs());
-    stats.max_probe = shared.w.max_probe.load(Ordering::Relaxed);
-    stats.probe_steps = shared.w.probe_steps.load(Ordering::Relaxed);
+    let ws = GpuWorkspace::new(a, blocks, arena_factor, hash, seed);
+    let mut out = FactorBufs::new();
+    let stats = factorize_into(a, seed, sort_by_weight, stage_timing, &ws, &mut out)?;
+    let (g, diag) = out.take_factor(a.nrows);
     Ok((g, diag, stats))
 }
 
+/// [`factorize_csr`] through a reusable workspace into caller-owned
+/// output buffers — the numeric phase of the symbolic/numeric split.
+/// Allocation-free when the workspace and `out` capacities already fit.
+pub fn factorize_into(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+    stage_timing: bool,
+    ws: &GpuWorkspace,
+    out: &mut FactorBufs,
+) -> Result<FactorStats, FactorError> {
+    let timer = Timer::start();
+    let n = a.nrows;
+    ws.reset(a);
+    let shared = Shared { a, ws, seed, sort_by_weight, timing: stage_timing };
+
+    crate::par::global().run(ws.blocks, |part, _parts| block_loop(&shared, part));
+
+    if ws.queue.is_poisoned() {
+        return Err(FactorError::WorkspaceFull { capacity: ws.cap_w });
+    }
+    assemble_into(&shared, n, out);
+    let mut stats = ws.stats.snapshot(ws.blocks, timer.secs());
+    stats.max_probe = ws.w.max_probe.load(Ordering::Relaxed);
+    stats.probe_steps = ws.w.probe_steps.load(Ordering::Relaxed);
+    Ok(stats)
+}
+
 /// Persistent-block loop.
-fn block_loop(sh: &Shared<'_>) {
-    let mut raw: Vec<(u32, f64)> = Vec::new();
-    let mut merged: Vec<(u32, f64)> = Vec::new();
-    let mut mult: Vec<u32> = Vec::new();
-    let mut bysort: Vec<(u32, f64)> = Vec::new();
-    let mut cum: Vec<f64> = Vec::new();
+fn block_loop(sh: &Shared<'_>, part: usize) {
+    let mut scratch =
+        sh.ws.scratch[part].lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let EngineScratch { raw, merged, mult, bysort, cum } = &mut *scratch;
     let mut gather_ns = 0u64;
     let mut sample_ns = 0u64;
     let mut update_ns = 0u64;
     let mut fills_count = 0u64;
 
-    while let Some(pos) = sh.queue.claim() {
-        let Ok(k) = sh.queue.wait(pos) else { break };
+    while let Some(pos) = sh.ws.queue.claim() {
+        let Ok(k) = sh.ws.queue.wait(pos) else { break };
         let k = k as usize;
         let t0 = sh.timing.then(Instant::now);
 
@@ -146,11 +197,11 @@ fn block_loop(sh: &Shared<'_>) {
                 raw.push((c, -v));
             }
         }
-        sh.w.gather(k as u32, &mut raw);
+        sh.ws.w.gather(k as u32, raw);
         if raw.is_empty() {
             unsafe {
-                sh.diag.write(k, 0.0);
-                sh.col_meta.write(k, (0, 0));
+                sh.ws.diag.write(k, 0.0);
+                sh.ws.col_meta.write(k, (0, 0));
             }
             if let Some(t0) = t0 {
                 gather_ns += t0.elapsed().as_nanos() as u64;
@@ -160,23 +211,23 @@ fn block_loop(sh: &Shared<'_>) {
         // Block-level merge: bitonic sort by (row, val) then the
         // flag/prefix-sum compaction (paper §5.3.2). (row, val) keying
         // keeps float sums schedule-independent.
-        primitives::bitonic_sort_by(&mut raw, |&(r, v)| (r, v));
-        primitives::merge_sorted_by_flags(&raw, &mut merged, &mut mult);
+        primitives::bitonic_sort_by(raw, |&(r, v)| (r, v));
+        primitives::merge_sorted_by_flags(raw, merged, mult);
         let lkk: f64 = merged.iter().map(|x| x.1).sum();
-        let Some(start) = sh.out_bump.alloc(merged.len()) else {
-            sh.queue.poison();
+        let Some(start) = sh.ws.out_bump.alloc(merged.len()) else {
+            sh.ws.queue.poison();
             break;
         };
         for (t, &(r, w)) in merged.iter().enumerate() {
             // SAFETY: reserved region.
             unsafe {
-                sh.out_rows.write(start + t, r);
-                sh.out_vals.write(start + t, -w / lkk);
+                sh.ws.out_rows.write(start + t, r);
+                sh.ws.out_vals.write(start + t, -w / lkk);
             }
         }
         unsafe {
-            sh.diag.write(k, lkk);
-            sh.col_meta.write(k, (start, merged.len() as u32));
+            sh.ws.diag.write(k, lkk);
+            sh.ws.col_meta.write(k, (start, merged.len() as u32));
         }
         let t1 = sh.timing.then(Instant::now);
         if let (Some(a), Some(b)) = (t0, t1) {
@@ -185,28 +236,28 @@ fn block_loop(sh: &Shared<'_>) {
 
         // ---- Stage 2: weight sort (bitonic) + parallel-style sampling. ----
         bysort.clear();
-        bysort.extend_from_slice(&merged);
+        bysort.extend_from_slice(merged);
         if sh.sort_by_weight {
-            primitives::bitonic_sort_by(&mut bysort, |&(r, w)| (w, r));
+            primitives::bitonic_sort_by(bysort, |&(r, w)| (w, r));
         }
         let mut rng = sample::pivot_rng(sh.seed, k as u32);
         let mut overflow = false;
-        sample::sample_clique(&bysort, &mut cum, &mut rng, |i, j, w| {
+        sample::sample_clique(bysort, cum, &mut rng, |i, j, w| {
             if overflow {
                 return;
             }
             let (lo, hi) = if i < j { (i, j) } else { (j, i) };
             // Right-looking: write straight into the target's workspace
             // region (Algorithm 4 line 22), then the dependency.
-            sh.dp.inc(hi);
-            if sh.w.insert(lo, hi, w).is_err() {
+            sh.ws.dp.inc(hi);
+            if sh.ws.w.insert(lo, hi, w).is_err() {
                 overflow = true;
                 return;
             }
             fills_count += 1;
         });
         if overflow {
-            sh.queue.poison();
+            sh.ws.queue.poison();
             break;
         }
         let t2 = sh.timing.then(Instant::now);
@@ -216,8 +267,8 @@ fn block_loop(sh: &Shared<'_>) {
 
         // ---- Stage 3: cut edges, schedule ready vertices. ----
         for (&(v, _), &m) in merged.iter().zip(mult.iter()) {
-            if sh.dp.dec(v, m) {
-                sh.queue.push(v);
+            if sh.ws.dp.dec(v, m) {
+                sh.ws.queue.push(v);
             }
         }
         if let Some(t2) = t2 {
@@ -225,42 +276,39 @@ fn block_loop(sh: &Shared<'_>) {
         }
     }
 
-    let st = &sh.stats;
+    let st = &sh.ws.stats;
     st.fills.fetch_add(fills_count, Ordering::Relaxed);
     st.stage_gather_ns.fetch_add(gather_ns, Ordering::Relaxed);
     st.stage_sample_ns.fetch_add(sample_ns, Ordering::Relaxed);
     st.stage_update_ns.fetch_add(update_ns, Ordering::Relaxed);
 }
 
-/// Collect per-column slices into CSC (same as the CPU engine).
-fn assemble(sh: &Shared<'_>, n: usize) -> (Csc, Vec<f64>) {
-    let mut colptr = Vec::with_capacity(n + 1);
-    colptr.push(0usize);
+/// Collect per-column slices into the caller's factor buffers (same as
+/// the CPU engine; allocation-free within `out` capacity).
+fn assemble_into(sh: &Shared<'_>, n: usize, out: &mut FactorBufs) {
+    out.clear();
+    out.colptr.push(0usize);
     let mut total = 0usize;
     for k in 0..n {
-        let (_, len) = unsafe { sh.col_meta.read(k) };
+        let (_, len) = unsafe { sh.ws.col_meta.read(k) };
         total += len as usize;
-        colptr.push(total);
+        out.colptr.push(total);
     }
-    let mut rowidx = Vec::with_capacity(total);
-    let mut data = Vec::with_capacity(total);
-    let mut diag = Vec::with_capacity(n);
     for k in 0..n {
-        let (start, len) = unsafe { sh.col_meta.read(k) };
+        let (start, len) = unsafe { sh.ws.col_meta.read(k) };
         for t in 0..len as usize {
             unsafe {
-                rowidx.push(sh.out_rows.read(start + t));
-                data.push(sh.out_vals.read(start + t));
+                out.rowidx.push(sh.ws.out_rows.read(start + t));
+                out.data.push(sh.ws.out_vals.read(start + t));
             }
         }
-        diag.push(unsafe { sh.diag.read(k) });
+        out.diag.push(unsafe { sh.ws.diag.read(k) });
     }
-    sh.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
+    sh.ws.stats.out_entries.fetch_add(total as u64, Ordering::Relaxed);
     // `arena_used` is the *fill* workspace occupancy (peak occupied
     // slots of `W`), matching the CPU engine's fill-arena watermark —
     // not the output arena, whose size `out_entries` already reports.
-    sh.stats.arena_used.store(sh.w.peak_occupancy(), Ordering::Relaxed);
-    (Csc { nrows: n, ncols: n, colptr, rowidx, data }, diag)
+    sh.ws.stats.arena_used.store(sh.ws.w.peak_occupancy(), Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -23,9 +23,11 @@ pub mod queue;
 pub mod sample;
 pub mod seq;
 pub mod stats;
+pub mod symbolic;
 
 pub use ldl::LdlFactor;
 pub use stats::FactorStats;
+pub use symbolic::SymbolicFactor;
 
 use crate::graph::{LapKind, Laplacian};
 use crate::ordering::Ordering;
@@ -159,62 +161,7 @@ pub fn factorize_pinned(
     opts: &ParacOptions,
     pin_last: Option<u32>,
 ) -> Result<LdlFactor, FactorError> {
-    let n = lap.n();
-    if n == 0 {
-        return Err(FactorError::BadInput("empty matrix".into()));
-    }
-    let mut p = opts.ordering.compute(lap, opts.seed);
-    if let Some(pin) = pin_last {
-        // Swap labels so `pin` gets label n-1.
-        let cur = p[pin as usize];
-        if cur != (n - 1) as u32 {
-            let holder = p.iter().position(|&x| x == (n - 1) as u32).unwrap();
-            p[holder] = cur;
-            p[pin as usize] = (n - 1) as u32;
-        }
-    }
-    let permuted = lap.matrix.permute_sym(&p);
-    let (g, diag, stats) = run_engine(&permuted, opts)?;
-    Ok(LdlFactor { g, diag, perm: Some(p), stats })
-}
-
-/// Dispatch to the selected engine with arena-overflow retry.
-fn run_engine(
-    a: &Csr,
-    opts: &ParacOptions,
-) -> Result<(crate::sparse::Csc, Vec<f64>, FactorStats), FactorError> {
-    let mut factor = opts.arena_factor;
-    // Double until either success or a generous hard ceiling (a dense
-    // 2^9×(nnz+n) arena means the input is far outside AC's regime).
-    while factor <= 512.0 {
-        let r = match opts.engine {
-            Engine::Seq => seq::factorize_csr(a, opts.seed, opts.sort_by_weight),
-            Engine::Cpu { threads } => cpu::factorize_csr(
-                a,
-                opts.seed,
-                opts.sort_by_weight,
-                threads,
-                factor,
-                opts.stage_timing,
-            ),
-            Engine::GpuSim { blocks } => gpusim::factorize_csr(
-                a,
-                opts.seed,
-                opts.sort_by_weight,
-                blocks,
-                factor,
-                opts.stage_timing,
-            ),
-        };
-        match r {
-            Err(FactorError::ArenaFull { .. }) | Err(FactorError::WorkspaceFull { .. }) => {
-                factor *= 2.0;
-                continue;
-            }
-            other => return other,
-        }
-    }
-    Err(FactorError::ArenaFull { capacity: (factor * (a.nnz() + a.nrows) as f64) as usize })
+    SymbolicFactor::analyze_pinned(lap, opts, pin_last)?.factorize(lap)
 }
 
 /// Factor an SPD SDD matrix `A` (e.g. a Dirichlet Poisson operator) by

@@ -100,6 +100,17 @@ impl JobQueue {
     pub fn pushed(&self) -> usize {
         self.tail.load(Ordering::Relaxed).min(self.slots.len())
     }
+
+    /// Rewind to a fresh, empty queue for another run. Caller must
+    /// guarantee no worker is still claiming or waiting.
+    pub fn reset(&self) {
+        for slot in self.slots.iter() {
+            slot.store(EMPTY, Ordering::Relaxed);
+        }
+        self.tail.store(0, Ordering::Relaxed);
+        self.cursor.store(0, Ordering::Relaxed);
+        self.poisoned.store(false, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]

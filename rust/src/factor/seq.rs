@@ -9,9 +9,27 @@
 
 use super::sample;
 use super::stats::FactorStats;
+use super::symbolic::{EngineScratch, FactorBufs};
 use super::FactorError;
 use crate::sparse::{Csc, Csr};
 use crate::util::Timer;
+
+/// Reusable working state of the sequential engine: the per-vertex fill
+/// lists plus the elimination scratch. Capacities grow on first use and
+/// persist, so refactorizing on an unchanged sparsity pattern touches
+/// the allocator not at all.
+pub struct SeqWorkspace {
+    /// Fill lists: `fills[v]` = sampled edges `(u, w)` with `v < u`.
+    fills: Vec<Vec<(u32, f64)>>,
+    scratch: EngineScratch,
+}
+
+impl SeqWorkspace {
+    /// Workspace for an `n`-vertex factorization.
+    pub fn new(n: usize) -> SeqWorkspace {
+        SeqWorkspace { fills: vec![Vec::new(); n], scratch: EngineScratch::new() }
+    }
+}
 
 /// Factor a (permuted) Laplacian CSR matrix sequentially.
 /// Returns `(G strictly-lower CSC, D, stats)`.
@@ -20,21 +38,30 @@ pub fn factorize_csr(
     seed: u64,
     sort_by_weight: bool,
 ) -> Result<(Csc, Vec<f64>, FactorStats), FactorError> {
+    let mut ws = SeqWorkspace::new(a.nrows);
+    let mut out = FactorBufs::new();
+    let stats = factorize_into(a, seed, sort_by_weight, &mut ws, &mut out)?;
+    let (g, diag) = out.take_factor(a.nrows);
+    Ok((g, diag, stats))
+}
+
+/// [`factorize_csr`] writing into caller-owned output buffers through a
+/// reusable workspace — the numeric phase of the symbolic/numeric split.
+/// Allocation-free when `ws`/`out` capacities already fit the run.
+pub fn factorize_into(
+    a: &Csr,
+    seed: u64,
+    sort_by_weight: bool,
+    ws: &mut SeqWorkspace,
+    out: &mut FactorBufs,
+) -> Result<FactorStats, FactorError> {
     let timer = Timer::start();
     let n = a.nrows;
-    // Fill lists: fills[v] = sampled edges (u, w) with v < u.
-    let mut fills: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
-    let mut diag = vec![0.0f64; n];
-    let mut colptr = Vec::with_capacity(n + 1);
-    let mut rowidx: Vec<u32> = Vec::new();
-    let mut data: Vec<f64> = Vec::new();
-    colptr.push(0usize);
+    debug_assert_eq!(ws.fills.len(), n, "workspace sized for a different matrix");
+    out.clear();
+    out.colptr.push(0usize);
 
-    let mut raw: Vec<(u32, f64)> = Vec::new();
-    let mut merged: Vec<(u32, f64)> = Vec::new();
-    let mut mult: Vec<u32> = Vec::new();
-    let mut bysort: Vec<(u32, f64)> = Vec::new();
-    let mut cum: Vec<f64> = Vec::new();
+    let EngineScratch { raw, merged, mult, bysort, cum } = &mut ws.scratch;
     let mut n_fills = 0u64;
 
     for k in 0..n {
@@ -45,47 +72,44 @@ pub fn factorize_csr(
                 raw.push((c, -v));
             }
         }
-        raw.append(&mut fills[k]);
-        fills[k].shrink_to_fit();
+        raw.append(&mut ws.fills[k]);
         if raw.is_empty() {
-            diag[k] = 0.0;
-            colptr.push(rowidx.len());
+            out.diag.push(0.0);
+            out.colptr.push(out.rowidx.len());
             continue;
         }
-        sample::merge_neighbors(&mut raw, &mut merged, &mut mult);
+        sample::merge_neighbors(raw, merged, mult);
         let lkk: f64 = merged.iter().map(|x| x.1).sum();
-        diag[k] = lkk;
+        out.diag.push(lkk);
         // G(:,k) = L(:,k)/ℓ_kk — off-diagonals are −w/ℓ_kk, rows sorted.
-        for &(r, w) in &merged {
-            rowidx.push(r);
-            data.push(-w / lkk);
+        for &(r, w) in merged.iter() {
+            out.rowidx.push(r);
+            out.data.push(-w / lkk);
         }
-        colptr.push(rowidx.len());
+        out.colptr.push(out.rowidx.len());
 
         // ---- Stage 2: order by weight, sample the spanning structure. ----
         bysort.clear();
-        bysort.extend_from_slice(&merged);
+        bysort.extend_from_slice(merged);
         if sort_by_weight {
-            sample::sort_by_weight(&mut bysort);
+            sample::sort_by_weight(bysort);
         }
         let mut rng = sample::pivot_rng(seed, k as u32);
         // ---- Stage 3: push fills to the smaller endpoint's list. ----
-        sample::sample_clique(&bysort, &mut cum, &mut rng, |i, j, w| {
+        sample::sample_clique(bysort, cum, &mut rng, |i, j, w| {
             let (lo, hi) = if i < j { (i, j) } else { (j, i) };
-            fills[lo as usize].push((hi, w));
+            ws.fills[lo as usize].push((hi, w));
             n_fills += 1;
         });
     }
 
-    let g = Csc { nrows: n, ncols: n, colptr, rowidx, data };
-    let stats = FactorStats {
+    Ok(FactorStats {
         fills: n_fills,
-        out_entries: g.nnz() as u64,
+        out_entries: out.rowidx.len() as u64,
         workers: 1,
         wall_secs: timer.secs(),
         ..FactorStats::default()
-    };
-    Ok((g, diag, stats))
+    })
 }
 
 #[cfg(test)]

@@ -35,6 +35,16 @@ pub struct FactorStats {
     /// Wall-clock seconds of the engine run (excludes ordering +
     /// permutation).
     pub wall_secs: f64,
+    /// Wall-clock seconds of the symbolic phase (ordering, permutation,
+    /// workspace sizing). Zero when the run reused a frozen symbolic
+    /// factorization (`Solver::refactorize`).
+    pub symbolic_secs: f64,
+    /// Wall-clock seconds of the numeric phase (the randomized
+    /// elimination sweep itself, including value refresh).
+    pub numeric_secs: f64,
+    /// `true` when this run skipped the symbolic phase entirely and
+    /// reused a frozen pattern (ordering, etree, workspaces).
+    pub symbolic_reused: bool,
 }
 
 impl FactorStats {
@@ -81,7 +91,8 @@ impl StatsCollector {
         self.max_probe.fetch_max(p, Relaxed);
     }
 
-    /// Finalize into a snapshot.
+    /// Finalize into a snapshot. The symbolic/numeric split is filled
+    /// in by the caller (the engines only see the numeric phase).
     pub fn snapshot(&self, workers: usize, wall_secs: f64) -> FactorStats {
         FactorStats {
             fills: self.fills.load(Relaxed),
@@ -94,7 +105,22 @@ impl StatsCollector {
             stage_update_ns: self.stage_update_ns.load(Relaxed),
             workers,
             wall_secs,
+            symbolic_secs: 0.0,
+            numeric_secs: wall_secs,
+            symbolic_reused: false,
         }
+    }
+
+    /// Zero every counter so the collector can be reused for another run.
+    pub fn reset(&self) {
+        self.fills.store(0, Relaxed);
+        self.out_entries.store(0, Relaxed);
+        self.arena_used.store(0, Relaxed);
+        self.max_probe.store(0, Relaxed);
+        self.probe_steps.store(0, Relaxed);
+        self.stage_gather_ns.store(0, Relaxed);
+        self.stage_sample_ns.store(0, Relaxed);
+        self.stage_update_ns.store(0, Relaxed);
     }
 }
 

@@ -1,0 +1,478 @@
+//! The symbolic/numeric split of the randomized factorization.
+//!
+//! RCHOL-style reuse: ordering, permutation layout, and every engine
+//! workspace depend only on the input **sparsity pattern** (and the
+//! seed), while the randomized elimination sweep depends on the edge
+//! weights. [`SymbolicFactor`] freezes the former — computed once by
+//! [`SymbolicFactor::analyze`] — so re-solving the same graph with new
+//! weights ([`SymbolicFactor::refactorize_into`], surfaced as
+//! `Solver::refactorize`) re-runs only the numeric phase: a value
+//! gather through the recorded permutation map plus one engine sweep
+//! into recycled buffers, with zero heap allocations in steady state.
+//!
+//! Note the asymmetry with classical Cholesky: the randomized factor's
+//! *output* structure is still weight-dependent (the sampling CDF uses
+//! weights), so downstream consumers compare the refreshed pattern
+//! against the previous one before reusing their own layouts — see
+//! `LdlPrecond::refactorize_numeric`.
+
+use super::ldl::LdlFactor;
+use super::stats::FactorStats;
+use super::{cpu, gpusim, seq, Engine, FactorError, ParacOptions};
+use crate::gpusim::hashmap::HashKind;
+use crate::graph::Laplacian;
+use crate::sparse::{Csc, Csr};
+use crate::util::Timer;
+
+/// Recyclable factor output buffers: a strictly-lower CSC plus the
+/// diagonal, stored as plain `Vec`s so the numeric phase can refill
+/// them with `clear` + `push` (allocation-free within capacity) and
+/// swap them with a live [`LdlFactor`]'s storage.
+pub struct FactorBufs {
+    /// Column pointer (`n + 1` entries once filled).
+    pub colptr: Vec<usize>,
+    /// Row indices, sorted within each column.
+    pub rowidx: Vec<u32>,
+    /// Values, parallel to `rowidx`.
+    pub data: Vec<f64>,
+    /// The diagonal `D` (`n` entries once filled).
+    pub diag: Vec<f64>,
+}
+
+impl FactorBufs {
+    /// Empty buffers (capacities grow on first use).
+    pub fn new() -> FactorBufs {
+        FactorBufs { colptr: Vec::new(), rowidx: Vec::new(), data: Vec::new(), diag: Vec::new() }
+    }
+
+    /// Clear contents, keeping capacity.
+    pub fn clear(&mut self) {
+        self.colptr.clear();
+        self.rowidx.clear();
+        self.data.clear();
+        self.diag.clear();
+    }
+
+    /// Reserve so a factor of the given shape fits without reallocating.
+    fn reserve(&mut self, cols: usize, nnz: usize, n: usize) {
+        self.colptr.reserve(cols);
+        self.rowidx.reserve(nnz);
+        self.data.reserve(nnz);
+        self.diag.reserve(n);
+    }
+
+    /// Move the contents out as an `n × n` factor, leaving the buffers
+    /// empty (capacity not preserved — used by the one-shot wrappers).
+    pub fn take_factor(&mut self, n: usize) -> (Csc, Vec<f64>) {
+        let g = Csc {
+            nrows: n,
+            ncols: n,
+            colptr: std::mem::take(&mut self.colptr),
+            rowidx: std::mem::take(&mut self.rowidx),
+            data: std::mem::take(&mut self.data),
+        };
+        (g, std::mem::take(&mut self.diag))
+    }
+}
+
+impl Default for FactorBufs {
+    fn default() -> Self {
+        FactorBufs::new()
+    }
+}
+
+/// Per-worker elimination scratch shared by all three engines: the
+/// gather/merge/sort vectors of one elimination. Persisting these across
+/// factorizations is what makes the numeric phase allocation-free.
+pub struct EngineScratch {
+    /// Gathered live neighbors (pre-merge).
+    pub raw: Vec<(u32, f64)>,
+    /// Merged neighbors, row-sorted.
+    pub merged: Vec<(u32, f64)>,
+    /// Multiplicities parallel to `merged`.
+    pub mult: Vec<u32>,
+    /// Weight-sorted copy for sampling.
+    pub bysort: Vec<(u32, f64)>,
+    /// Inclusive prefix sums for the sampling CDF.
+    pub cum: Vec<f64>,
+}
+
+impl EngineScratch {
+    /// Empty scratch (capacities grow on first use).
+    pub fn new() -> EngineScratch {
+        EngineScratch {
+            raw: Vec::new(),
+            merged: Vec::new(),
+            mult: Vec::new(),
+            bysort: Vec::new(),
+            cum: Vec::new(),
+        }
+    }
+}
+
+impl Default for EngineScratch {
+    fn default() -> Self {
+        EngineScratch::new()
+    }
+}
+
+/// The frozen engine workspace of one symbolic factorization.
+enum EngineWs {
+    Seq(seq::SeqWorkspace),
+    Cpu(cpu::CpuWorkspace),
+    Gpu(gpusim::GpuWorkspace),
+}
+
+impl EngineWs {
+    fn new(a: &Csr, opts: &ParacOptions, arena_factor: f64) -> EngineWs {
+        match opts.engine {
+            Engine::Seq => EngineWs::Seq(seq::SeqWorkspace::new(a.nrows)),
+            Engine::Cpu { threads } => {
+                EngineWs::Cpu(cpu::CpuWorkspace::new(a, threads, arena_factor))
+            }
+            Engine::GpuSim { blocks } => EngineWs::Gpu(gpusim::GpuWorkspace::new(
+                a,
+                blocks,
+                arena_factor,
+                HashKind::RandomPerm,
+                opts.seed,
+            )),
+        }
+    }
+}
+
+/// The frozen symbolic phase of a factorization: ordering, permuted
+/// pattern, value-gather map, and the engine workspace — everything
+/// that depends only on the sparsity pattern and the options.
+///
+/// Lifecycle: [`analyze`](SymbolicFactor::analyze) once, then
+/// [`factorize`](SymbolicFactor::factorize) for the first factor and
+/// [`refactorize_into`](SymbolicFactor::refactorize_into) for every
+/// reweighting. Numeric runs are bit-identical to a from-scratch
+/// [`super::factorize`] with the same options (they share this code
+/// path), and steady-state refactorization performs no heap
+/// allocations when the reweighting preserves the factor structure.
+pub struct SymbolicFactor {
+    opts: ParacOptions,
+    n: usize,
+    perm: Vec<u32>,
+    /// `P L Pᵀ` — values refreshed in place on refactorize.
+    permuted: Csr,
+    /// `permuted.data[i] == source.data[val_map[i]]`.
+    val_map: Vec<usize>,
+    /// Source pattern copy for the exact-reuse check.
+    src_indptr: Vec<usize>,
+    src_indices: Vec<u32>,
+    /// Current arena multiplier (persists overflow-retry growth, so a
+    /// refactorization that once outgrew the arena never retries again).
+    arena_factor: f64,
+    ws: EngineWs,
+    /// Double buffer the numeric phase writes into; swapped with the
+    /// live factor's storage on refactorize.
+    spare: FactorBufs,
+    symbolic_secs: f64,
+}
+
+impl SymbolicFactor {
+    /// Run the symbolic phase for `lap` under `opts`: compute the
+    /// ordering, the permuted pattern with its value-gather map, and
+    /// size the engine workspace. No numeric work is done.
+    pub fn analyze(lap: &Laplacian, opts: &ParacOptions) -> Result<SymbolicFactor, FactorError> {
+        SymbolicFactor::analyze_pinned(lap, opts, None)
+    }
+
+    /// [`SymbolicFactor::analyze`] with an optional vertex pinned to the
+    /// **last** elimination position (SDD ground handling).
+    pub fn analyze_pinned(
+        lap: &Laplacian,
+        opts: &ParacOptions,
+        pin_last: Option<u32>,
+    ) -> Result<SymbolicFactor, FactorError> {
+        let n = lap.n();
+        if n == 0 {
+            return Err(FactorError::BadInput("empty matrix".into()));
+        }
+        let timer = Timer::start();
+        let mut p = opts.ordering.compute(lap, opts.seed);
+        if let Some(pin) = pin_last {
+            // Swap labels so `pin` gets label n-1.
+            let cur = p[pin as usize];
+            if cur != (n - 1) as u32 {
+                let holder = p.iter().position(|&x| x == (n - 1) as u32).unwrap();
+                p[holder] = cur;
+                p[pin as usize] = (n - 1) as u32;
+            }
+        }
+        let (permuted, val_map) = lap.matrix.permute_sym_map(&p);
+        let arena_factor = opts.arena_factor;
+        let ws = EngineWs::new(&permuted, opts, arena_factor);
+        Ok(SymbolicFactor {
+            opts: opts.clone(),
+            n,
+            perm: p,
+            src_indptr: lap.matrix.indptr.clone(),
+            src_indices: lap.matrix.indices.clone(),
+            permuted,
+            val_map,
+            arena_factor,
+            ws,
+            spare: FactorBufs::new(),
+            symbolic_secs: timer.secs(),
+        })
+    }
+
+    /// Dimension of the analyzed operator.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The frozen elimination ordering (`perm[old] = new`).
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+
+    /// Wall-clock seconds the symbolic phase took.
+    pub fn symbolic_secs(&self) -> f64 {
+        self.symbolic_secs
+    }
+
+    /// Options the analysis was performed under.
+    pub fn options(&self) -> &ParacOptions {
+        &self.opts
+    }
+
+    /// First numeric run: factor `lap` (which must share the analyzed
+    /// pattern) into a fresh [`LdlFactor`]. The spare buffers are
+    /// re-reserved at the produced capacities afterwards, so even the
+    /// *first* [`SymbolicFactor::refactorize_into`] is allocation-free
+    /// when the reweighting preserves the factor structure.
+    pub fn factorize(&mut self, lap: &Laplacian) -> Result<LdlFactor, FactorError> {
+        self.check_pattern(lap)?;
+        let timer = Timer::start();
+        self.refresh_values(lap);
+        let mut stats = self.run_numeric()?;
+        stats.symbolic_secs = self.symbolic_secs;
+        stats.numeric_secs = timer.secs();
+        let (g, diag) = self.spare.take_factor(self.n);
+        self.spare.reserve(g.colptr.len(), g.rowidx.len(), diag.len());
+        Ok(LdlFactor { g, diag, perm: Some(self.perm.clone()), stats })
+    }
+
+    /// Re-run only the numeric phase on new weights and swap the result
+    /// into `f` (which must come from this symbolic factorization).
+    /// Returns `true` when the refreshed factor has the same sparsity
+    /// structure as the one it replaced — the signal downstream layouts
+    /// (packed sweeps) can be refilled instead of re-analyzed. The
+    /// ordering, permutation map, and workspaces are all reused; no
+    /// heap allocation happens unless the new weights grow the factor
+    /// past previous capacities.
+    pub fn refactorize_into(
+        &mut self,
+        lap: &Laplacian,
+        f: &mut LdlFactor,
+    ) -> Result<bool, FactorError> {
+        self.check_pattern(lap)?;
+        let timer = Timer::start();
+        self.refresh_values(lap);
+        let mut stats = self.run_numeric()?;
+        stats.symbolic_secs = 0.0;
+        stats.symbolic_reused = true;
+        stats.numeric_secs = timer.secs();
+        let preserved =
+            self.spare.colptr == f.g.colptr && self.spare.rowidx == f.g.rowidx;
+        std::mem::swap(&mut f.g.colptr, &mut self.spare.colptr);
+        std::mem::swap(&mut f.g.rowidx, &mut self.spare.rowidx);
+        std::mem::swap(&mut f.g.data, &mut self.spare.data);
+        std::mem::swap(&mut f.diag, &mut self.spare.diag);
+        f.stats = stats;
+        Ok(preserved)
+    }
+
+    /// Reject operators whose sparsity pattern differs from the one the
+    /// analysis froze (values are free to change, structure is not).
+    fn check_pattern(&self, lap: &Laplacian) -> Result<(), FactorError> {
+        if lap.n() != self.n
+            || lap.matrix.indptr != self.src_indptr
+            || lap.matrix.indices != self.src_indices
+        {
+            return Err(FactorError::BadInput(
+                "sparsity pattern differs from the symbolic analysis; \
+                 run a full build for structural changes"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Gather the (possibly new) values into the permuted matrix —
+    /// the entire per-reweighting cost of the permutation step.
+    fn refresh_values(&mut self, lap: &Laplacian) {
+        for (dst, &src) in self.permuted.data.iter_mut().zip(&self.val_map) {
+            *dst = lap.matrix.data[src];
+        }
+    }
+
+    /// One engine sweep into the spare buffers, with the same
+    /// arena-overflow retry policy as the one-shot path (the grown
+    /// multiplier then persists for future runs).
+    fn run_numeric(&mut self) -> Result<FactorStats, FactorError> {
+        let o = &self.opts;
+        loop {
+            let r = match &mut self.ws {
+                EngineWs::Seq(ws) => seq::factorize_into(
+                    &self.permuted,
+                    o.seed,
+                    o.sort_by_weight,
+                    ws,
+                    &mut self.spare,
+                ),
+                EngineWs::Cpu(ws) => cpu::factorize_into(
+                    &self.permuted,
+                    o.seed,
+                    o.sort_by_weight,
+                    o.stage_timing,
+                    ws,
+                    &mut self.spare,
+                ),
+                EngineWs::Gpu(ws) => gpusim::factorize_into(
+                    &self.permuted,
+                    o.seed,
+                    o.sort_by_weight,
+                    o.stage_timing,
+                    ws,
+                    &mut self.spare,
+                ),
+            };
+            match r {
+                Err(FactorError::ArenaFull { .. }) | Err(FactorError::WorkspaceFull { .. }) => {
+                    // Double until a generous hard ceiling (a dense
+                    // 2^9×(nnz+n) arena means the input is far outside
+                    // AC's regime).
+                    let next = self.arena_factor * 2.0;
+                    if next > 512.0 {
+                        let cap =
+                            (next * (self.permuted.nnz() + self.n) as f64) as usize;
+                        return Err(FactorError::ArenaFull { capacity: cap });
+                    }
+                    self.arena_factor = next;
+                    self.ws = EngineWs::new(&self.permuted, o, next);
+                    continue;
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::{factorize, Engine, ParacOptions};
+    use crate::graph::generators;
+    use crate::ordering::Ordering;
+
+    fn opts(engine: Engine) -> ParacOptions {
+        ParacOptions { engine, ordering: Ordering::NnzSort, seed: 17, ..Default::default() }
+    }
+
+    fn reweight(lap: &Laplacian, scale: impl Fn(usize) -> f64) -> Laplacian {
+        let edges: Vec<(u32, u32, f64)> = lap
+            .edges()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (a, b, w))| (a, b, w * scale(i)))
+            .collect();
+        Laplacian::from_edges(lap.n(), &edges, "reweighted")
+    }
+
+    #[test]
+    fn two_phase_build_matches_one_shot() {
+        let lap = generators::random_connected(120, 200, 5);
+        for engine in [Engine::Seq, Engine::Cpu { threads: 2 }, Engine::GpuSim { blocks: 2 }] {
+            let o = opts(engine);
+            let one = factorize(&lap, &o).unwrap();
+            let mut sym = SymbolicFactor::analyze(&lap, &o).unwrap();
+            let two = sym.factorize(&lap).unwrap();
+            assert_eq!(one.g, two.g, "{engine:?}");
+            assert_eq!(one.diag, two.diag);
+            assert_eq!(one.perm, two.perm);
+            assert!(two.stats.symbolic_secs > 0.0);
+            assert!(!two.stats.symbolic_reused);
+        }
+    }
+
+    #[test]
+    fn refactorize_same_weights_is_bit_identical() {
+        let lap = generators::grid2d(16, 16, generators::Coeff::Uniform, 3);
+        let o = opts(Engine::Cpu { threads: 2 });
+        let mut sym = SymbolicFactor::analyze(&lap, &o).unwrap();
+        let mut f = sym.factorize(&lap).unwrap();
+        let g0 = f.g.clone();
+        let d0 = f.diag.clone();
+        let preserved = sym.refactorize_into(&lap, &mut f).unwrap();
+        assert!(preserved, "identical weights must preserve the structure");
+        assert_eq!(f.g, g0);
+        assert_eq!(f.diag, d0);
+        assert!(f.stats.symbolic_reused);
+        assert_eq!(f.stats.symbolic_secs, 0.0);
+    }
+
+    #[test]
+    fn refactorize_new_weights_matches_fresh_build() {
+        let lap = generators::random_connected(90, 140, 8);
+        let lap2 = reweight(&lap, |i| 1.0 + (i % 7) as f64 * 0.35);
+        for engine in [Engine::Seq, Engine::Cpu { threads: 2 }, Engine::GpuSim { blocks: 2 }] {
+            let o = opts(engine);
+            let mut sym = SymbolicFactor::analyze(&lap, &o).unwrap();
+            let mut f = sym.factorize(&lap).unwrap();
+            sym.refactorize_into(&lap2, &mut f).unwrap();
+            let fresh = factorize(&lap2, &o).unwrap();
+            assert_eq!(f.g, fresh.g, "{engine:?}");
+            assert_eq!(f.diag, fresh.diag);
+        }
+    }
+
+    #[test]
+    fn pattern_change_is_rejected() {
+        let lap = generators::random_connected(40, 60, 1);
+        let other = generators::random_connected(40, 70, 2);
+        let o = opts(Engine::Seq);
+        let mut sym = SymbolicFactor::analyze(&lap, &o).unwrap();
+        let mut f = sym.factorize(&lap).unwrap();
+        assert!(sym.refactorize_into(&other, &mut f).is_err());
+    }
+
+    #[test]
+    fn uniform_scaling_preserves_structure_exactly() {
+        // ×2 is an exact power of two: every CDF comparison scales
+        // exactly, so sampling makes identical choices and the factor
+        // structure (and G values) are bitwise unchanged, diag doubled.
+        let lap = generators::grid2d(14, 14, generators::Coeff::Uniform, 2);
+        let lap2 = reweight(&lap, |_| 2.0);
+        let o = opts(Engine::Seq);
+        let mut sym = SymbolicFactor::analyze(&lap, &o).unwrap();
+        let mut f = sym.factorize(&lap).unwrap();
+        let g0 = f.g.clone();
+        let d0 = f.diag.clone();
+        let preserved = sym.refactorize_into(&lap2, &mut f).unwrap();
+        assert!(preserved);
+        assert_eq!(f.g, g0, "G is scale-invariant");
+        for (a, b) in f.diag.iter().zip(&d0) {
+            assert_eq!(*a, 2.0 * b);
+        }
+    }
+
+    #[test]
+    fn arena_retry_persists_across_refactorizations() {
+        let lap = generators::complete(40);
+        let mut o = opts(Engine::Cpu { threads: 2 });
+        o.arena_factor = 0.05; // force at least one overflow-retry
+        let mut sym = SymbolicFactor::analyze(&lap, &o).unwrap();
+        let mut f = sym.factorize(&lap).unwrap();
+        assert!(sym.arena_factor > 0.05, "retry must have grown the arena");
+        let grown = sym.arena_factor;
+        sym.refactorize_into(&lap, &mut f).unwrap();
+        assert_eq!(sym.arena_factor, grown, "no re-growth on the second run");
+        f.validate().unwrap();
+    }
+}

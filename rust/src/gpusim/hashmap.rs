@@ -170,6 +170,22 @@ impl Workspace {
         self.live.fetch_sub(found as usize, Ordering::Relaxed);
     }
 
+    /// Reuse the workspace for another factorization: clear every slot
+    /// state and counter. The hash bases are seed-derived only, so they
+    /// survive reuse. Caller must guarantee no concurrent access.
+    pub fn reset(&self) {
+        for st in self.state.iter() {
+            st.store(FREE, Ordering::Relaxed);
+        }
+        for fc in self.fill_count.iter() {
+            fc.store(0, Ordering::Relaxed);
+        }
+        self.probe_steps.store(0, Ordering::Relaxed);
+        self.max_probe.store(0, Ordering::Relaxed);
+        self.live.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+
     /// Current number of pending fills for `v`.
     pub fn pending(&self, v: u32) -> u32 {
         self.fill_count[v as usize].load(Ordering::Relaxed)

@@ -61,6 +61,16 @@
 //! let b3 = pcg::random_rhs(&lap, 3);
 //! let mut x = vec![0.0; lap.n()];
 //! assert!(solver.solve_into(&b3, &mut x).unwrap().converged);
+//!
+//! // New edge weights on the same sparsity pattern? `refactorize`
+//! // reruns only the numeric phase on the frozen symbolic analysis
+//! // (ordering, elimination tree, level schedules, workspaces) — no
+//! // re-analysis, no allocation, bit-identical to a fresh `build`
+//! // with the same seed.
+//! let heavy = generators::grid2d(12, 12, Coeff::HighContrast(10.0), 42);
+//! solver.refactorize(&heavy).expect("same pattern");
+//! assert!(solver.factor_stats().unwrap().symbolic_reused);
+//! assert!(solver.solve_into(&b3, &mut x).unwrap().converged);
 //! ```
 //!
 //! The lower-level pieces remain public: [`factor::factorize`] produces

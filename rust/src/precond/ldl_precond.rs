@@ -34,6 +34,9 @@ pub struct LdlPrecond {
     factor: LdlFactor,
     packed: Option<PackedSweeps>,
     threads: usize,
+    /// Level-width cutoff the packed analysis ran with — kept so a
+    /// structure-changing refactorization can re-analyze identically.
+    cutoff: usize,
     scratch: Mutex<Scratch>,
 }
 
@@ -44,7 +47,13 @@ impl LdlPrecond {
             a: vec![0.0; if factor.perm.is_some() { factor.n() } else { 0 }],
             b: Vec::new(),
         };
-        LdlPrecond { factor, packed: None, threads: 1, scratch: Mutex::new(scratch) }
+        LdlPrecond {
+            factor,
+            packed: None,
+            threads: 1,
+            cutoff: crate::solve::packed::default_cutoff(),
+            scratch: Mutex::new(scratch),
+        }
     }
 
     /// Level-scheduled parallel solves with `threads` workers and the
@@ -58,15 +67,16 @@ impl LdlPrecond {
     /// [`LdlPrecond::with_level_schedule`] with an explicit level-width
     /// cutoff (the [`crate::solver::SolverBuilder::level_cutoff`]
     /// knob): levels narrower than `cutoff` run sequentially on the
-    /// resident participant 0 instead of being split.
+    /// resident participant 0 instead of being split. The analysis
+    /// itself runs pooled with the same `threads` budget.
     pub fn with_level_schedule_cutoff(
         factor: LdlFactor,
         threads: usize,
         cutoff: usize,
     ) -> LdlPrecond {
-        let packed = PackedSweeps::analyze_with_cutoff(&factor, cutoff);
+        let packed = PackedSweeps::analyze_with_opts(&factor, cutoff, threads);
         let scratch = Scratch { a: vec![0.0; factor.n()], b: vec![0.0; factor.n()] };
-        LdlPrecond { factor, packed: Some(packed), threads, scratch: Mutex::new(scratch) }
+        LdlPrecond { factor, packed: Some(packed), threads, cutoff, scratch: Mutex::new(scratch) }
     }
 
     /// Access the wrapped factor.
@@ -77,6 +87,29 @@ impl LdlPrecond {
     /// Critical path of the solve DAG (None if sequential mode).
     pub fn critical_path(&self) -> Option<usize> {
         self.packed.as_ref().map(|p| p.critical_path)
+    }
+
+    /// Swap a renumbered factor in under the preconditioner: `rebuild`
+    /// mutates the wrapped factor in place (typically
+    /// [`crate::factor::SymbolicFactor::refactorize_into`]) and returns
+    /// whether the factor's sparsity structure was preserved. If so,
+    /// the packed executor is [refilled](PackedSweeps::refill) in place
+    /// — no allocation, schedules and counters untouched; otherwise the
+    /// packed analysis is redone at the original cutoff and thread
+    /// budget. Returns the closure's verdict.
+    pub fn refactorize_numeric<E>(
+        &mut self,
+        rebuild: impl FnOnce(&mut LdlFactor) -> Result<bool, E>,
+    ) -> Result<bool, E> {
+        let preserved = rebuild(&mut self.factor)?;
+        if let Some(packed) = &mut self.packed {
+            if preserved {
+                packed.refill(&self.factor);
+            } else {
+                *packed = PackedSweeps::analyze_with_opts(&self.factor, self.cutoff, self.threads);
+            }
+        }
+        Ok(preserved)
     }
 }
 
@@ -104,6 +137,14 @@ impl Preconditioner for LdlPrecond {
 
     fn sweep_counters(&self) -> Option<SweepCounters> {
         self.packed.as_ref().map(|p| p.counters())
+    }
+
+    fn as_ldl(&self) -> Option<&LdlPrecond> {
+        Some(self)
+    }
+
+    fn as_ldl_mut(&mut self) -> Option<&mut LdlPrecond> {
+        Some(self)
     }
 }
 

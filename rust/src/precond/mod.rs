@@ -70,6 +70,18 @@ pub trait Preconditioner: Sync {
     fn sweep_counters(&self) -> Option<crate::solve::packed::SweepCounters> {
         None
     }
+
+    /// Downcast to the ParAC factor preconditioner, for callers that
+    /// hold a `dyn Preconditioner` and need factor-specific operations
+    /// (stats, refactorization). `None` for everything else.
+    fn as_ldl(&self) -> Option<&LdlPrecond> {
+        None
+    }
+
+    /// Mutable variant of [`Preconditioner::as_ldl`].
+    fn as_ldl_mut(&mut self) -> Option<&mut LdlPrecond> {
+        None
+    }
 }
 
 /// No preconditioning (plain CG).
@@ -97,6 +109,31 @@ impl JacobiPrecond {
             .into_iter()
             .map(|d| if d > 0.0 { 1.0 / d } else { 1.0 })
             .collect();
+        JacobiPrecond { inv_diag }
+    }
+
+    /// [`JacobiPrecond::new`] with the diagonal extraction chunked over
+    /// the persistent worker pool. The map is element-wise, so the
+    /// result is bit-identical to the sequential constructor; small
+    /// matrices and single-thread requests take the sequential path.
+    pub fn new_par(a: &Csr, threads: usize) -> JacobiPrecond {
+        let n = a.nrows.min(a.ncols);
+        let pool = crate::par::global();
+        let parts = threads.max(1).min(pool.size()).min(n.max(1));
+        if parts <= 1 || n < crate::sparse::csr::PAR_SPMV_CUTOFF {
+            return JacobiPrecond::new(a);
+        }
+        let mut inv_diag = vec![0.0f64; n];
+        let out = crate::par::SendPtr::new(inv_diag.as_mut_ptr());
+        pool.run(parts, |part, parts| {
+            let (lo, hi) = crate::par::chunk_range(n, part, parts);
+            for i in lo..hi {
+                let d = a.get(i, i);
+                let v = if d > 0.0 { 1.0 / d } else { 1.0 };
+                // Disjoint row chunks: safe.
+                unsafe { out.write(i, v) };
+            }
+        });
         JacobiPrecond { inv_diag }
     }
 }
@@ -135,6 +172,17 @@ mod tests {
         let p = JacobiPrecond::new(&l.matrix);
         let z = p.apply(&[2.0, 2.0, 4.0, 3.0]);
         assert_eq!(z, vec![2.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn jacobi_pooled_extraction_matches_sequential() {
+        // 2304 rows ≥ PAR_SPMV_CUTOFF: takes the pooled path.
+        let l = generators::grid2d(48, 48, generators::Coeff::HighContrast(2.0), 1);
+        let seq = JacobiPrecond::new(&l.matrix);
+        for threads in [1usize, 2, 4] {
+            let par = JacobiPrecond::new_par(&l.matrix, threads);
+            assert_eq!(seq.inv_diag, par.inv_diag, "threads={threads}");
+        }
     }
 
     #[test]

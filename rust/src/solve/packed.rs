@@ -88,11 +88,15 @@ pub fn default_cutoff() -> usize {
 }
 
 /// Parse an optional `PARAC_LEVEL_CUTOFF` value (pure helper behind
-/// [`default_cutoff`]; non-numeric and zero values fall back).
+/// [`default_cutoff`]; non-numeric values fall back). `0` means "fully
+/// parallel" — it clamps to a cutoff of 1, so every non-empty level
+/// clears the threshold and the whole sweep runs on the pool.
 fn cutoff_from(var: Option<&str>) -> usize {
-    var.and_then(|s| s.parse::<usize>().ok())
-        .filter(|&c| c >= 1)
-        .unwrap_or(LEVEL_PAR_CUTOFF)
+    match var.and_then(|s| s.parse::<usize>().ok()) {
+        Some(0) => 1,
+        Some(c) => c,
+        None => LEVEL_PAR_CUTOFF,
+    }
 }
 
 /// One sweep direction of the packed factor: vertices renumbered into
@@ -120,27 +124,63 @@ impl PackedTri {
     /// Pack one direction: position `i` holds vertex `order[i]`, whose
     /// dependency list is supplied by `entries(vertex)` (row of the CSR
     /// forward view, column of the CSC backward view) and remapped
-    /// through `pos`.
+    /// through `pos`. With `threads > 1` and a large enough factor the
+    /// level-major copy runs on the worker pool — two passes (exact
+    /// per-position sizing, then a disjoint parallel fill), so the
+    /// result is **bit-identical** to the sequential pass.
     fn build<'a>(
         order: &[u32],
         lev_ptr: Vec<usize>,
         pos: &[u32],
-        nnz_hint: usize,
-        mut entries: impl FnMut(usize) -> (&'a [u32], &'a [f64]),
+        entries: impl Fn(usize) -> (&'a [u32], &'a [f64]) + Sync,
         cutoff: usize,
+        threads: usize,
     ) -> PackedTri {
         let n = order.len();
-        let mut ptr = Vec::with_capacity(n + 1);
-        ptr.push(0usize);
-        let mut idx = Vec::with_capacity(nnz_hint);
-        let mut val = Vec::with_capacity(nnz_hint);
-        for &v in order {
-            let (deps, vals) = entries(v as usize);
-            for (&d, &w) in deps.iter().zip(vals) {
-                idx.push(pos[d as usize]);
-                val.push(w);
+        let pool = par::global();
+        let parts = threads.max(1).min(pool.size()).min(n.max(1));
+        // Pass 1: exact entry pointer — dependency-list lengths come
+        // straight from the factor's index pointers.
+        let mut ptr = vec![0usize; n + 1];
+        for (i, &v) in order.iter().enumerate() {
+            ptr[i + 1] = entries(v as usize).0.len();
+        }
+        for i in 0..n {
+            ptr[i + 1] += ptr[i];
+        }
+        let total = ptr[n];
+        let mut idx = vec![0u32; total];
+        let mut val = vec![0.0f64; total];
+        if parts <= 1 || n < 2048 {
+            for (i, &v) in order.iter().enumerate() {
+                let (deps, vals) = entries(v as usize);
+                let base = ptr[i];
+                for (j, (&d, &w)) in deps.iter().zip(vals).enumerate() {
+                    idx[base + j] = pos[d as usize];
+                    val[base + j] = w;
+                }
             }
-            ptr.push(idx.len());
+        } else {
+            // Pass 2: each packed position owns the disjoint slice
+            // `ptr[i]..ptr[i+1]` of `idx`/`val`, so contiguous position
+            // chunks write without overlap.
+            let ip = SendPtr::new(idx.as_mut_ptr());
+            let vp = SendPtr::new(val.as_mut_ptr());
+            let ptr_ref = &ptr;
+            let entries_ref = &entries;
+            pool.run(parts, |part, parts| {
+                let (lo, hi) = par::chunk_range(n, part, parts);
+                for i in lo..hi {
+                    let (deps, vals) = entries_ref(order[i] as usize);
+                    let base = ptr_ref[i];
+                    for (j, (&d, &w)) in deps.iter().zip(vals).enumerate() {
+                        unsafe {
+                            ip.write(base + j, pos[d as usize]);
+                            vp.write(base + j, w);
+                        }
+                    }
+                }
+            });
         }
         let any_wide = lev_ptr.windows(2).any(|w| w[1] - w[0] >= cutoff);
         PackedTri { ptr, idx, val, lev_ptr, any_wide }
@@ -150,6 +190,30 @@ impl PackedTri {
     fn n(&self) -> usize {
         self.ptr.len() - 1
     }
+}
+
+/// Invert a packed order into a position map (`pos[order[i]] = i`),
+/// pooled for large factors — `order` is a permutation, so the scatter
+/// targets are disjoint and the result is order-independent.
+fn invert_order(order: &[u32], threads: usize) -> Vec<u32> {
+    let n = order.len();
+    let pool = par::global();
+    let parts = threads.max(1).min(pool.size()).min(n.max(1));
+    let mut pos = vec![0u32; n];
+    if parts <= 1 || n < 2048 {
+        for (i, &v) in order.iter().enumerate() {
+            pos[v as usize] = i as u32;
+        }
+    } else {
+        let p = SendPtr::new(pos.as_mut_ptr());
+        pool.run(parts, |part, parts| {
+            let (lo, hi) = par::chunk_range(n, part, parts);
+            for (i, &v) in order[lo..hi].iter().enumerate() {
+                unsafe { p.write(v as usize, (lo + i) as u32) };
+            }
+        });
+    }
+    pos
 }
 
 /// The packed analysis product for both sweeps of `G D Gᵀ` solves (see
@@ -178,6 +242,14 @@ pub struct PackedSweeps {
     /// Composed output gather: `z[i] = y_bwd[bwd_out[i]]`; `None` ≡
     /// `bwd_pos` (same rationale as `fwd_in`).
     bwd_out: Option<Vec<u32>>,
+    /// Value provenance of the forward packing: `fwd.val[e] ==
+    /// f.g.data[fwd_src[e]]` — lets [`PackedSweeps::refill`] refresh the
+    /// forward copy from a refactorized column factor without redoing
+    /// the transpose.
+    fwd_src: Vec<usize>,
+    /// The backward level-major vertex order (backward values are the
+    /// factor's own columns, so refill copies column slices directly).
+    bwd_order: Vec<u32>,
     /// Level-width threshold below which a level (run) executes
     /// sequentially on participant 0.
     cutoff: usize,
@@ -200,43 +272,56 @@ impl PackedSweeps {
     /// Analyze a factor (the "analysis phase"): compute both level
     /// schedules, renumber into level order, and pack rows/columns
     /// contiguously. `cutoff` is the minimum level width dispatched in
-    /// parallel (clamped to at least 1).
+    /// parallel (clamped to at least 1). Sequential reference —
+    /// equivalent to [`PackedSweeps::analyze_with_opts`] at one thread.
     pub fn analyze_with_cutoff(f: &LdlFactor, cutoff: usize) -> PackedSweeps {
+        PackedSweeps::analyze_with_opts(f, cutoff, 1)
+    }
+
+    /// [`PackedSweeps::analyze_with_cutoff`] with up to `threads` pool
+    /// workers cooperating on the analysis itself: the level bucketing
+    /// and the level-major packing copies run as pooled two-pass
+    /// scatters with exact per-part offsets, so the product is
+    /// **bit-identical** for every thread count (asserted across the
+    /// generator suite in `rust/tests/properties.rs`).
+    pub fn analyze_with_opts(f: &LdlFactor, cutoff: usize, threads: usize) -> PackedSweeps {
         let cutoff = cutoff.max(1);
-        let n = f.n();
+        let threads = threads.max(1);
         let (fwd_levels, fwd_max) = etree::trisolve_levels(&f.g);
         let (bwd_levels, bwd_max) = etree::trisolve_levels_bwd(&f.g);
-        let (fwd_order, fwd_lev) = etree::bucket_by_level(&fwd_levels, fwd_max);
-        let (bwd_order, bwd_lev) = etree::bucket_by_level(&bwd_levels, bwd_max);
-        let mut fwd_pos = vec![0u32; n];
-        for (i, &v) in fwd_order.iter().enumerate() {
-            fwd_pos[v as usize] = i as u32;
-        }
-        let mut bwd_pos = vec![0u32; n];
-        for (i, &v) in bwd_order.iter().enumerate() {
-            bwd_pos[v as usize] = i as u32;
-        }
+        let (fwd_order, fwd_lev) = etree::bucket_by_level_par(&fwd_levels, fwd_max, threads);
+        let (bwd_order, bwd_lev) = etree::bucket_by_level_par(&bwd_levels, bwd_max, threads);
+        let fwd_pos = invert_order(&fwd_order, threads);
+        let bwd_pos = invert_order(&bwd_order, threads);
         // Forward packing reads rows of `G`; one transient CSR
-        // transpose is materialized here and dropped after packing, so
-        // the resident footprint is two packed copies (one per sweep)
-        // and nothing else.
-        let g_rows = f.g.to_csr();
+        // transpose (with value provenance for `refill`) is
+        // materialized here and dropped after packing, so the resident
+        // footprint is two packed copies (one per sweep) plus the
+        // entry-sized provenance map.
+        let (g_rows, g_src) = f.g.to_csr_with_src();
         let fwd = PackedTri::build(
             &fwd_order,
             fwd_lev,
             &fwd_pos,
-            f.g.nnz(),
             |k| (g_rows.row_indices(k), g_rows.row_data(k)),
             cutoff,
+            threads,
         );
         let bwd = PackedTri::build(
             &bwd_order,
             bwd_lev,
             &bwd_pos,
-            f.g.nnz(),
             |k| (f.g.col_rows(k), f.g.col_data(k)),
             cutoff,
+            threads,
         );
+        // Compose the CSR-transpose provenance with the forward packing
+        // so refill gathers straight from the factor's column storage.
+        let mut fwd_src = Vec::with_capacity(fwd.idx.len());
+        for &v in &fwd_order {
+            let (s, e) = (g_rows.indptr[v as usize], g_rows.indptr[v as usize + 1]);
+            fwd_src.extend_from_slice(&g_src[s..e]);
+        }
         let (fwd_in, bwd_out) = match &f.perm {
             Some(p) => (
                 Some(p.iter().map(|&pi| fwd_pos[pi as usize]).collect()),
@@ -257,12 +342,63 @@ impl PackedSweeps {
             mid,
             diag_bwd,
             bwd_out,
+            fwd_src,
+            bwd_order,
             cutoff,
             critical_path: fwd_max,
             barrier: SweepBarrier::new(),
             dispatches: AtomicU64::new(0),
             barriers: AtomicU64::new(0),
         }
+    }
+
+    /// Refresh the packed **values** from a refactorized factor whose
+    /// sparsity structure matches the analyzed one (same `g.colptr`/
+    /// `g.rowidx` and permutation) — the "near-free" half of the
+    /// symbolic/numeric split. Copies values through the recorded
+    /// provenance maps; every schedule array, counter, and the barrier
+    /// stay untouched, and no heap allocation happens.
+    pub fn refill(&mut self, f: &LdlFactor) {
+        debug_assert_eq!(self.n(), f.n());
+        debug_assert_eq!(self.fwd.idx.len(), f.g.nnz(), "structure changed; re-analyze");
+        for (dst, &s) in self.fwd.val.iter_mut().zip(&self.fwd_src) {
+            *dst = f.g.data[s];
+        }
+        for (i, &v) in self.bwd_order.iter().enumerate() {
+            let vals = f.g.col_data(v as usize);
+            let base = self.bwd.ptr[i];
+            self.bwd.val[base..base + vals.len()].copy_from_slice(vals);
+            self.diag_bwd[i] = f.diag[v as usize];
+        }
+    }
+
+    /// Bitwise equality of the full analysis product — every schedule,
+    /// packing, provenance, and value array (float compare is by bits).
+    /// Counters and the barrier are runtime state and excluded. Used by
+    /// the pooled-analysis determinism tests.
+    pub fn bitwise_eq(&self, other: &PackedSweeps) -> bool {
+        fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        fn tri_eq(a: &PackedTri, b: &PackedTri) -> bool {
+            a.ptr == b.ptr
+                && a.idx == b.idx
+                && bits_eq(&a.val, &b.val)
+                && a.lev_ptr == b.lev_ptr
+                && a.any_wide == b.any_wide
+        }
+        tri_eq(&self.fwd, &other.fwd)
+            && tri_eq(&self.bwd, &other.bwd)
+            && self.fwd_pos == other.fwd_pos
+            && self.bwd_pos == other.bwd_pos
+            && self.fwd_in == other.fwd_in
+            && self.bwd_out == other.bwd_out
+            && self.mid == other.mid
+            && bits_eq(&self.diag_bwd, &other.diag_bwd)
+            && self.fwd_src == other.fwd_src
+            && self.bwd_order == other.bwd_order
+            && self.cutoff == other.cutoff
+            && self.critical_path == other.critical_path
     }
 
     /// Matrix dimension.
@@ -506,10 +642,13 @@ mod tests {
     #[test]
     fn all_narrow_factor_never_dispatches() {
         // A path graph's factor is one long chain: every level has
-        // width 1, so even a threaded apply stays inline.
+        // width 1, so even a threaded apply stays inline. (Cutoff
+        // pinned to the built-in default rather than `analyze`'s
+        // env-sensitive one so the CI reruns under `PARAC_LEVEL_CUTOFF`
+        // extremes don't flip the expectation.)
         let l = generators::path(200);
         let f = seq_factor(&l);
-        let packed = PackedSweeps::analyze(&f);
+        let packed = PackedSweeps::analyze_with_cutoff(&f, LEVEL_PAR_CUTOFF);
         let n = f.n();
         let r: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 8.0).collect();
         let want = f.solve(&r);
@@ -538,10 +677,34 @@ mod tests {
     }
 
     #[test]
+    fn pooled_analysis_bit_identical_and_refill_is_identity() {
+        // 2500 vertices: big enough to take the pooled bucketing /
+        // packing / inversion paths rather than their fallbacks.
+        let l = generators::grid2d(50, 50, generators::Coeff::HighContrast(3.0), 3);
+        let f = seq_factor(&l);
+        let reference = PackedSweeps::analyze_with_opts(&f, 4, 1);
+        for threads in [2usize, 4] {
+            let pooled = PackedSweeps::analyze_with_opts(&f, 4, threads);
+            assert!(pooled.bitwise_eq(&reference), "threads={threads}");
+        }
+        // Refilling from the same factor must be a bitwise no-op.
+        let mut refilled = PackedSweeps::analyze_with_opts(&f, 4, 2);
+        refilled.refill(&f);
+        assert!(refilled.bitwise_eq(&reference));
+        // And the refilled executor still solves correctly.
+        let n = f.n();
+        let r: Vec<f64> = (0..n).map(|i| ((i * 31) % 17) as f64 - 8.0).collect();
+        let want = f.solve(&r);
+        let (mut z, mut a, mut b) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        refilled.apply_into(&r, &mut z, 4, &mut a, &mut b);
+        assert_eq!(z, want);
+    }
+
+    #[test]
     fn cutoff_parsing_and_default() {
         assert_eq!(cutoff_from(None), LEVEL_PAR_CUTOFF);
         assert_eq!(cutoff_from(Some("64")), 64);
-        assert_eq!(cutoff_from(Some("0")), LEVEL_PAR_CUTOFF);
+        assert_eq!(cutoff_from(Some("0")), 1, "0 means fully parallel");
         assert_eq!(cutoff_from(Some("not-a-number")), LEVEL_PAR_CUTOFF);
     }
 }

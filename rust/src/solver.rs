@@ -70,7 +70,7 @@
 //! ```
 
 use crate::error::ParacError;
-use crate::factor::{self, Engine, FactorStats, ParacOptions};
+use crate::factor::{self, Engine, FactorStats, ParacOptions, SymbolicFactor};
 use crate::graph::{LapKind, Laplacian};
 use crate::ordering::Ordering;
 use crate::precond::{
@@ -329,10 +329,23 @@ impl SolverBuilder {
             return Err(ParacError::BadInput("empty matrix".into()));
         }
         let timer = Timer::start();
-        let (pre, stats) = self.build_precond(lap)?;
+        let (pre, stats, symbolic) = self.build_precond(lap)?;
         let project = self.project.unwrap_or(lap.kind == LapKind::Graph);
         let op = SessionOp::Matrix { a: &lap.matrix, threads: self.solve_threads() };
-        Ok(self.assemble(op, pre, stats, project, timer.secs()))
+        Ok(self.assemble(op, pre, stats, symbolic, project, timer.secs()))
+    }
+
+    /// Run only the **symbolic phase** of the ParAC factorization for
+    /// `lap` under this builder's options: ordering, permutation layout,
+    /// and engine workspace sizing — no numeric work. The returned
+    /// [`SymbolicFactor`] can then
+    /// [`factorize`](SymbolicFactor::factorize) and
+    /// [`refactorize_into`](SymbolicFactor::refactorize_into) any
+    /// reweighting of the same sparsity pattern. [`SolverBuilder::build`]
+    /// with a ParAC preconditioner performs exactly this analysis
+    /// internally and keeps it for [`Solver::refactorize`].
+    pub fn build_symbolic(&self, lap: &Laplacian) -> Result<SymbolicFactor, ParacError> {
+        SymbolicFactor::analyze(lap, &self.parac)
     }
 
     /// Build a solver session for a raw SPD/SDD matrix (e.g. a
@@ -356,11 +369,14 @@ impl SolverBuilder {
                     Some(stats),
                 )
             }
-            other => (build_baseline(a, other)?, None),
+            other => (build_baseline(a, other, self.solve_threads())?, None),
         };
         let project = self.project.unwrap_or(false);
         let op = SessionOp::Matrix { a, threads: self.solve_threads() };
-        Ok(self.assemble(op, pre, stats, project, timer.secs()))
+        // SDD sessions factor a grounded (N+1)-vertex extension and
+        // truncate, so the symbolic product doesn't map back onto the
+        // session operator — no refactorize support here.
+        Ok(self.assemble(op, pre, stats, None, project, timer.secs()))
     }
 
     /// Build a solver session for a matrix-free operator with a
@@ -389,6 +405,7 @@ impl SolverBuilder {
             n,
             setup_secs: 0.0,
             factor_stats: None,
+            symbolic: None,
         })
     }
 
@@ -397,6 +414,7 @@ impl SolverBuilder {
         op: SessionOp<'a>,
         pre: Box<dyn Preconditioner>,
         factor_stats: Option<FactorStats>,
+        symbolic: Option<SymbolicFactor>,
         project: bool,
         setup_secs: f64,
     ) -> Solver<'a> {
@@ -411,23 +429,27 @@ impl SolverBuilder {
             n,
             setup_secs,
             factor_stats,
+            symbolic,
         }
     }
 
     fn build_precond(
         &self,
         lap: &Laplacian,
-    ) -> Result<(Box<dyn Preconditioner>, Option<FactorStats>), ParacError> {
+    ) -> Result<(Box<dyn Preconditioner>, Option<FactorStats>, Option<SymbolicFactor>), ParacError>
+    {
         match &self.precond {
             PrecondKind::Parac { level_threads } => {
-                let f = factor::factorize(lap, &self.parac)?;
+                let mut sym = self.build_symbolic(lap)?;
+                let f = sym.factorize(lap)?;
                 let stats = f.stats.clone();
                 Ok((
                     wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff),
                     Some(stats),
+                    Some(sym),
                 ))
             }
-            other => Ok((build_baseline(&lap.matrix, other)?, None)),
+            other => Ok((build_baseline(&lap.matrix, other, self.solve_threads())?, None, None)),
         }
     }
 
@@ -472,8 +494,15 @@ fn wrap_ldl(
     }
 }
 
-/// Build a non-ParAC preconditioner from an assembled matrix.
-fn build_baseline(a: &Csr, kind: &PrecondKind) -> Result<Box<dyn Preconditioner>, ParacError> {
+/// Build a non-ParAC preconditioner from an assembled matrix. Setup
+/// passes that chunk cleanly run on the persistent pool with the
+/// session's `threads` budget (currently the Jacobi diagonal
+/// extraction; results are bit-identical to the sequential setup).
+fn build_baseline(
+    a: &Csr,
+    kind: &PrecondKind,
+    threads: usize,
+) -> Result<Box<dyn Preconditioner>, ParacError> {
     Ok(match kind {
         PrecondKind::Parac { .. } => unreachable!("handled by the callers"),
         PrecondKind::Ichol0 => Box::new(Ichol0::try_new(a)?),
@@ -483,7 +512,7 @@ fn build_baseline(a: &Csr, kind: &PrecondKind) -> Result<Box<dyn Preconditioner>
             (None, None) => IcholT::try_new(a, 1e-3)?,
         }),
         PrecondKind::Amg => Box::new(AmgPrecond::new(a, &AmgOptions::default())),
-        PrecondKind::Jacobi => Box::new(JacobiPrecond::new(a)),
+        PrecondKind::Jacobi => Box::new(JacobiPrecond::new_par(a, threads)),
         PrecondKind::Ssor { omega } => Box::new(Ssor::try_new(a, *omega)?),
         PrecondKind::Identity => Box::new(IdentityPrecond),
     })
@@ -534,6 +563,10 @@ pub struct Solver<'a> {
     n: usize,
     setup_secs: f64,
     factor_stats: Option<FactorStats>,
+    /// The frozen symbolic phase of a ParAC graph session — powers
+    /// [`Solver::refactorize`]. `None` for baselines, SDD, and
+    /// operator sessions.
+    symbolic: Option<SymbolicFactor>,
 }
 
 impl<'a> Solver<'a> {
@@ -559,8 +592,54 @@ impl<'a> Solver<'a> {
     }
 
     /// ParAC factor statistics (None for baseline preconditioners).
+    /// After [`Solver::refactorize`] these describe the most recent
+    /// numeric run — `symbolic_reused` is set and `symbolic_secs` is 0.
     pub fn factor_stats(&self) -> Option<&FactorStats> {
         self.factor_stats.as_ref()
+    }
+
+    /// The ParAC factor backing the preconditioner (None for baseline
+    /// preconditioners and operator sessions).
+    pub fn factor(&self) -> Option<&crate::factor::LdlFactor> {
+        self.pre.as_ldl().map(|p| p.factor())
+    }
+
+    /// Re-run only the **numeric phase** on new edge weights: `lap`
+    /// must have exactly the sparsity pattern this session was built
+    /// on (same vertices, same edges — only weights may differ; a
+    /// structural change is a typed [`ParacError::BadInput`], rebuild
+    /// instead). The frozen ordering, elimination layout, engine
+    /// workspaces, and — when the reweighting preserves the factor's
+    /// structure — the packed sweep schedules are all reused, so steady
+    /// state performs no ordering, no e-tree work, no analysis, and no
+    /// heap allocation. The refreshed factor is **bit-identical** to a
+    /// fresh [`SolverBuilder::build`] on `lap` with the same options.
+    /// Only available on ParAC graph sessions
+    /// ([`SolverBuilder::build`]); the session's operator is re-pointed
+    /// at `lap`, so subsequent solves target the new system.
+    pub fn refactorize(&mut self, lap: &'a Laplacian) -> Result<(), ParacError> {
+        if lap.n() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "refactorize operator",
+                expected: self.n,
+                got: lap.n(),
+            });
+        }
+        let sym = self.symbolic.as_mut().ok_or_else(|| {
+            ParacError::BadInput(
+                "refactorize requires a ParAC graph session built with SolverBuilder::build"
+                    .into(),
+            )
+        })?;
+        let ldl = self.pre.as_ldl_mut().ok_or_else(|| {
+            ParacError::BadInput("refactorize requires the ParAC preconditioner".into())
+        })?;
+        ldl.refactorize_numeric(|f| sym.refactorize_into(lap, f))?;
+        self.factor_stats = Some(ldl.factor().stats.clone());
+        if let SessionOp::Matrix { a, .. } = &mut self.op {
+            *a = &lap.matrix;
+        }
+        Ok(())
     }
 
     /// Cumulative sweep dispatch/barrier counters of the packed
@@ -909,6 +988,73 @@ mod tests {
         assert!(jac.sweep_counters().is_none());
         let jstats = jac.solve_into(&b, &mut x).unwrap();
         assert_eq!((jstats.precond_dispatches, jstats.precond_barriers), (0, 0));
+    }
+
+    #[test]
+    fn refactorize_matches_fresh_build_and_solves_new_system() {
+        let lap = generators::grid2d(14, 14, generators::Coeff::Uniform, 0);
+        // Same pattern, new weights (declared before the sessions so
+        // the borrow outlives them).
+        let edges: Vec<(u32, u32, f64)> = lap
+            .edges()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (a, b, w))| (a, b, w * (1.0 + (i % 5) as f64 * 0.5)))
+            .collect();
+        let lap2 = Laplacian::from_edges(lap.n(), &edges, "reweighted");
+        let build = || Solver::builder().seed(5).threads(2).level_cutoff(4);
+
+        let mut s = build().build(&lap).unwrap();
+        let built_stats = s.factor_stats().unwrap().clone();
+        assert!(!built_stats.symbolic_reused);
+        assert!(built_stats.symbolic_secs > 0.0, "build must report the analysis time");
+        s.refactorize(&lap2).unwrap();
+        let st = s.factor_stats().unwrap();
+        assert!(st.symbolic_reused, "refactorize must reuse the symbolic phase");
+        assert_eq!(st.symbolic_secs, 0.0, "no analysis work on refactorize");
+
+        // Bit-identical to a from-scratch session on the new weights.
+        let mut fresh = build().build(&lap2).unwrap();
+        assert_eq!(s.factor().unwrap().g, fresh.factor().unwrap().g);
+        assert_eq!(s.factor().unwrap().diag, fresh.factor().unwrap().diag);
+
+        // And the session now solves the *new* system, identically.
+        let b = pcg::random_rhs(&lap2, 3);
+        let got = s.solve(&b).unwrap();
+        let want = fresh.solve(&b).unwrap();
+        assert!(got.converged);
+        assert_eq!(got.x, want.x);
+        assert_eq!(got.iters, want.iters);
+    }
+
+    #[test]
+    fn refactorize_error_paths_are_typed() {
+        let lap = generators::grid2d(8, 8, generators::Coeff::Uniform, 0);
+        let bigger = generators::grid2d(9, 9, generators::Coeff::Uniform, 0);
+        let same_n_other_pattern = generators::path(64);
+
+        let mut s = Solver::builder().build(&lap).unwrap();
+        match s.refactorize(&bigger) {
+            Err(ParacError::DimensionMismatch { what: "refactorize operator", expected, got }) => {
+                assert_eq!((expected, got), (64, 81));
+            }
+            other => panic!("expected DimensionMismatch, got {other:?}"),
+        }
+        match s.refactorize(&same_n_other_pattern) {
+            Err(ParacError::BadInput(msg)) => assert!(msg.contains("pattern"), "{msg}"),
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+        // A failed refactorize leaves the session solvable.
+        let b = pcg::random_rhs(&lap, 2);
+        assert!(s.solve(&b).unwrap().converged);
+
+        // Baseline sessions cannot refactorize.
+        let mut jac = Solver::builder()
+            .preconditioner(PrecondKind::Jacobi)
+            .max_iter(2000)
+            .build(&lap)
+            .unwrap();
+        assert!(matches!(jac.refactorize(&lap), Err(ParacError::BadInput(_))));
     }
 
     #[test]

@@ -85,6 +85,34 @@ impl Csc {
         Csr { nrows: self.nrows, ncols: self.ncols, indptr: counts, indices, data }
     }
 
+    /// [`Csc::to_csr`] that also records provenance: returns `(a, src)`
+    /// with `a.data[i] == self.data[src[i]]`. Used by the packed sweep
+    /// executor to refill row-major copies of a refactorized column
+    /// factor without re-running the transpose.
+    pub fn to_csr_with_src(&self) -> (Csr, Vec<usize>) {
+        let mut counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rowidx {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let mut cursor = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut src = vec![0usize; self.nnz()];
+        for c in 0..self.ncols {
+            for k in self.colptr[c]..self.colptr[c + 1] {
+                let slot = cursor[self.rowidx[k] as usize];
+                indices[slot] = c as u32;
+                data[slot] = self.data[k];
+                src[slot] = k;
+                cursor[self.rowidx[k] as usize] += 1;
+            }
+        }
+        (Csr { nrows: self.nrows, ncols: self.ncols, indptr: counts, indices, data }, src)
+    }
+
     /// Build from CSR.
     pub fn from_csr(a: &Csr) -> Csc {
         let t = a.transpose();

@@ -186,6 +186,53 @@ impl Csr {
         Csr { nrows: n, ncols: n, indptr, indices, data }
     }
 
+    /// [`Csr::permute_sym`] that also records where each permuted entry
+    /// came from: returns `(p, map)` with `p.data[i] ==
+    /// self.data[map[i]]`. A later value refresh on the same pattern is
+    /// then a plain gather (`p.data[i] = new_data[map[i]]`) with no
+    /// re-permutation — the symbolic/numeric split's value path.
+    pub fn permute_sym_map(&self, perm: &[u32]) -> (Csr, Vec<usize>) {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(perm.len(), self.nrows);
+        let n = self.nrows;
+        let mut indptr = vec![0usize; n + 1];
+        for r in 0..n {
+            indptr[perm[r] as usize + 1] = self.indptr[r + 1] - self.indptr[r];
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0f64; self.nnz()];
+        let mut map = vec![0usize; self.nnz()];
+        for r in 0..n {
+            let dst = indptr[perm[r] as usize];
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            for (off, k) in (lo..hi).enumerate() {
+                indices[dst + off] = perm[self.indices[k] as usize];
+                data[dst + off] = self.data[k];
+                map[dst + off] = k;
+            }
+        }
+        let mut scratch: Vec<(u32, f64, usize)> = Vec::new();
+        for i in 0..n {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            if hi - lo > 1 {
+                scratch.clear();
+                for off in lo..hi {
+                    scratch.push((indices[off], data[off], map[off]));
+                }
+                scratch.sort_unstable_by_key(|&(c, _, _)| c);
+                for (off, &(c, v, k)) in scratch.iter().enumerate() {
+                    indices[lo + off] = c;
+                    data[lo + off] = v;
+                    map[lo + off] = k;
+                }
+            }
+        }
+        (Csr { nrows: n, ncols: n, indptr, indices, data }, map)
+    }
+
     /// Structural + numerical symmetry check (tolerance `tol`).
     pub fn is_symmetric(&self, tol: f64) -> bool {
         if self.nrows != self.ncols {

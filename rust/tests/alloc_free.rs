@@ -15,7 +15,14 @@
 //! counters must move, so the test cannot silently degrade to the
 //! sequential inline path).
 //!
-//! This lives in its own integration-test binary (one `#[test]`, two
+//! Phase 3 extends the contract to numeric-only refactorization:
+//! `Solver::refactorize` on a frozen sparsity pattern recycles the
+//! ordering, e-tree, packed schedules, engine workspaces, and the
+//! double-buffered factor storage, so rebuilding the factor for new
+//! edge weights — from the **first** refactorize onward, thanks to the
+//! spare buffers pre-warmed at build time — allocates nothing either.
+//!
+//! This lives in its own integration-test binary (one `#[test]`, three
 //! phases) so no concurrently running test can touch the allocation
 //! counter.
 
@@ -103,6 +110,14 @@ fn solve_into_allocates_nothing_after_warmup() {
         lap_wide.n() >= parac::sparse::csr::PAR_SPMV_CUTOFF,
         "phase-2 grid must be large enough to exercise the parallel SpMV dispatch"
     );
+    // Same pattern as `lap_wide`, every weight scaled by exactly 2.0.
+    // A power-of-two scale leaves every sampling decision — and hence
+    // the factor structure — bit-identical, so phase 3's refactorize
+    // exercises the pure refill path. Declared before the solver so the
+    // session (which borrows its operator) can refactorize onto it.
+    let scaled: Vec<(u32, u32, f64)> =
+        lap_wide.edges().into_iter().map(|(a, b, w)| (a, b, w * 2.0)).collect();
+    let lap_scaled = parac::graph::Laplacian::from_edges(lap_wide.n(), &scaled, "scaled");
     let mut pooled = Solver::builder()
         .engine(Engine::Seq)
         .threads(2)
@@ -138,6 +153,33 @@ fn solve_into_allocates_nothing_after_warmup() {
         0,
         "packed-sweep/pooled solve_into allocated {} times across 12 warm \
          solves — one-dispatch-per-sweep execution must be allocation-free",
+        after - before
+    );
+
+    // ---- Phase 3: numeric-only refactorization. ----
+    // Alternate between the ×2.0-scaled weights and the originals. Each
+    // refactorize reruns only the numeric phase on the frozen pattern
+    // (value refresh, randomized sweep into the recycled spare buffers,
+    // packed-executor refill) and each is followed by a full solve on
+    // the new operator. Counted from the very first refactorize: the
+    // spare factor buffers were reserved at build time, so even the
+    // first numeric-only rebuild must not touch the allocator.
+    let before = allocations();
+    for round in 0..6usize {
+        let lap_next = if round % 2 == 0 { &lap_scaled } else { &lap_wide };
+        pooled.refactorize(lap_next).expect("numeric-only refactorize");
+        let fs = pooled.factor_stats().expect("factor stats");
+        assert!(fs.symbolic_reused, "refactorize must skip the symbolic phase");
+        assert_eq!(fs.symbolic_secs, 0.0, "no analysis time on a frozen pattern");
+        let stats = pooled.solve_into(&rhs_wide[round % 4], &mut xw).expect("post-refactorize solve");
+        assert!(stats.converged);
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "refactorize allocated {} times across 6 numeric-only rebuilds — the \
+         frozen-pattern path must reuse every workspace and buffer",
         after - before
     );
 }
