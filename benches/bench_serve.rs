@@ -1,0 +1,82 @@
+//! Serving bench: N client threads against one shared cached factor —
+//! measures the serve stack end to end (factor cache admission, wave
+//! coalescing, `&self` batch solves on the shared session) under
+//! open-loop load, reporting throughput and p50/p99 latency per
+//! (graph × client-count) cell.
+//!
+//! Emits `BENCH_serve.json` through the hand-rolled JSON writer so
+//! successive PRs can diff the serving trajectory mechanically; CI runs
+//! this binary at `PARAC_SCALE=tiny` as a smoke step so a regression in
+//! the concurrent solve path (a deadlocked gate, a workspace-pool leak,
+//! a non-`Sync` session) fails visibly rather than silently.
+
+mod bench_common;
+
+use parac::coordinator::pipeline::{self, BenchRow};
+use parac::coordinator::report::Table;
+use parac::coordinator::serve_driver::{run_open_loop, LoadSpec};
+use parac::graph::suite;
+use parac::serve::{FactorCache, ServeOptions, SolveService};
+use parac::solver::Solver;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let threads = bench_common::bench_threads();
+    let client_counts = [1usize, 8];
+    println!("## Serve: open-loop clients × shared factor  [scale {scale:?}]\n");
+    let mut table = Table::new(&[
+        "problem", "clients", "solves", "solves/s", "p50 (ms)", "p99 (ms)", "waves", "coalesced",
+    ]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for name in ["uniform_3d_poisson", "rand_expander"] {
+        let e = suite::by_name(name).unwrap();
+        let lap = Arc::new((e.build)(scale));
+        for &clients in &client_counts {
+            // Fresh service per cell: one untimed build warms the
+            // cache, then the measured window is pure serving.
+            let svc = SolveService::new(
+                FactorCache::new(Solver::builder().seed(1).threads(threads), 4),
+                ServeOptions { max_wave: 8, max_wait: Duration::from_micros(200) },
+            );
+            let spec = LoadSpec {
+                clients,
+                requests_per_client: 32,
+                interval: Duration::from_micros(500),
+                seed: 7,
+            };
+            let rep = match run_open_loop(&svc, &lap, &spec) {
+                Ok(rep) => rep,
+                Err(err) => {
+                    eprintln!("error: {name} clients={clients}: {err}");
+                    std::process::exit(1);
+                }
+            };
+            table.row(vec![
+                e.name.into(),
+                clients.to_string(),
+                rep.solves.to_string(),
+                format!("{:.1}", rep.throughput),
+                format!("{:.3}", rep.p50_ms),
+                format!("{:.3}", rep.p99_ms),
+                rep.service.waves.to_string(),
+                rep.service.coalesced.to_string(),
+            ]);
+            rows.push(BenchRow {
+                name: format!("{} n={} clients={clients}", e.name, lap.n()),
+                fields: rep.fields(),
+            });
+        }
+    }
+    print!("{}", table.render());
+    let json_path = std::path::Path::new("BENCH_serve.json");
+    match pipeline::write_bench_rows_json(json_path, "serve", &rows) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(err) => eprintln!("\nfailed to write {}: {err}", json_path.display()),
+    }
+    println!(
+        "(open loop: arrivals are scheduled, not throttled by completions, \
+         so queueing delay lands in the latency percentiles)"
+    );
+}

@@ -5,10 +5,13 @@
 //! [`pipeline::RunResult`] rows (including the machine-readable
 //! `BENCH_pipeline.json` via [`pipeline::write_bench_json`]);
 //! [`repro`] regenerates the paper's tables/figures; [`incremental`]
-//! runs the dynamic-graph resparsification loop. Everything returns
-//! typed [`crate::error::ParacError`]s — only binaries exit.
+//! runs the dynamic-graph resparsification loop; [`serve_driver`]
+//! measures the serving subsystem ([`crate::serve`]) under open-loop
+//! multi-client load. Everything returns typed
+//! [`crate::error::ParacError`]s — only binaries exit.
 
 pub mod incremental;
 pub mod pipeline;
 pub mod report;
 pub mod repro;
+pub mod serve_driver;

@@ -17,8 +17,15 @@
 //!   together with [`trisolve_levels`] these are the full "analysis
 //!   phase" consumed by [`crate::solve::trisolve::LevelSchedule`] and
 //!   the packed executor [`crate::solve::packed::PackedSweeps`].
+//! * [`trisolve_levels_par`] / [`trisolve_levels_bwd_par`] /
+//!   [`bucket_by_level_par`] — the same analysis on the persistent
+//!   worker pool (a Kahn wavefront for the level schedules), each
+//!   bit-identical to its sequential reference with a small-input
+//!   fallback, so the symbolic phase itself scales with the solve
+//!   threads.
 
 use crate::sparse::{Csc, Csr};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 
 /// Liu's elimination tree of the complete Cholesky factor of a symmetric
 /// matrix, without forming the factor. Returns `parent[v]` (`-1` = root).
@@ -138,6 +145,134 @@ pub fn trisolve_levels_bwd(g: &Csc) -> (Vec<u32>, usize) {
         }
     }
     (level, maxl)
+}
+
+/// [`trisolve_levels`] on the persistent worker pool: a Kahn wavefront
+/// over the solve DAG. In-degrees (row counts of the factor's CSR view)
+/// drop atomically as predecessors complete; the part whose decrement
+/// hits zero owns the vertex — it writes the level and appends the
+/// vertex to the shared frontier, so every slot is written exactly once.
+/// Levels are a deterministic function of the DAG (1 + longest incoming
+/// path), so the result is **bit-identical** to the sequential scan no
+/// matter how the waves interleave. `rows` must be the CSR view of `g`
+/// (same nonzeros, row-major — [`Csc::to_csr_with_src`]). Falls back to
+/// the sequential pass for one part or small inputs.
+pub fn trisolve_levels_par(g: &Csc, rows: &Csr, threads: usize) -> (Vec<u32>, usize) {
+    let n = g.ncols;
+    let pool = crate::par::global();
+    let parts = threads.min(pool.size()).min(n.max(1));
+    if parts <= 1 || n < 2048 {
+        return trisolve_levels(g);
+    }
+    debug_assert_eq!(rows.nrows, n, "rows must be the CSR view of g");
+    // Forward DAG: vertex r waits on every column k with G[r,k] != 0
+    // (its row entries); completing k releases g.col_rows(k).
+    wavefront_levels(n, parts, &rows.indptr, |k| g.col_rows(k))
+}
+
+/// [`trisolve_levels_bwd`] on the persistent worker pool — the same
+/// Kahn wavefront as [`trisolve_levels_par`] run over the transpose
+/// DAG: column k waits on its own rows (`g.col_rows(k)`, in-degrees are
+/// column counts), and completing r releases every column whose row r
+/// appears in (`rows.row_indices(r)`). Bit-identical to the sequential
+/// pass; same small-input fallback. `rows` must be the CSR view of `g`.
+pub fn trisolve_levels_bwd_par(g: &Csc, rows: &Csr, threads: usize) -> (Vec<u32>, usize) {
+    let n = g.ncols;
+    let pool = crate::par::global();
+    let parts = threads.min(pool.size()).min(n.max(1));
+    if parts <= 1 || n < 2048 {
+        return trisolve_levels_bwd(g);
+    }
+    debug_assert_eq!(rows.nrows, n, "rows must be the CSR view of g");
+    wavefront_levels(n, parts, &g.colptr, |r| rows.row_indices(r))
+}
+
+/// Shared engine of the two `_par` level schedules: one pool dispatch
+/// running Kahn's algorithm by waves. `ptr` is the in-degree pointer
+/// array of the dependency DAG (`indeg[v] = ptr[v+1] - ptr[v]`) and
+/// `succ(v)` lists the vertices released when `v` completes.
+///
+/// All participants stay resident for the whole computation and meet at
+/// a [`crate::par::SweepBarrier`] twice per wave: once after processing
+/// their chunk of the current frontier window (during which zero-degree
+/// discoveries are appended past the shared tail cursor), and once
+/// after part 0 advances the window over the freshly appended run. The
+/// append *order* within a wave is scheduling-dependent, but the
+/// `(level, critical_path)` output never observes it.
+fn wavefront_levels<'a, F>(n: usize, parts: usize, ptr: &[usize], succ: F) -> (Vec<u32>, usize)
+where
+    F: Fn(usize) -> &'a [u32] + Sync,
+{
+    let pool = crate::par::global();
+    let indeg: Vec<AtomicU32> =
+        (0..n).map(|v| AtomicU32::new((ptr[v + 1] - ptr[v]) as u32)).collect();
+    let mut level = vec![0u32; n];
+    let mut frontier = vec![0u32; n];
+    let tail = AtomicUsize::new(0);
+    let wave_lo = AtomicUsize::new(0);
+    let wave_hi = AtomicUsize::new(0);
+    let critical = AtomicUsize::new(if n == 0 { 0 } else { 1 });
+    let barrier = crate::par::SweepBarrier::new();
+    let level_ptr = crate::par::SendPtr::new(level.as_mut_ptr());
+    let front_ptr = crate::par::SendPtr::new(frontier.as_mut_ptr());
+    pool.run(parts, |part, parts| {
+        // Seed wave: sources (in-degree zero) sit at level 1.
+        let (lo, hi) = crate::par::chunk_range(n, part, parts);
+        for v in lo..hi {
+            if indeg[v].load(Ordering::Relaxed) == 0 {
+                // SAFETY: v is in this part's disjoint chunk; the
+                // frontier slot comes from the monotone tail cursor, so
+                // both writes are exclusive. Readers are fenced by the
+                // barrier below.
+                unsafe { level_ptr.write(v, 1) };
+                let slot = tail.fetch_add(1, Ordering::Relaxed);
+                unsafe { front_ptr.write(slot, v as u32) };
+            }
+        }
+        barrier.wait(parts);
+        if part == 0 {
+            wave_hi.store(tail.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        barrier.wait(parts);
+        let mut cur = 1u32;
+        loop {
+            let wlo = wave_lo.load(Ordering::Relaxed);
+            let whi = wave_hi.load(Ordering::Relaxed);
+            if wlo == whi {
+                break;
+            }
+            let (clo, chi) = crate::par::chunk_range(whi - wlo, part, parts);
+            for i in (wlo + clo)..(wlo + chi) {
+                // SAFETY: the window [wlo, whi) was fully written and
+                // published (barrier) in the previous wave; parts read
+                // disjoint chunks of it.
+                let v = unsafe { front_ptr.read(i) } as usize;
+                for &s in succ(v) {
+                    let s = s as usize;
+                    if indeg[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        // SAFETY: exactly one decrement observes 1, so
+                        // this part exclusively owns vertex s; the
+                        // frontier slot is exclusive as in the seed.
+                        unsafe { level_ptr.write(s, cur + 1) };
+                        let slot = tail.fetch_add(1, Ordering::Relaxed);
+                        unsafe { front_ptr.write(slot, s as u32) };
+                    }
+                }
+            }
+            barrier.wait(parts);
+            if part == 0 {
+                let t = tail.load(Ordering::Relaxed);
+                wave_lo.store(whi, Ordering::Relaxed);
+                wave_hi.store(t, Ordering::Relaxed);
+                if t > whi {
+                    critical.store(cur as usize + 1, Ordering::Relaxed);
+                }
+            }
+            barrier.wait(parts);
+            cur += 1;
+        }
+    });
+    (level, critical.load(Ordering::Relaxed))
 }
 
 /// Group vertices by level into one concatenated, level-major order:
@@ -347,6 +482,67 @@ mod tests {
         let (levels, cp) = trisolve_levels_bwd(&g);
         assert_eq!(levels, vec![3, 2, 1, 1]);
         assert_eq!(cp, 3);
+    }
+
+    /// Deterministic strictly-lower pattern big enough for the pooled
+    /// wavefront: each column scatters into a few rows below it at
+    /// varied strides, giving a DAG with wide and narrow levels.
+    fn synthetic_lower_factor(n: usize) -> Csc {
+        let mut coo = Coo::new(n, n);
+        for k in 0..n {
+            let mut rows = std::collections::BTreeSet::new();
+            if k + 1 < n {
+                rows.insert(k + 1);
+            }
+            let far = k + 2 + (k % 37);
+            if far < n {
+                rows.insert(far);
+            }
+            let farther = k + 5 + (k % 101);
+            if farther < n && k % 3 != 0 {
+                rows.insert(farther);
+            }
+            for r in rows {
+                coo.push(r as u32, k as u32, -1.0);
+            }
+        }
+        Csc::from_csr(&coo.to_csr())
+    }
+
+    #[test]
+    fn trisolve_levels_par_matches_sequential() {
+        let g = synthetic_lower_factor(4096);
+        let (rows, _src) = g.to_csr_with_src();
+        let want_fwd = trisolve_levels(&g);
+        let want_bwd = trisolve_levels_bwd(&g);
+        assert!(want_fwd.1 > 3, "test DAG should have real depth");
+        for threads in [1, 2, 3, 4, 7] {
+            assert_eq!(trisolve_levels_par(&g, &rows, threads), want_fwd, "fwd threads={threads}");
+            assert_eq!(
+                trisolve_levels_bwd_par(&g, &rows, threads),
+                want_bwd,
+                "bwd threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn trisolve_levels_par_small_input_falls_back() {
+        // The hand-built 4-column factor from `factor_etree_and_levels`
+        // takes the sequential fallback but must agree exactly.
+        let mut coo = Coo::new(4, 4);
+        coo.push(1, 0, -0.5);
+        coo.push(3, 0, -0.5);
+        coo.push(2, 1, -1.0);
+        let g = crate::sparse::Csc::from_csr(&coo.to_csr());
+        let (rows, _src) = g.to_csr_with_src();
+        assert_eq!(trisolve_levels_par(&g, &rows, 4), (vec![1, 2, 3, 2], 3));
+        assert_eq!(trisolve_levels_bwd_par(&g, &rows, 4), (vec![3, 2, 1, 1], 3));
+        // Empty factor: everything level 1 on both sweeps.
+        let z = crate::sparse::Csc::zero(5);
+        let (zrows, _) = z.to_csr_with_src();
+        assert_eq!(trisolve_levels_par(&z, &zrows, 4), trisolve_levels(&z));
+        assert_eq!(trisolve_levels_bwd_par(&z, &zrows, 4), trisolve_levels_bwd(&z));
     }
 
     #[test]

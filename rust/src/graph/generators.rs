@@ -268,6 +268,32 @@ pub fn erdos_renyi(n: usize, avg_deg: f64, seed: u64) -> Laplacian {
     }
 }
 
+/// Random regular-ish expander: the union of `rounds` independent
+/// random Hamiltonian cycles (each a shuffled permutation of the
+/// vertices, closed into a ring). Every round is connected on its own,
+/// so the union is connected by construction; for `rounds ≥ 2` the
+/// result is an expander with high probability — constant degree
+/// `≈ 2·rounds`, no locality, and logarithmic diameter: the opposite
+/// corner of the suite from the meshes, and the adversarial case for
+/// every fill-reducing ordering. Parallel edges across rounds collapse
+/// by weight accumulation in the Laplacian assembly.
+pub fn expander(n: usize, rounds: usize, seed: u64) -> Laplacian {
+    assert!(n >= 3 && rounds >= 1);
+    let mut rng = Rng::new(seed);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut edges = Vec::with_capacity(rounds * n);
+    for _ in 0..rounds {
+        rng.shuffle(&mut perm);
+        for i in 0..n {
+            let a = perm[i];
+            let b = perm[(i + 1) % n];
+            // A permutation ring never yields a self-loop.
+            edges.push((a, b, 1.0));
+        }
+    }
+    Laplacian::from_edges(n, &edges, &format!("expander({n},r={rounds})"))
+}
+
 /// Path graph (worst-case sequential chain — critical-path stress test).
 pub fn path(n: usize) -> Laplacian {
     let edges: Vec<_> = (0..n as u32 - 1).map(|i| (i, i + 1, 1.0)).collect();
@@ -399,6 +425,22 @@ mod tests {
         l.validate().unwrap();
         let avg = 2.0 * l.num_edges() as f64 / l.n() as f64;
         assert!((avg - 6.0).abs() < 0.6, "avg degree {avg}");
+    }
+
+    #[test]
+    fn expander_is_connected_and_near_regular() {
+        let l = expander(600, 3, 7);
+        l.validate().unwrap();
+        let (_, ncomp) = l.components();
+        assert_eq!(ncomp, 1, "each Hamiltonian round is connected on its own");
+        // Every round gives each vertex exactly degree 2; merged
+        // parallel edges can only lower the count.
+        let degs: Vec<usize> =
+            (0..l.n()).map(|r| l.matrix.row_indices(r).len() - 1).collect();
+        assert!(degs.iter().all(|&d| (2..=6).contains(&d)), "degree outside [2, 2*rounds]");
+        // Deterministic per seed, distinct across seeds.
+        assert_eq!(l.matrix, expander(600, 3, 7).matrix);
+        assert_ne!(l.matrix, expander(600, 3, 8).matrix);
     }
 
     #[test]

@@ -35,6 +35,44 @@ pub struct Laplacian {
     pub name: String,
 }
 
+/// Content hash of a Laplacian, split into the two granularities the
+/// serving layer routes on (see [`crate::serve::FactorCache`]):
+///
+/// * `pattern` — dimension, kind, and sparsity structure only. Two
+///   Laplacians with equal `pattern` are candidates for the numeric
+///   [`refactorize`](crate::solver::Solver::refactorize_shared) path
+///   (same edges, possibly different weights).
+/// * `full` — `pattern` plus every weight, bit-exact
+///   (`f64::to_bits`). Two Laplacians with equal `full` describe the
+///   same operator and can share one cached factor outright.
+///
+/// Equal hashes are necessary but not sufficient (64-bit FNV-1a can
+/// collide); every consumer that acts on a match re-validates —
+/// the refactorize path's own pattern check rejects impostors with a
+/// typed error. The provenance `name` is deliberately excluded: the
+/// same graph built under two names is still the same operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// Structure-only hash (dimension + kind + CSR layout).
+    pub pattern: u64,
+    /// Structure-and-weights hash.
+    pub full: u64,
+}
+
+/// FNV-1a over the 8 bytes of `v` (little-endian).
+#[inline]
+fn fnv1a_u64(h: u64, v: u64) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = h;
+    for byte in v.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
 impl Laplacian {
     /// Number of vertices.
     pub fn n(&self) -> usize {
@@ -44,6 +82,29 @@ impl Laplacian {
     /// Number of undirected edges (off-diagonal nnz / 2).
     pub fn num_edges(&self) -> usize {
         (self.matrix.nnz() - self.matrix.diag().iter().filter(|d| **d != 0.0).count()) / 2
+    }
+
+    /// Content [`Fingerprint`] of this operator: one pass of FNV-1a
+    /// over the CSR structure (for [`Fingerprint::pattern`]) and a
+    /// second accumulation folding in the bit patterns of the weights
+    /// (for [`Fingerprint::full`]). O(nnz) — cheap next to a
+    /// factorization or a PCG solve, but callers issuing many requests
+    /// against one graph should compute it once and reuse it.
+    pub fn fingerprint(&self) -> Fingerprint {
+        let mut h = FNV_OFFSET;
+        h = fnv1a_u64(h, self.matrix.nrows as u64);
+        h = fnv1a_u64(h, self.kind as u64);
+        for &p in &self.matrix.indptr {
+            h = fnv1a_u64(h, p as u64);
+        }
+        for &c in &self.matrix.indices {
+            h = fnv1a_u64(h, c as u64);
+        }
+        let pattern = h;
+        for &v in &self.matrix.data {
+            h = fnv1a_u64(h, v.to_bits());
+        }
+        Fingerprint { pattern, full: h }
     }
 
     /// Build a Laplacian from an undirected weighted edge list.
@@ -255,6 +316,35 @@ mod tests {
         coo.push(1, 1, 0.5);
         coo.push_sym(0, 1, -1.0);
         assert!(Laplacian::ground_sdd(&coo.to_csr(), "bad").is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_weights_but_not_names() {
+        let a = Laplacian::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)], "a");
+        let same = Laplacian::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)], "other-name");
+        let reweighted = Laplacian::from_edges(3, &[(0, 1, 1.0), (1, 2, 3.0)], "a");
+        let other_pattern = Laplacian::from_edges(3, &[(0, 1, 1.0), (0, 2, 2.0)], "a");
+
+        // Same operator under a different name: identical fingerprint.
+        assert_eq!(a.fingerprint(), same.fingerprint());
+        // Same edges, new weights: pattern matches, full differs.
+        assert_eq!(a.fingerprint().pattern, reweighted.fingerprint().pattern);
+        assert_ne!(a.fingerprint().full, reweighted.fingerprint().full);
+        // Different edges: both differ.
+        assert_ne!(a.fingerprint().pattern, other_pattern.fingerprint().pattern);
+        assert_ne!(a.fingerprint().full, other_pattern.fingerprint().full);
+        // Deterministic across calls.
+        assert_eq!(a.fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_kinds() {
+        // A grounded block vs a graph Laplacian that happen to share
+        // dimensions must not collide via structure alone.
+        let lap = Laplacian::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)], "g");
+        let mut grounded = lap.clone();
+        grounded.kind = LapKind::Grounded;
+        assert_ne!(lap.fingerprint().pattern, grounded.fingerprint().pattern);
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub mod generators;
 pub mod laplacian;
 pub mod suite;
 
-pub use laplacian::{Laplacian, LapKind};
+pub use laplacian::{Fingerprint, Laplacian, LapKind};

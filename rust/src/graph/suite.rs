@@ -155,6 +155,28 @@ pub const SUITE: &[SuiteEntry] = &[
         },
     },
     SuiteEntry {
+        name: "com-Orkut",
+        class: "social",
+        build: |s| {
+            // Denser power-law tail than com-LiveJournal (higher m →
+            // fatter hubs) — the serving benchmark's cache-miss case.
+            let n = dims(s, 900, 7000, 28000);
+            generators::pref_attach(n, 16, 115)
+        },
+    },
+    SuiteEntry {
+        name: "rand_expander",
+        class: "expander",
+        build: |s| {
+            // Union of 3 random Hamiltonian cycles: constant degree,
+            // no locality, logarithmic diameter — the adversarial case
+            // for fill-reducing orderings (and connected by
+            // construction, see [`generators::expander`]).
+            let n = dims(s, 1500, 12000, 48000);
+            generators::expander(n, 3, 116)
+        },
+    },
+    SuiteEntry {
         name: "spe16m",
         class: "reservoir",
         build: |s| {

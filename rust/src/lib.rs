@@ -26,12 +26,19 @@
 //! solve-phase parallelism ([`solver::SolverBuilder::threads`] — SpMV
 //! row splits and level-scheduled triangular solves served by the
 //! persistent [`par`] worker pool), `build` factors once, and the
-//! session then solves any number of right-hand sides — one at a time
-//! ([`solver::Solver::solve_into`]) or as a batch
-//! ([`solver::Solver::solve_batch`], bit-identical to the loop) — with
-//! **zero heap allocations per PCG iteration** (the Krylov workspace is
-//! created once and reused; every error is a typed
-//! [`error::ParacError`], never a panic):
+//! session then solves any number of right-hand sides with **zero heap
+//! allocations per PCG iteration** (every error is a typed
+//! [`error::ParacError`], never a panic).
+//!
+//! The whole solve path runs through `&self` — a built session is
+//! immutable shared state (`Solver: Sync`, asserted at compile time in
+//! [`serve`]), and each call checks a Krylov workspace out of the
+//! session's pool. Any number of threads may call
+//! [`solver::Solver::solve_shared`] /
+//! [`solver::Solver::solve_batch_shared`] concurrently on one solver,
+//! bit-identically to a serial loop; [`solver::Solver::solve_into`] and
+//! [`solver::Solver::solve_batch`] remain as thin `&mut self` wrappers
+//! for single-owner code:
 //!
 //! ```
 //! use parac::factor::Engine;
@@ -71,7 +78,28 @@
 //! solver.refactorize(&heavy).expect("same pattern");
 //! assert!(solver.factor_stats().unwrap().symbolic_reused);
 //! assert!(solver.solve_into(&b3, &mut x).unwrap().converged);
+//!
+//! // The same session is safe to share: `solve_shared` takes `&self`,
+//! // so threads can solve concurrently with bit-identical results.
+//! let shared = &solver;
+//! std::thread::scope(|scope| {
+//!     scope.spawn(move || {
+//!         let mut x = vec![0.0; shared.n()];
+//!         assert!(shared.solve_shared(&b3, &mut x).unwrap().converged);
+//!     });
+//! });
 //! ```
+//!
+//! ## Serving: one factor, many clients
+//!
+//! The [`serve`] subsystem builds on the `&self` contract:
+//! [`serve::FactorCache`] keys built sessions by
+//! [`graph::Laplacian::fingerprint`] (repeat builds return the shared
+//! `Arc`; reweighted builds of a known pattern rerun only the numeric
+//! phase), and [`serve::SolveService`] admits requests from N client
+//! threads, coalescing compatible ones into batched solve waves. The
+//! `parac serve` subcommand and `benches/bench_serve.rs` measure the
+//! stack under open-loop load via [`coordinator::serve_driver`].
 //!
 //! The lower-level pieces remain public: [`factor::factorize`] produces
 //! the [`factor::LdlFactor`], [`precond`] wraps it (and every baseline
@@ -118,6 +146,7 @@ pub mod par;
 pub mod precond;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solve;
 pub mod solver;
 pub mod sparse;

@@ -29,6 +29,7 @@ fn main() {
             Ok(())
         }
         "repro" => repro_cmd(&args),
+        "serve" => serve_cmd(&args),
         _ => {
             help();
             Ok(())
@@ -55,6 +56,11 @@ USAGE:
                [--tol 1e-8] [--max-iter 1000] [--level-threads T] [--omega 1.5]
                [--droptol 1e-3] [engine/ordering flags]
   parac repro table2|table3|fig3|fig4|hash [--scale tiny|small|medium] [--threads T]
+  parac serve  --matrix NAME [--clients N[,N...]] [--requests R] [--interval-us U]
+               [--max-wave W] [--max-wait-us U] [--cache-cap C] [--threads T]
+               [--json PATH] [engine/ordering flags]
+               open-loop serving benchmark: N client threads share one
+               cached factor through coalesced solve waves
 "
     );
 }
@@ -185,6 +191,86 @@ fn solve_cmd(args: &Args) -> Result<(), ParacError> {
     print!("{}", t.render());
     if !r.converged {
         println!("(did not converge)");
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<(), ParacError> {
+    use parac::coordinator::serve_driver::{run_open_loop, LoadSpec};
+    use parac::serve::{FactorCache, ServeOptions, SolveService};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let lap = Arc::new(build_matrix(args)?);
+    let clients: Vec<usize> = args
+        .get("clients", "1,8")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&c| c > 0)
+        .collect();
+    if clients.is_empty() {
+        return Err(ParacError::BadInput("--clients needs at least one count".into()));
+    }
+    let builder = parac::solver::Solver::builder()
+        .parac_options(parac_opts(args)?)
+        .threads(args.get_parse("threads", 0usize))
+        .tol(args.get_parse("tol", 1e-8f64))
+        .max_iter(args.get_parse("max-iter", 1000usize));
+    let opts = ServeOptions {
+        max_wave: args.get_parse("max-wave", ServeOptions::default().max_wave),
+        max_wait: Duration::from_micros(args.get_parse("max-wait-us", 200u64)),
+    };
+    println!(
+        "{}: n={} nnz={}  max_wave={} max_wait={:?}",
+        lap.name,
+        fmt_count(lap.n()),
+        fmt_count(lap.matrix.nnz()),
+        opts.max_wave,
+        opts.max_wait
+    );
+    let mut t = Table::new(&[
+        "clients",
+        "solves",
+        "solves/s",
+        "p50 (ms)",
+        "p99 (ms)",
+        "waves",
+        "coalesced",
+    ]);
+    let mut rows = Vec::new();
+    for &c in &clients {
+        // A fresh service per client count: each row measures a cold
+        // cache warmed by exactly one untimed build.
+        let cache = FactorCache::new(builder.clone(), args.get_parse("cache-cap", 4usize));
+        let svc = SolveService::new(cache, opts);
+        let spec = LoadSpec {
+            clients: c,
+            requests_per_client: args.get_parse("requests", 32usize),
+            interval: Duration::from_micros(args.get_parse("interval-us", 500u64)),
+            seed: args.get_parse("rhs-seed", 7u64),
+        };
+        let rep = run_open_loop(&svc, &lap, &spec)?;
+        t.row(vec![
+            c.to_string(),
+            rep.solves.to_string(),
+            format!("{:.1}", rep.throughput),
+            format!("{:.3}", rep.p50_ms),
+            format!("{:.3}", rep.p99_ms),
+            rep.service.waves.to_string(),
+            rep.service.coalesced.to_string(),
+        ]);
+        rows.push(pipeline::BenchRow {
+            name: format!("{} clients={c}", lap.name),
+            fields: rep.fields(),
+        });
+    }
+    print!("{}", t.render());
+    let json = args.get("json", "");
+    if !json.is_empty() {
+        let path = std::path::Path::new(json);
+        pipeline::write_bench_rows_json(path, "serve", &rows)
+            .map_err(|e| ParacError::BadInput(format!("writing {json}: {e}")))?;
+        println!("wrote {json}");
     }
     Ok(())
 }

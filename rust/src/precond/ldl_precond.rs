@@ -10,24 +10,20 @@
 //! depth — with the `D⁻¹` scaling and the fill-reducing permutation
 //! fused into the boundary/scatter passes.
 //!
-//! The apply is allocation-free in **both** modes: the intermediates
-//! live in scratch buffers sized once at construction (behind an
-//! uncontended `Mutex` so the preconditioner stays `Sync`; PCG applies
-//! it sequentially, so the lock never blocks and never allocates), and
-//! pool dispatch allocates nothing after warm-up (see the assertion in
-//! `rust/tests/alloc_free.rs`).
+//! The apply is allocation-free in **both** modes when driven through
+//! [`Preconditioner::apply_scratch`]: every intermediate lives in the
+//! caller's scratch buffers (PCG hands in two reused workspace vectors
+//! per iteration), so the preconditioner itself holds **no mutable
+//! state at all** — factor, schedules and packed arrays are immutable
+//! after construction, and any number of concurrent solves can apply it
+//! through `&self`. Pool dispatch allocates nothing after warm-up (see
+//! the assertion in `rust/tests/alloc_free.rs`); concurrent dispatchers
+//! serialize on the pool's dispatch lock, preserving the one-dispatch-
+//! per-sweep contract per caller.
 
 use super::Preconditioner;
 use crate::factor::LdlFactor;
 use crate::solve::packed::{PackedSweeps, SweepCounters};
-use std::sync::Mutex;
-
-/// Reusable apply intermediates (one buffer per sweep direction; the
-/// sequential mode uses only the first).
-struct Scratch {
-    a: Vec<f64>,
-    b: Vec<f64>,
-}
 
 /// `z = (G D Gᵀ)⁺ r`, sequential or level-parallel (packed executor).
 pub struct LdlPrecond {
@@ -37,22 +33,16 @@ pub struct LdlPrecond {
     /// Level-width cutoff the packed analysis ran with — kept so a
     /// structure-changing refactorization can re-analyze identically.
     cutoff: usize,
-    scratch: Mutex<Scratch>,
 }
 
 impl LdlPrecond {
     /// Sequential-solve preconditioner.
     pub fn new(factor: LdlFactor) -> LdlPrecond {
-        let scratch = Scratch {
-            a: vec![0.0; if factor.perm.is_some() { factor.n() } else { 0 }],
-            b: Vec::new(),
-        };
         LdlPrecond {
             factor,
             packed: None,
             threads: 1,
             cutoff: crate::solve::packed::default_cutoff(),
-            scratch: Mutex::new(scratch),
         }
     }
 
@@ -75,8 +65,7 @@ impl LdlPrecond {
         cutoff: usize,
     ) -> LdlPrecond {
         let packed = PackedSweeps::analyze_with_opts(&factor, cutoff, threads);
-        let scratch = Scratch { a: vec![0.0; factor.n()], b: vec![0.0; factor.n()] };
-        LdlPrecond { factor, packed: Some(packed), threads, cutoff, scratch: Mutex::new(scratch) }
+        LdlPrecond { factor, packed: Some(packed), threads, cutoff }
     }
 
     /// Access the wrapped factor.
@@ -115,15 +104,17 @@ impl LdlPrecond {
 
 impl Preconditioner for LdlPrecond {
     fn apply_into(&self, r: &[f64], z: &mut [f64]) {
-        // A poisoned lock only means another apply panicked mid-solve;
-        // the buffer contents are overwritten anyway, so recover.
-        let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        // Convenience shim: allocates the scratch per call. The hot
+        // path is `apply_scratch` with reused caller buffers.
+        let mut a = vec![0.0; r.len()];
+        let mut b = vec![0.0; r.len()];
+        self.apply_scratch(r, z, &mut a, &mut b);
+    }
+
+    fn apply_scratch(&self, r: &[f64], z: &mut [f64], a: &mut [f64], b: &mut [f64]) {
         match &self.packed {
-            None => self.factor.solve_into(r, z, &mut scratch.a[..]),
-            Some(packed) => {
-                let Scratch { a, b } = &mut *scratch;
-                packed.apply_into(r, z, self.threads, &mut a[..], &mut b[..]);
-            }
+            None => self.factor.solve_into(r, z, a),
+            Some(packed) => packed.apply_into(r, z, self.threads, a, b),
         }
     }
 

@@ -11,15 +11,19 @@
 //!
 //! Everything implements [`Preconditioner`], the symmetric-apply trait
 //! [`crate::solve::pcg`] consumes. The primitive is the allocation-free
-//! [`Preconditioner::apply_into`] — PCG calls it once per iteration
-//! with reused buffers; the `Vec`-returning [`Preconditioner::apply`]
-//! is a default-method convenience shim on top. Every impl writes into
-//! the caller buffer without internal allocation, with one documented
-//! exception: [`AmgPrecond`] (its V-cycle allocates per-level
-//! temporaries; a setup-heavy baseline, not the hot path).
-//! [`LdlPrecond`] in level-scheduled mode runs the packed sweep
-//! executor ([`crate::solve::packed`]) on the persistent worker pool —
-//! one dispatch per sweep, zero allocation after pool warm-up.
+//! [`Preconditioner::apply_scratch`] — PCG calls it once per iteration
+//! with reused buffers from its workspace, and every intermediate lives
+//! in those caller buffers, so a built preconditioner is immutable
+//! shared state (`Send + Sync`, no interior mutability) that any number
+//! of concurrent solves can apply through `&self`. The `Vec`-returning
+//! [`Preconditioner::apply`] and the buffer-only
+//! [`Preconditioner::apply_into`] are convenience shims on top. One
+//! documented exception to allocation-freedom: [`AmgPrecond`] (its
+//! V-cycle allocates per-level temporaries; a setup-heavy baseline, not
+//! the hot path). [`LdlPrecond`] in level-scheduled mode runs the
+//! packed sweep executor ([`crate::solve::packed`]) on the persistent
+//! worker pool — one dispatch per sweep, zero allocation after pool
+//! warm-up.
 
 pub mod amg;
 pub mod ichol0;
@@ -36,14 +40,35 @@ pub use ssor::Ssor;
 use crate::sparse::Csr;
 
 /// A symmetric preconditioner application `z = M⁻¹ r`.
-pub trait Preconditioner: Sync {
+///
+/// The `Send + Sync` supertrait is load-bearing: a built preconditioner
+/// is immutable shared state, applied concurrently through `&self` from
+/// any number of solve calls (see [`crate::serve`]). All per-apply
+/// mutable state must come in through the caller via
+/// [`Preconditioner::apply_scratch`].
+pub trait Preconditioner: Send + Sync {
     /// Apply the preconditioner into a caller buffer: `z = M⁻¹ r`.
     ///
     /// `z.len()` must equal `r.len()`; every element of `z` is
-    /// overwritten (no prior contents are read). This is the hot-loop
-    /// primitive: implementations must not allocate unless documented
-    /// otherwise (only [`AmgPrecond`] does).
+    /// overwritten (no prior contents are read). Implementations whose
+    /// apply needs intermediates may allocate here — the allocation-free
+    /// hot-loop primitive is
+    /// [`apply_scratch`](Preconditioner::apply_scratch), which PCG calls
+    /// with reused caller buffers.
     fn apply_into(&self, r: &[f64], z: &mut [f64]);
+
+    /// Apply with caller-owned scratch: `z = M⁻¹ r`, using `a`/`b`
+    /// (each of length `r.len()`) for any intermediates.
+    ///
+    /// This is the hot-loop primitive: PCG calls it once per iteration
+    /// with buffers from its reused workspace, and implementations must
+    /// not allocate unless documented otherwise (only [`AmgPrecond`]
+    /// does). Preconditioners with no intermediates ignore the scratch;
+    /// the default forwards to [`apply_into`](Preconditioner::apply_into).
+    fn apply_scratch(&self, r: &[f64], z: &mut [f64], a: &mut [f64], b: &mut [f64]) {
+        let _ = (a, b);
+        self.apply_into(r, z);
+    }
 
     /// Allocating convenience shim over
     /// [`apply_into`](Preconditioner::apply_into).

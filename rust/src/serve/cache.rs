@@ -1,0 +1,299 @@
+//! The factor cache: build once, serve every later request for the
+//! same graph from the shared factor.
+//!
+//! A [`FactorCache`] maps [`Laplacian::fingerprint`] hashes to
+//! `Arc<Solver<'static>>` sessions built by one stored
+//! [`SolverBuilder`] configuration. Three outcomes per request, in
+//! decreasing order of luck:
+//!
+//! 1. **Hit** — the full fingerprint (structure + weights) is resident:
+//!    the `Arc` is cloned and returned. No ordering, no analysis, no
+//!    numeric work — the whole build is skipped.
+//! 2. **Refactorize** — the *pattern* is known but the weights are new
+//!    (a reweighted graph): the resident session is routed through
+//!    [`Solver::refactorize_shared`], rerunning only the numeric phase
+//!    on the frozen symbolic analysis (observable:
+//!    `factor_stats().symbolic_reused == true`). Falls back to a fresh
+//!    build when the resident session is still shared by in-flight
+//!    clients (mutating it under them would be unsound) or when the
+//!    pattern hash collided (the refactorize path's own structural
+//!    check rejects impostors with a typed error).
+//! 3. **Miss** — an unseen graph: a full build.
+//!
+//! Capacity is bounded: past `capacity` resident sessions the
+//! least-recently-used entry is evicted (clients already holding its
+//! `Arc` keep solving; the memory is reclaimed when the last clone
+//! drops). Builds happen **while holding the cache lock** — deliberate
+//! single-flight semantics: N clients racing for the same cold graph
+//! produce one build and N−1 hits, which is the right trade for a
+//! cache whose misses cost seconds while its hits cost nanoseconds.
+
+use crate::error::ParacError;
+use crate::graph::Laplacian;
+use crate::solver::{Solver, SolverBuilder};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counters describing a cache's traffic so far. Cheap to
+/// copy out; read via [`FactorCache::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Requests answered by a resident factor (no work at all).
+    pub hits: u64,
+    /// Requests answered by a fresh full build.
+    pub misses: u64,
+    /// Requests answered by the numeric-only refactorize path
+    /// (known pattern, new weights).
+    pub refactorizes: u64,
+    /// Resident sessions evicted to respect the capacity bound.
+    pub evictions: u64,
+}
+
+/// One resident factor.
+struct Entry {
+    solver: Arc<Solver<'static>>,
+    /// Pattern hash of the graph this session was built on, for
+    /// reverse-indexing on eviction.
+    pattern: u64,
+    /// Logical timestamp of the last touch (for LRU eviction).
+    last_used: u64,
+}
+
+struct Inner {
+    /// Resident sessions keyed by the **full** fingerprint hash.
+    entries: HashMap<u64, Entry>,
+    /// Pattern hash → full hash of the most recent resident session
+    /// with that structure (the refactorize-routing index).
+    patterns: HashMap<u64, u64>,
+    /// Logical clock; bumped per request.
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// A bounded cache of built solver sessions keyed by graph fingerprint.
+pub struct FactorCache {
+    builder: SolverBuilder,
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl FactorCache {
+    /// A cache that builds with `builder` and keeps at most `capacity`
+    /// resident sessions (clamped to at least 1).
+    pub fn new(builder: SolverBuilder, capacity: usize) -> FactorCache {
+        FactorCache {
+            builder,
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                patterns: HashMap::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// The builder configuration every cached session is built with.
+    pub fn builder(&self) -> &SolverBuilder {
+        &self.builder
+    }
+
+    /// Resident session count.
+    pub fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Traffic counters so far.
+    pub fn stats(&self) -> CacheStats {
+        self.lock().stats
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // Poisoning can only come from a panic inside a build; the maps
+        // themselves are always consistent (mutated between builds).
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Return the shared session for `lap`, building / refactorizing /
+    /// cloning as the fingerprint dictates (see the module docs for the
+    /// three outcomes).
+    pub fn get_or_build(&self, lap: &Arc<Laplacian>) -> Result<Arc<Solver<'static>>, ParacError> {
+        let fp = lap.fingerprint();
+        let mut guard = self.lock();
+        let inner = &mut *guard; // split-borrow the fields
+        inner.tick += 1;
+        let now = inner.tick;
+
+        if let Some(e) = inner.entries.get_mut(&fp.full) {
+            e.last_used = now;
+            inner.stats.hits += 1;
+            return Ok(e.solver.clone());
+        }
+
+        // Known structure, new weights → try the numeric-only path on
+        // the resident session, if no client still holds it.
+        if let Some(&resident_full) = inner.patterns.get(&fp.pattern) {
+            if let Some(mut entry) = inner.entries.remove(&resident_full) {
+                match Arc::get_mut(&mut entry.solver) {
+                    Some(solver) => match solver.refactorize_shared(lap.clone()) {
+                        Ok(()) => {
+                            inner.stats.refactorizes += 1;
+                            let shared = entry.solver.clone();
+                            entry.last_used = now;
+                            inner.entries.insert(fp.full, entry);
+                            inner.patterns.insert(fp.pattern, fp.full);
+                            return Ok(shared);
+                        }
+                        Err(ParacError::BadInput(_)) => {
+                            // Pattern-hash collision: the structural
+                            // check inside refactorize caught it. Put
+                            // the untouched session back and fall
+                            // through to a fresh build.
+                            inner.entries.insert(resident_full, entry);
+                        }
+                        Err(other) => {
+                            inner.entries.insert(resident_full, entry);
+                            return Err(other);
+                        }
+                    },
+                    None => {
+                        // Still shared by in-flight clients — leave it
+                        // resident for them and build fresh.
+                        inner.entries.insert(resident_full, entry);
+                    }
+                }
+            }
+        }
+
+        inner.stats.misses += 1;
+        let solver = Arc::new(self.builder.build_shared(lap.clone())?);
+        inner.entries.insert(
+            fp.full,
+            Entry { solver: solver.clone(), pattern: fp.pattern, last_used: now },
+        );
+        inner.patterns.insert(fp.pattern, fp.full);
+        self.evict_past_capacity(inner, fp.full);
+        Ok(solver)
+    }
+
+    /// Evict least-recently-used entries until the capacity bound
+    /// holds, never evicting `keep` (the entry serving the current
+    /// request).
+    fn evict_past_capacity(&self, inner: &mut Inner, keep: u64) {
+        while inner.entries.len() > self.capacity {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(full, _)| **full != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(full, e)| (*full, e.pattern));
+            let Some((full, pattern)) = victim else { break };
+            inner.entries.remove(&full);
+            inner.stats.evictions += 1;
+            // Drop the routing index only if it still points at the
+            // victim (a newer same-pattern entry may have re-aimed it).
+            if inner.patterns.get(&pattern) == Some(&full) {
+                inner.patterns.remove(&pattern);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn builder() -> SolverBuilder {
+        Solver::builder()
+    }
+
+    #[test]
+    fn repeated_requests_share_one_session() {
+        let cache = FactorCache::new(builder().seed(3), 4);
+        let lap = Arc::new(generators::grid2d(10, 10, generators::Coeff::Uniform, 0));
+        let a = cache.get_or_build(&lap).unwrap();
+        let b = cache.get_or_build(&lap).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second request must reuse the cached session");
+        // A structurally identical rebuild of the same graph (new
+        // allocation, same content) also hits.
+        let rebuilt = Arc::new(generators::grid2d(10, 10, generators::Coeff::Uniform, 0));
+        let c = cache.get_or_build(&rebuilt).unwrap();
+        assert!(Arc::ptr_eq(&a, &c));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.refactorizes), (2, 1, 0));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn reweighted_pattern_routes_through_refactorize() {
+        let cache = FactorCache::new(builder().seed(5), 4);
+        let lap = Arc::new(generators::grid2d(12, 12, generators::Coeff::Uniform, 0));
+        {
+            let first = cache.get_or_build(&lap).unwrap();
+            assert!(!first.factor_stats().unwrap().symbolic_reused);
+        } // drop the clone so the cache holds the only reference
+
+        let edges: Vec<(u32, u32, f64)> =
+            lap.edges().into_iter().map(|(a, b, w)| (a, b, w * 2.0)).collect();
+        let heavy = Arc::new(Laplacian::from_edges(lap.n(), &edges, "heavy"));
+        let second = cache.get_or_build(&heavy).unwrap();
+        assert!(
+            second.factor_stats().unwrap().symbolic_reused,
+            "reweighted build must skip the symbolic phase"
+        );
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.refactorizes), (0, 1, 1));
+
+        // Bit-identical to a fresh build on the new weights.
+        let fresh = builder().seed(5).build(&heavy).unwrap();
+        assert_eq!(second.factor().unwrap().g, fresh.factor().unwrap().g);
+        assert_eq!(second.factor().unwrap().diag, fresh.factor().unwrap().diag);
+    }
+
+    #[test]
+    fn shared_resident_session_is_not_mutated_under_clients() {
+        let cache = FactorCache::new(builder().seed(1), 4);
+        let lap = Arc::new(generators::grid2d(8, 8, generators::Coeff::Uniform, 0));
+        let held = cache.get_or_build(&lap).unwrap(); // client keeps this alive
+
+        let edges: Vec<(u32, u32, f64)> =
+            lap.edges().into_iter().map(|(a, b, w)| (a, b, w * 3.0)).collect();
+        let heavy = Arc::new(Laplacian::from_edges(lap.n(), &edges, "heavy"));
+        let other = cache.get_or_build(&heavy).unwrap();
+        assert!(!Arc::ptr_eq(&held, &other), "a held session must never be refactorized");
+        // The held session still solves its original system.
+        let b = crate::solve::pcg::random_rhs(&lap, 2);
+        let mut x = vec![0.0; lap.n()];
+        assert!(held.solve_shared(&b, &mut x).unwrap().converged);
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.refactorizes), (0, 2, 0));
+    }
+
+    #[test]
+    fn capacity_bound_evicts_least_recently_used() {
+        let cache = FactorCache::new(builder().seed(2), 2);
+        let laps: Vec<Arc<Laplacian>> = (0..3)
+            .map(|i| {
+                Arc::new(generators::grid2d(6 + i, 6, generators::Coeff::Uniform, 0))
+            })
+            .collect();
+        cache.get_or_build(&laps[0]).unwrap();
+        cache.get_or_build(&laps[1]).unwrap();
+        cache.get_or_build(&laps[0]).unwrap(); // touch 0 → 1 is LRU
+        cache.get_or_build(&laps[2]).unwrap(); // evicts 1
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // 0 is still resident (hit), 1 must rebuild (miss).
+        let before = cache.stats().misses;
+        cache.get_or_build(&laps[0]).unwrap();
+        assert_eq!(cache.stats().misses, before);
+        cache.get_or_build(&laps[1]).unwrap();
+        assert_eq!(cache.stats().misses, before + 1);
+    }
+}

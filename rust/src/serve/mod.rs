@@ -1,0 +1,51 @@
+//! The serving subsystem: one factor, many concurrent clients.
+//!
+//! The paper's economics — a randomized Cholesky factor is cheap to
+//! build and amortized over many PCG solves — only pay off at scale if
+//! *many callers* can ride one factor at once. This module supplies the
+//! three layers that make that true:
+//!
+//! * [`workspace`] — [`WorkspacePool`]: per-call [`crate::solve::pcg::PcgWorkspace`]
+//!   checkout, the mechanism behind the `&self` solve path
+//!   ([`crate::solver::Solver::solve_shared`] /
+//!   [`crate::solver::Solver::solve_batch_shared`]). The session's
+//!   factor, ordering maps, and packed sweep arrays are immutable
+//!   shared state; everything mutable is checked out per call.
+//! * [`cache`] — [`FactorCache`]: a bounded
+//!   [`Laplacian::fingerprint`](crate::graph::Laplacian::fingerprint)-keyed
+//!   cache of built sessions. Repeated builds of the same graph return
+//!   one `Arc`-shared solver; reweighted builds of a known pattern
+//!   rerun only the numeric phase
+//!   ([`crate::solver::Solver::refactorize_shared`]).
+//! * [`service`] — [`SolveService`]: request admission from N client
+//!   threads, coalescing compatible requests for the same factor into
+//!   [`crate::solver::Solver::solve_batch_shared`] waves under
+//!   bounded-wait / max-wave knobs ([`ServeOptions`]).
+//!
+//! Every layer preserves **bit-identity**: a request served through the
+//! pool, the cache, and a coalesced wave returns exactly the bits a
+//! lone sequential [`crate::solver::Solver::solve_into`] call would
+//! (asserted in `rust/tests/serve.rs` and `rust/tests/alloc_free.rs`).
+//! The `parac serve` CLI subcommand and `benches/bench_serve.rs` drive
+//! this stack under open-loop load via
+//! [`crate::coordinator::serve_driver`].
+
+pub mod cache;
+pub mod service;
+pub mod workspace;
+
+pub use cache::{CacheStats, FactorCache};
+pub use service::{ServeOptions, ServiceStats, SolveService};
+pub use workspace::WorkspacePool;
+
+// The load-bearing property of the whole subsystem, checked at compile
+// time: a built session is immutable shared state, safe to hand to any
+// number of threads. If a future change smuggles non-Sync interior
+// state into the solve path, this fails to compile.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<crate::solver::Solver<'static>>();
+    assert_send_sync::<WorkspacePool>();
+    assert_send_sync::<FactorCache>();
+    assert_send_sync::<SolveService>();
+};

@@ -1,0 +1,362 @@
+//! Request admission and wave coalescing: many client threads, few
+//! `solve_batch` waves.
+//!
+//! [`SolveService`] fronts a [`FactorCache`] with one [`BatchGate`] per
+//! resident operator. A gate implements **leader-based group commit**
+//! (the classic WAL trick, applied to solves): the first request to
+//! arrive for an operator becomes the wave *leader* and waits — up to
+//! [`ServeOptions::max_wait`] — for followers targeting the same
+//! factor; the wave seals early the moment it reaches
+//! [`ServeOptions::max_wave`] requests. The leader then runs the whole
+//! wave through [`Solver::solve_batch_shared`] on the shared session
+//! and hands each follower its solution through the gate. Requests for
+//! *different* operators never wait on each other (separate gates), and
+//! waves for the same operator may overlap (a new leader can start
+//! collecting while the previous wave is still solving) — the solver is
+//! `Sync`, so overlap is safe and bit-identity is preserved: every
+//! right-hand side is solved from a zero initial guess by the same
+//! arithmetic as a lone [`Solver::solve_shared`] call.
+//!
+//! No background threads anywhere: the service borrows its clients'
+//! threads, so a binary that drops the service leaks nothing.
+
+use crate::error::ParacError;
+use crate::graph::Laplacian;
+use crate::serve::cache::FactorCache;
+use crate::solve::pcg::SolveStats;
+use crate::solver::Solver;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Coalescing knobs for a [`SolveService`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Seal a wave as soon as it holds this many requests (1 =
+    /// never coalesce; every request solves immediately).
+    pub max_wave: usize,
+    /// Seal a wave after the leader has waited this long, full or not.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_wave: 8, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Outcome of one request: the solution and its solve stats.
+type WaveItem = Result<(Vec<f64>, SolveStats), ParacError>;
+
+/// State behind one gate's lock.
+struct GateState {
+    /// Right-hand sides of the wave currently collecting.
+    pending: Vec<Vec<f64>>,
+    /// Generation number of the collecting wave (bumped at seal, so a
+    /// late arrival starts the next wave instead of joining a sealed
+    /// one).
+    generation: u64,
+    /// Finished results, keyed by (generation, index-within-wave);
+    /// each follower removes exactly its own.
+    results: HashMap<(u64, usize), WaveItem>,
+}
+
+/// One operator's group-commit gate.
+struct BatchGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl BatchGate {
+    fn new() -> BatchGate {
+        BatchGate {
+            state: Mutex::new(GateState {
+                pending: Vec::new(),
+                generation: 0,
+                results: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit one request; returns its solution when the wave it joined
+    /// has been solved, plus `Some(wave_size)` when this thread led the
+    /// wave (for the caller's traffic accounting). The calling thread
+    /// either leads the wave (collect, seal, solve, distribute) or
+    /// follows (wait for the leader's hand-off).
+    fn solve(
+        &self,
+        solver: &Solver<'static>,
+        b: &[f64],
+        opts: &ServeOptions,
+    ) -> (WaveItem, Option<usize>) {
+        let (my_gen, my_idx) = {
+            let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            let slot = (st.generation, st.pending.len());
+            st.pending.push(b.to_vec());
+            if st.pending.len() >= opts.max_wave.max(1) {
+                // Wave full — wake the leader immediately.
+                self.cv.notify_all();
+            }
+            slot
+        };
+
+        if my_idx == 0 {
+            self.lead(solver, my_gen, opts)
+        } else {
+            (self.follow(my_gen, my_idx), None)
+        }
+    }
+
+    /// Leader: wait out the coalescing window, seal, solve the wave,
+    /// distribute results, return our own plus the wave size.
+    fn lead(
+        &self,
+        solver: &Solver<'static>,
+        my_gen: u64,
+        opts: &ServeOptions,
+    ) -> (WaveItem, Option<usize>) {
+        let deadline = Instant::now() + opts.max_wait;
+        let batch = {
+            let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if st.pending.len() >= opts.max_wave.max(1) {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            // Seal: take the wave, open the next generation.
+            st.generation += 1;
+            std::mem::take(&mut st.pending)
+        };
+
+        let wave = batch.len();
+        let bs: Vec<&[f64]> = batch.iter().map(|b| b.as_slice()).collect();
+        let mut xs = vec![Vec::new(); wave];
+        let mut stats = Vec::new();
+        let outcome = solver.solve_batch_shared(&bs, &mut xs, &mut stats);
+
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let mine = match outcome {
+            Ok(()) => {
+                // Hand each follower its solution (reverse order so the
+                // index-0 pop below is ours).
+                let mut pairs: Vec<WaveItem> =
+                    xs.into_iter().zip(stats).map(Ok).collect();
+                for idx in (1..wave).rev() {
+                    let item = pairs.pop().expect("one result per request");
+                    st.results.insert((my_gen, idx), item);
+                }
+                pairs.pop().expect("leader's own result")
+            }
+            Err(e) => {
+                for idx in 1..wave {
+                    st.results.insert((my_gen, idx), Err(e.clone()));
+                }
+                Err(e)
+            }
+        };
+        drop(st);
+        self.cv.notify_all();
+        (mine, Some(wave))
+    }
+
+    /// Follower: wait until the leader posts our result.
+    fn follow(&self, my_gen: u64, my_idx: usize) -> WaveItem {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(item) = st.results.remove(&(my_gen, my_idx)) {
+                return item;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Aggregate service traffic counters (monotonic, lock-free reads).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Requests admitted.
+    pub requests: u64,
+    /// `solve_batch` waves executed.
+    pub waves: u64,
+    /// Requests beyond the first in each wave — the solves that rode
+    /// another request's admission instead of paying their own.
+    pub coalesced: u64,
+}
+
+/// A concurrent solve front end: factor cache + per-operator
+/// group-commit gates.
+pub struct SolveService {
+    cache: FactorCache,
+    opts: ServeOptions,
+    gates: Mutex<HashMap<u64, Arc<BatchGate>>>,
+    requests: AtomicU64,
+    waves: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+impl SolveService {
+    /// A service over `cache` with the given coalescing options.
+    pub fn new(cache: FactorCache, opts: ServeOptions) -> SolveService {
+        SolveService {
+            cache,
+            opts,
+            gates: Mutex::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            waves: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// The factor cache behind this service.
+    pub fn cache(&self) -> &FactorCache {
+        &self.cache
+    }
+
+    /// The coalescing options this service admits requests under.
+    pub fn options(&self) -> &ServeOptions {
+        &self.opts
+    }
+
+    /// Traffic counters so far.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Solve `L x = b` for `lap`, sharing factors through the cache and
+    /// riding a coalesced wave when other clients target the same
+    /// operator inside the window. Blocks the calling thread until the
+    /// wave completes; returns the owned solution plus its stats.
+    /// Bit-identical to [`Solver::solve_shared`] on the cached session.
+    pub fn solve(
+        &self,
+        lap: &Arc<Laplacian>,
+        b: &[f64],
+    ) -> Result<(Vec<f64>, SolveStats), ParacError> {
+        let solver = self.cache.get_or_build(lap)?;
+        let gate = self.gate_for(lap.fingerprint().full);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let (out, led) = gate.solve(&solver, b, &self.opts);
+        if let Some(wave) = led {
+            self.waves.fetch_add(1, Ordering::Relaxed);
+            self.coalesced.fetch_add(wave.saturating_sub(1) as u64, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// The gate for one resident operator, created on first use. A
+    /// refactorized or rebuilt operator has a new full-fingerprint and
+    /// therefore a fresh gate; stale gates are retained (bounded by the
+    /// number of distinct operators ever served — same order as the
+    /// cache's own key history).
+    fn gate_for(&self, full: u64) -> Arc<BatchGate> {
+        let mut gates = self.gates.lock().unwrap_or_else(|p| p.into_inner());
+        gates.entry(full).or_insert_with(|| Arc::new(BatchGate::new())).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::solve::pcg;
+
+    fn service(max_wave: usize, max_wait: Duration) -> SolveService {
+        let cache = FactorCache::new(Solver::builder().seed(7), 4);
+        SolveService::new(cache, ServeOptions { max_wave, max_wait })
+    }
+
+    #[test]
+    fn single_request_solves_immediately_with_wave_of_one() {
+        // max_wave = 1: the leader seals without waiting.
+        let svc = service(1, Duration::from_secs(10));
+        let lap = Arc::new(generators::grid2d(10, 10, generators::Coeff::Uniform, 0));
+        let b = pcg::random_rhs(&lap, 1);
+        let (x, stats) = svc.solve(&lap, &b).unwrap();
+        assert!(stats.converged);
+        // Bit-identical to the shared-session primitive.
+        let solver = svc.cache().get_or_build(&lap).unwrap();
+        let mut want = vec![0.0; lap.n()];
+        solver.solve_shared(&b, &mut want).unwrap();
+        assert_eq!(x, want);
+        assert_eq!(svc.stats().requests, 1);
+        assert_eq!(svc.stats().waves, 1);
+    }
+
+    #[test]
+    fn full_wave_coalesces_and_stays_bit_identical() {
+        // N clients + max_wave = N + a generous window: exactly one
+        // wave, every result bit-identical to serial solves.
+        const CLIENTS: usize = 8;
+        let svc = service(CLIENTS, Duration::from_secs(30));
+        let lap = Arc::new(generators::grid2d(12, 12, generators::Coeff::Uniform, 0));
+        let rhs: Vec<Vec<f64>> =
+            (0..CLIENTS).map(|i| pcg::random_rhs(&lap, 100 + i as u64)).collect();
+
+        let got: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = rhs
+                .iter()
+                .map(|b| {
+                    let svc = &svc;
+                    let lap = &lap;
+                    scope.spawn(move || svc.solve(lap, b).unwrap().0)
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let solver = svc.cache().get_or_build(&lap).unwrap();
+        let mut want = vec![0.0; lap.n()];
+        for (b, x) in rhs.iter().zip(&got) {
+            solver.solve_shared(b, &mut want).unwrap();
+            assert_eq!(x, &want, "coalesced result deviates from serial reference");
+        }
+        let st = svc.stats();
+        assert_eq!(st.requests as usize, CLIENTS);
+        assert_eq!(st.waves, 1, "all {CLIENTS} requests must ride one wave");
+        assert_eq!(st.coalesced as usize, CLIENTS - 1);
+    }
+
+    #[test]
+    fn bounded_wait_seals_partial_waves() {
+        // A lone request against a huge max_wave must still return,
+        // after ~max_wait.
+        let svc = service(64, Duration::from_millis(5));
+        let lap = Arc::new(generators::grid2d(8, 8, generators::Coeff::Uniform, 0));
+        let b = pcg::random_rhs(&lap, 3);
+        let t0 = Instant::now();
+        let (_, stats) = svc.solve(&lap, &b).unwrap();
+        assert!(stats.converged);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "window must be honored");
+    }
+
+    #[test]
+    fn distinct_graphs_use_distinct_gates_and_cache_entries() {
+        let svc = service(4, Duration::from_millis(1));
+        let a = Arc::new(generators::grid2d(8, 8, generators::Coeff::Uniform, 0));
+        let bgraph = Arc::new(generators::grid2d(9, 9, generators::Coeff::Uniform, 0));
+        for lap in [&a, &bgraph] {
+            let b = pcg::random_rhs(lap, 4);
+            assert!(svc.solve(lap, &b).unwrap().1.converged);
+        }
+        assert_eq!(svc.cache().len(), 2);
+        assert_eq!(svc.cache().stats().misses, 2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Per-call workspace checkout — the mechanism that makes the solve
+//! path `&self`.
+//!
+//! A [`WorkspacePool`] owns every [`PcgWorkspace`] a
+//! [`crate::solver::Solver`] session will ever use. A solve checks one
+//! out on entry and returns it on exit; concurrent solves each get
+//! their own, so the session itself carries **no per-solve mutable
+//! state**. The pool grows lazily to the peak concurrency ever seen
+//! (each growth step allocates one workspace) and then recycles
+//! forever: the steady state is pop/push on a `Mutex<Vec<_>>` — no
+//! heap allocation, a few nanoseconds of uncontended lock — which is
+//! what keeps the zero-allocations-per-solve contract of
+//! `rust/tests/alloc_free.rs` intact under concurrency.
+
+use crate::solve::pcg::PcgWorkspace;
+use std::sync::Mutex;
+
+/// How many returned-workspace slots the free list pre-reserves, so
+/// restores never reallocate the list until concurrency exceeds this.
+const FREE_LIST_RESERVE: usize = 32;
+
+/// A checkout pool of [`PcgWorkspace`]s, all sized for one operator
+/// dimension.
+pub struct WorkspacePool {
+    /// Operator dimension every checked-out workspace is sized for.
+    n: usize,
+    /// Idle workspaces, warm from previous solves.
+    free: Mutex<Vec<PcgWorkspace>>,
+}
+
+impl WorkspacePool {
+    /// A pool for dimension `n`, pre-warmed with one workspace (the
+    /// single-caller steady state never allocates).
+    pub fn new(n: usize) -> WorkspacePool {
+        let mut free = Vec::with_capacity(FREE_LIST_RESERVE);
+        free.push(PcgWorkspace::new(n));
+        WorkspacePool { n, free: Mutex::new(free) }
+    }
+
+    /// Dimension the pool's workspaces are sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Idle workspaces currently in the pool (diagnostic; racy under
+    /// concurrency by nature).
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// Pre-create workspaces until at least `count` are resident, so a
+    /// known client fleet can warm the pool before a measured or
+    /// allocation-audited window.
+    pub fn warm(&self, count: usize) {
+        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+        while free.len() < count {
+            free.push(PcgWorkspace::new(self.n));
+        }
+    }
+
+    /// Take a workspace out of the pool (allocating a fresh one only
+    /// when every resident workspace is already checked out — i.e. when
+    /// this call raises the peak concurrency).
+    pub fn checkout(&self) -> PcgWorkspace {
+        let recycled = {
+            // A poisoned lock only means a solve panicked while
+            // checking out or restoring; the list is still valid.
+            let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+            free.pop()
+        };
+        recycled.unwrap_or_else(|| PcgWorkspace::new(self.n))
+    }
+
+    /// Return a workspace after a solve. Its buffers (and the free
+    /// list's capacity) are retained, so the next checkout is
+    /// allocation-free.
+    pub fn restore(&self, ws: PcgWorkspace) {
+        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+        free.push(ws);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_recycles_and_grows_on_demand() {
+        let pool = WorkspacePool::new(64);
+        assert_eq!(pool.n(), 64);
+        assert_eq!(pool.idle(), 1);
+        let a = pool.checkout();
+        assert_eq!(pool.idle(), 0);
+        // Pool empty: a second checkout mints a new workspace.
+        let b = pool.checkout();
+        pool.restore(a);
+        pool.restore(b);
+        assert_eq!(pool.idle(), 2);
+        // Warm to a fleet size.
+        pool.warm(8);
+        assert_eq!(pool.idle(), 8);
+        pool.warm(4); // never shrinks
+        assert_eq!(pool.idle(), 8);
+    }
+}

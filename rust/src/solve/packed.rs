@@ -279,26 +279,28 @@ impl PackedSweeps {
     }
 
     /// [`PackedSweeps::analyze_with_cutoff`] with up to `threads` pool
-    /// workers cooperating on the analysis itself: the level bucketing
-    /// and the level-major packing copies run as pooled two-pass
-    /// scatters with exact per-part offsets, so the product is
-    /// **bit-identical** for every thread count (asserted across the
+    /// workers cooperating on the analysis itself: the level schedules
+    /// run as Kahn wavefronts ([`etree::trisolve_levels_par`]), and the
+    /// level bucketing and level-major packing copies run as pooled
+    /// two-pass scatters with exact per-part offsets — so the product
+    /// is **bit-identical** for every thread count (asserted across the
     /// generator suite in `rust/tests/properties.rs`).
     pub fn analyze_with_opts(f: &LdlFactor, cutoff: usize, threads: usize) -> PackedSweeps {
         let cutoff = cutoff.max(1);
         let threads = threads.max(1);
-        let (fwd_levels, fwd_max) = etree::trisolve_levels(&f.g);
-        let (bwd_levels, bwd_max) = etree::trisolve_levels_bwd(&f.g);
-        let (fwd_order, fwd_lev) = etree::bucket_by_level_par(&fwd_levels, fwd_max, threads);
-        let (bwd_order, bwd_lev) = etree::bucket_by_level_par(&bwd_levels, bwd_max, threads);
-        let fwd_pos = invert_order(&fwd_order, threads);
-        let bwd_pos = invert_order(&bwd_order, threads);
         // Forward packing reads rows of `G`; one transient CSR
         // transpose (with value provenance for `refill`) is
         // materialized here and dropped after packing, so the resident
         // footprint is two packed copies (one per sweep) plus the
-        // entry-sized provenance map.
+        // entry-sized provenance map. The transpose is taken first so
+        // the pooled level schedules can walk both DAG directions.
         let (g_rows, g_src) = f.g.to_csr_with_src();
+        let (fwd_levels, fwd_max) = etree::trisolve_levels_par(&f.g, &g_rows, threads);
+        let (bwd_levels, bwd_max) = etree::trisolve_levels_bwd_par(&f.g, &g_rows, threads);
+        let (fwd_order, fwd_lev) = etree::bucket_by_level_par(&fwd_levels, fwd_max, threads);
+        let (bwd_order, bwd_lev) = etree::bucket_by_level_par(&bwd_levels, bwd_max, threads);
+        let fwd_pos = invert_order(&fwd_order, threads);
+        let bwd_pos = invert_order(&bwd_order, threads);
         let fwd = PackedTri::build(
             &fwd_order,
             fwd_lev,

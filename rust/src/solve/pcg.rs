@@ -13,9 +13,14 @@
 //!   live in a caller-owned [`PcgWorkspace`], the solution is written
 //!   into a caller buffer, and after the workspace is warm **no heap
 //!   allocation happens per iteration** (the preconditioner applies via
-//!   [`Preconditioner::apply_into`], the operator via
-//!   [`LinearOperator::apply_to`]). This is what
-//!   [`crate::solver::Solver`] drives for repeated right-hand sides.
+//!   [`Preconditioner::apply_scratch`] with scratch slices from the
+//!   same workspace, the operator via [`LinearOperator::apply_to`]).
+//!   Nothing here mutates the operator or the preconditioner, so any
+//!   number of `solve_into` calls can run concurrently against the same
+//!   `A` and `M` as long as each brings its own workspace — the
+//!   foundation of the `&self` solve path in [`crate::solver::Solver`]
+//!   and [`crate::serve`]. This is what [`crate::solver::Solver`]
+//!   drives for repeated right-hand sides.
 //!
 //! The operator is any [`LinearOperator`] — [`crate::sparse::Csr`] or a
 //! matrix-free implementation. Non-convergence is reported as data
@@ -108,6 +113,10 @@ pub struct PcgWorkspace {
     p: Vec<f64>,
     /// Operator-applied direction `A p`.
     ap: Vec<f64>,
+    /// Preconditioner scratch (first sweep direction / permuted copy).
+    pre_a: Vec<f64>,
+    /// Preconditioner scratch (second sweep direction).
+    pre_b: Vec<f64>,
     /// Per-iteration relative residuals of the most recent solve (only
     /// filled when `keep_history` is on; capacity is retained across
     /// solves, so steady-state pushes don't allocate).
@@ -131,6 +140,8 @@ impl PcgWorkspace {
             self.z.resize(n, 0.0);
             self.p.resize(n, 0.0);
             self.ap.resize(n, 0.0);
+            self.pre_a.resize(n, 0.0);
+            self.pre_b.resize(n, 0.0);
         }
     }
 
@@ -138,6 +149,15 @@ impl PcgWorkspace {
     /// unless `keep_history` was set).
     pub fn history(&self) -> &[f64] {
         &self.history
+    }
+
+    /// Exchange the history buffer with `buf` (O(1), no allocation):
+    /// the most recent solve's history moves out to the caller and the
+    /// caller's buffer — typically last round's, with its capacity —
+    /// moves in for reuse. This is how [`crate::solver::Solver`] hands
+    /// workspace-pool histories to its session-level store.
+    pub fn swap_history(&mut self, buf: &mut Vec<f64>) {
+        std::mem::swap(&mut self.history, buf);
     }
 }
 
@@ -188,12 +208,14 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
     ws.ensure(n);
     ws.history.clear();
     let sweeps_before = m.sweep_counters().unwrap_or_default();
-    let (bwork, r, z, p, ap) = (
+    let (bwork, r, z, p, ap, pre_a, pre_b) = (
         &mut ws.bwork[..n],
         &mut ws.r[..n],
         &mut ws.z[..n],
         &mut ws.p[..n],
         &mut ws.ap[..n],
+        &mut ws.pre_a[..n],
+        &mut ws.pre_b[..n],
     );
     bwork.copy_from_slice(b);
     if opts.project {
@@ -203,7 +225,7 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
 
     x.fill(0.0);
     r.copy_from_slice(bwork);
-    m.apply_into(r, z);
+    m.apply_scratch(r, z, pre_a, pre_b);
     // The projection of `z` is never materialized: its mean is folded
     // into the dot and the search-direction write (`mz = 0.0` when not
     // projecting — IEEE `x − 0.0 ≡ x`, so one code path serves both).
@@ -237,7 +259,7 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
             converged = true;
             break;
         }
-        m.apply_into(r, z);
+        m.apply_scratch(r, z, pre_a, pre_b);
         let mz = if opts.project { mean(z) } else { 0.0 };
         let rz_new = fused_project_dot(r, z, mz);
         let beta = rz_new / rz;

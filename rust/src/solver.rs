@@ -10,17 +10,36 @@
 //! the setup work (ordering, factorization, level-schedule analysis,
 //! workspace sizing) and returns a typed
 //! [`ParacError`](crate::error::ParacError) on bad input — nothing on
-//! this surface panics. [`Solver::solve_into`] then performs **zero
-//! heap allocations per PCG iteration** (asserted by the
-//! tracking-allocator test in `rust/tests/alloc_free.rs`): the Krylov
-//! vectors live in an internal [`PcgWorkspace`], and every
-//! preconditioner applies via
-//! [`Preconditioner::apply_into`](crate::precond::Preconditioner::apply_into).
-//! One configuration allocates by design and is exempt from that
-//! contract: AMG (V-cycle temporaries). Everything else — including
-//! multi-threaded sessions, whose SpMV and level-scheduled triangular
-//! solves dispatch onto the persistent [`crate::par`] worker pool —
-//! allocates nothing after the pool is warm.
+//! this surface panics.
+//!
+//! ## The `&self` solve contract
+//!
+//! A built session is **immutable shared state**: the operator, the
+//! factor, the ordering maps, and the packed sweep arrays are frozen at
+//! build time, and every per-solve intermediate lives in a
+//! [`PcgWorkspace`] checked out from an internal
+//! [`WorkspacePool`](crate::serve::WorkspacePool) for the duration of
+//! one call. The primitives are therefore `&self`:
+//! [`Solver::solve_shared`] and [`Solver::solve_batch_shared`] can be
+//! called **concurrently from any number of threads** on one shared
+//! `Solver` (it is `Sync`, asserted statically in [`crate::serve`]),
+//! each call bit-identical to the same call made alone. The historical
+//! `&mut self` entry points — [`Solver::solve`],
+//! [`Solver::solve_into`], [`Solver::solve_batch`] — remain as thin
+//! wrappers over the shared primitives for single-owner code.
+//!
+//! [`Solver::solve_into`] performs **zero heap allocations per PCG
+//! iteration** (asserted by the tracking-allocator test in
+//! `rust/tests/alloc_free.rs`): workspaces are recycled through the
+//! pool, and every preconditioner applies via
+//! [`Preconditioner::apply_scratch`](crate::precond::Preconditioner::apply_scratch)
+//! into workspace scratch. One configuration allocates by design and is
+//! exempt from that contract: AMG (V-cycle temporaries). Everything
+//! else — including multi-threaded sessions, whose SpMV and
+//! level-scheduled triangular solves dispatch onto the persistent
+//! [`crate::par`] worker pool — allocates nothing after the pool is
+//! warm (concurrent callers that deepen the workspace pool allocate
+//! only while it grows to the peak concurrency).
 //!
 //! Parallelism and batching are session knobs:
 //! * [`SolverBuilder::threads`] sets how many pool workers the solve
@@ -33,10 +52,14 @@
 //!   `precond_dispatches`/`precond_barriers` fields of [`SolveStats`];
 //!   [`SolverBuilder::level_cutoff`] tunes the width below which a
 //!   level stays sequential). The default of 1 keeps the solve fully
-//!   sequential.
+//!   sequential. Concurrent callers' sweep dispatches serialize on the
+//!   worker pool's dispatch lock — they block briefly, never error.
 //! * [`Solver::solve_batch`] runs many right-hand sides through one
 //!   session: one factor, one pool, one workspace, results
 //!   **bit-identical** to looping [`Solver::solve_into`] per RHS.
+//! * [`SolverBuilder::build_shared`] returns a `Solver<'static>` that
+//!   **owns** its Laplacian through an [`Arc`] — the form the
+//!   [`crate::serve`] factor cache stores and shares across clients.
 //!
 //! Three entry points cover the workload spectrum:
 //! * [`SolverBuilder::build`] — a graph [`Laplacian`] (possibly
@@ -77,10 +100,12 @@ use crate::precond::{
     AmgPrecond, Ichol0, IcholT, IdentityPrecond, JacobiPrecond, LdlPrecond, Preconditioner, Ssor,
 };
 use crate::precond::amg::AmgOptions;
+use crate::serve::WorkspacePool;
 use crate::solve::linop::LinearOperator;
 use crate::solve::pcg::{self, PcgOptions, PcgResult, PcgWorkspace, SolveStats};
 use crate::sparse::Csr;
 use crate::util::Timer;
+use std::sync::{Arc, Mutex};
 
 /// Which preconditioner a [`Solver`] builds — ParAC plus every baseline
 /// the paper compares against, and the extra ablation baselines.
@@ -335,6 +360,23 @@ impl SolverBuilder {
         Ok(self.assemble(op, pre, stats, symbolic, project, timer.secs()))
     }
 
+    /// [`SolverBuilder::build`] for a **shared** (reference-counted)
+    /// Laplacian: the session keeps the [`Arc`] instead of a borrow, so
+    /// the returned `Solver<'static>` has no lifetime tie to the caller
+    /// and can itself be put behind an `Arc` and handed to any number
+    /// of threads — the form [`crate::serve::FactorCache`] stores.
+    /// Reweighting goes through [`Solver::refactorize_shared`].
+    pub fn build_shared(&self, lap: Arc<Laplacian>) -> Result<Solver<'static>, ParacError> {
+        if lap.n() == 0 {
+            return Err(ParacError::BadInput("empty matrix".into()));
+        }
+        let timer = Timer::start();
+        let (pre, stats, symbolic) = self.build_precond(&lap)?;
+        let project = self.project.unwrap_or(lap.kind == LapKind::Graph);
+        let op = SessionOp::OwnedLap { lap, threads: self.solve_threads() };
+        Ok(self.assemble(op, pre, stats, symbolic, project, timer.secs()))
+    }
+
     /// Run only the **symbolic phase** of the ParAC factorization for
     /// `lap` under this builder's options: ordering, permutation layout,
     /// and engine workspace sizing — no numeric work. The returned
@@ -401,7 +443,8 @@ impl SolverBuilder {
             op: SessionOp::Dyn(op),
             pre,
             pcg,
-            ws: PcgWorkspace::new(n),
+            workspaces: WorkspacePool::new(n),
+            history: Mutex::new(Vec::new()),
             n,
             setup_secs: 0.0,
             factor_stats: None,
@@ -425,7 +468,8 @@ impl SolverBuilder {
             op,
             pre,
             pcg,
-            ws: PcgWorkspace::new(n),
+            workspaces: WorkspacePool::new(n),
+            history: Mutex::new(Vec::new()),
             n,
             setup_secs,
             factor_stats,
@@ -532,6 +576,14 @@ enum SessionOp<'a> {
         /// Row-split width (1 = sequential SpMV).
         threads: usize,
     },
+    /// Reference-counted Laplacian from [`SolverBuilder::build_shared`]
+    /// — no borrow, so the session is `'static` and cacheable.
+    OwnedLap {
+        /// The shared operator graph.
+        lap: Arc<Laplacian>,
+        /// Row-split width (1 = sequential SpMV).
+        threads: usize,
+    },
 }
 
 impl LinearOperator for SessionOp<'_> {
@@ -539,6 +591,7 @@ impl LinearOperator for SessionOp<'_> {
         match self {
             SessionOp::Dyn(op) => op.n(),
             SessionOp::Matrix { a, .. } => a.nrows,
+            SessionOp::OwnedLap { lap, .. } => lap.n(),
         }
     }
 
@@ -546,20 +599,36 @@ impl LinearOperator for SessionOp<'_> {
         match self {
             SessionOp::Dyn(op) => op.apply_to(x, y),
             SessionOp::Matrix { a, threads } => a.spmv_par(x, y, *threads),
+            SessionOp::OwnedLap { lap, threads } => lap.matrix.spmv_par(x, y, *threads),
         }
     }
 }
 
-/// A configured, factored solver session: borrow of the operator, owned
-/// preconditioner, PCG options, and the reusable workspace. Create via
-/// [`Solver::builder`]; call [`Solver::solve`] / [`Solver::solve_into`]
-/// / [`Solver::solve_batch`] as many times as there are right-hand
-/// sides.
+/// A configured, factored solver session: the operator, the owned
+/// preconditioner, PCG options, and a pool of reusable workspaces.
+/// Create via [`Solver::builder`]; call [`Solver::solve_shared`] /
+/// [`Solver::solve_batch_shared`] (through `&self`, from any number of
+/// threads) or the single-owner `&mut self` wrappers [`Solver::solve`]
+/// / [`Solver::solve_into`] / [`Solver::solve_batch`] as many times as
+/// there are right-hand sides.
+///
+/// Everything reachable from a solve is immutable after construction —
+/// the only mutable state is the workspace pool (checked out per call)
+/// and the history store (swapped under a lock after a solve) — which
+/// is why the session is `Sync` (asserted statically in
+/// [`crate::serve`]) and concurrent solves are bit-identical to the
+/// same solves run alone.
 pub struct Solver<'a> {
     op: SessionOp<'a>,
     pre: Box<dyn Preconditioner>,
     pcg: PcgOptions,
-    ws: PcgWorkspace,
+    /// Per-call Krylov workspaces: checked out on entry to a solve,
+    /// returned on exit; grows to the peak concurrency, then recycles.
+    workspaces: WorkspacePool,
+    /// Residual history of the most recently *completed* solve (only
+    /// written when the builder set `keep_history`; under concurrency
+    /// the last finisher wins).
+    history: Mutex<Vec<f64>>,
     n: usize,
     setup_secs: f64,
     factor_stats: Option<FactorStats>,
@@ -618,6 +687,41 @@ impl<'a> Solver<'a> {
     /// ([`SolverBuilder::build`]); the session's operator is re-pointed
     /// at `lap`, so subsequent solves target the new system.
     pub fn refactorize(&mut self, lap: &'a Laplacian) -> Result<(), ParacError> {
+        if matches!(self.op, SessionOp::OwnedLap { .. }) {
+            return Err(ParacError::BadInput(
+                "this session owns its Laplacian (build_shared); use refactorize_shared".into(),
+            ));
+        }
+        self.refactorize_numeric_only(lap)?;
+        if let SessionOp::Matrix { a, .. } = &mut self.op {
+            *a = &lap.matrix;
+        }
+        Ok(())
+    }
+
+    /// [`Solver::refactorize`] for sessions built with
+    /// [`SolverBuilder::build_shared`]: same numeric-only contract, but
+    /// the session's owned [`Arc`] is re-pointed at `lap`, so the
+    /// `'static` session keeps owning its operator. This is the path
+    /// [`crate::serve::FactorCache`] routes reweighted builds through.
+    pub fn refactorize_shared(&mut self, lap: Arc<Laplacian>) -> Result<(), ParacError> {
+        if !matches!(self.op, SessionOp::OwnedLap { .. }) {
+            return Err(ParacError::BadInput(
+                "refactorize_shared requires a session built with SolverBuilder::build_shared"
+                    .into(),
+            ));
+        }
+        self.refactorize_numeric_only(&lap)?;
+        if let SessionOp::OwnedLap { lap: owned, .. } = &mut self.op {
+            *owned = lap;
+        }
+        Ok(())
+    }
+
+    /// Shared numeric-refactorize core: validates, reruns the numeric
+    /// phase on the frozen symbolic analysis, refreshes the factor
+    /// stats. The caller re-points the session operator.
+    fn refactorize_numeric_only(&mut self, lap: &Laplacian) -> Result<(), ParacError> {
         if lap.n() != self.n {
             return Err(ParacError::DimensionMismatch {
                 what: "refactorize operator",
@@ -636,9 +740,6 @@ impl<'a> Solver<'a> {
         })?;
         ldl.refactorize_numeric(|f| sym.refactorize_into(lap, f))?;
         self.factor_stats = Some(ldl.factor().stats.clone());
-        if let SessionOp::Matrix { a, .. } = &mut self.op {
-            *a = &lap.matrix;
-        }
         Ok(())
     }
 
@@ -652,10 +753,12 @@ impl<'a> Solver<'a> {
         self.pre.sweep_counters()
     }
 
-    /// Per-iteration relative residuals of the most recent solve (empty
-    /// unless the builder set `keep_history`).
-    pub fn history(&self) -> &[f64] {
-        self.ws.history()
+    /// Per-iteration relative residuals of the most recent completed
+    /// solve (empty unless the builder set `keep_history`). Returned by
+    /// value: the store is shared across concurrent `&self` solves (the
+    /// last finisher wins), so callers get a stable snapshot.
+    pub fn history(&self) -> Vec<f64> {
+        self.history.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// The PCG options this session runs with.
@@ -663,25 +766,49 @@ impl<'a> Solver<'a> {
         &self.pcg
     }
 
+    /// Grow the session's workspace pool to at least `count` idle
+    /// Krylov workspaces. A serving deployment calls this once before
+    /// opening the session to `count` concurrent clients, so that even
+    /// the *first* wave of overlapping [`Solver::solve_shared`] calls
+    /// stays allocation-free (without it, calls that raise the peak
+    /// concurrency allocate their workspace on first checkout).
+    pub fn warm_workspaces(&self, count: usize) {
+        self.workspaces.warm(count);
+    }
+
     /// Solve `A x = b`, allocating the solution vector. Non-convergence
-    /// is data (`converged == false`), not an error.
+    /// is data (`converged == false`), not an error. Thin wrapper over
+    /// [`Solver::solve_shared`].
     pub fn solve(&mut self, b: &[f64]) -> Result<PcgResult, ParacError> {
         let mut x = vec![0.0; self.n];
-        let stats = self.solve_into(b, &mut x)?;
+        let stats = self.solve_shared(b, &mut x)?;
         Ok(PcgResult {
             x,
             iters: stats.iters,
             rel_residual: stats.rel_residual,
             converged: stats.converged,
-            history: self.ws.history().to_vec(),
+            history: self.history(),
         })
     }
 
-    /// Solve `A x = b` into a caller buffer, reusing the internal
-    /// workspace: zero heap allocations per PCG iteration (AMG is the
-    /// one exception — see the module docs). `x` is overwritten (the
-    /// initial guess is zero). Non-convergence is data, not an error.
+    /// Solve `A x = b` into a caller buffer: zero heap allocations per
+    /// PCG iteration (AMG is the one exception — see the module docs).
+    /// `x` is overwritten (the initial guess is zero). Non-convergence
+    /// is data, not an error. Thin `&mut self` wrapper over
+    /// [`Solver::solve_shared`] for single-owner code.
     pub fn solve_into(&mut self, b: &[f64], x: &mut [f64]) -> Result<SolveStats, ParacError> {
+        self.solve_shared(b, x)
+    }
+
+    /// Solve `A x = b` into a caller buffer through `&self` — the
+    /// shared-session primitive. Any number of threads may call this
+    /// concurrently on one solver: each call checks a [`PcgWorkspace`]
+    /// out of the session pool, runs PCG against the immutable operator
+    /// and preconditioner, and returns the workspace. Results are
+    /// **bit-identical** to the same call made alone (asserted in
+    /// `rust/tests/serve.rs`), and after the pool has grown to the peak
+    /// concurrency a call performs zero heap allocations.
+    pub fn solve_shared(&self, b: &[f64], x: &mut [f64]) -> Result<SolveStats, ParacError> {
         if b.len() != self.n {
             return Err(ParacError::DimensionMismatch {
                 what: "rhs",
@@ -696,7 +823,11 @@ impl<'a> Solver<'a> {
                 got: x.len(),
             });
         }
-        Ok(pcg::solve_into(&self.op, b, self.pre.as_ref(), &self.pcg, &mut self.ws, x))
+        let mut ws = self.workspaces.checkout();
+        let stats = pcg::solve_into(&self.op, b, self.pre.as_ref(), &self.pcg, &mut ws, x);
+        self.store_history(&mut ws);
+        self.workspaces.restore(ws);
+        Ok(stats)
     }
 
     /// Solve the same system for a **batch** of right-hand sides,
@@ -710,11 +841,29 @@ impl<'a> Solver<'a> {
     /// once per right-hand side in order (property-tested per engine in
     /// `rust/tests/solver.rs`): batching changes amortization, never
     /// answers. Dimension errors are reported before any solve runs.
+    /// Thin `&mut self` wrapper over [`Solver::solve_batch_shared`].
     pub fn solve_batch(
         &mut self,
         bs: &[&[f64]],
         xs: &mut [Vec<f64>],
     ) -> Result<Vec<SolveStats>, ParacError> {
+        let mut stats = Vec::with_capacity(bs.len());
+        self.solve_batch_shared(bs, xs, &mut stats)?;
+        Ok(stats)
+    }
+
+    /// [`Solver::solve_batch`] through `&self`, with caller-owned stats
+    /// storage (cleared, then one entry per right-hand side) so a warm
+    /// caller can stay allocation-free. One workspace is checked out
+    /// for the whole wave. Safe to call concurrently with any other
+    /// `*_shared` call; bit-identical to looping
+    /// [`Solver::solve_shared`] per RHS.
+    pub fn solve_batch_shared(
+        &self,
+        bs: &[&[f64]],
+        xs: &mut [Vec<f64>],
+        stats: &mut Vec<SolveStats>,
+    ) -> Result<(), ParacError> {
         if bs.len() != xs.len() {
             return Err(ParacError::DimensionMismatch {
                 what: "batch solutions",
@@ -734,11 +883,25 @@ impl<'a> Solver<'a> {
         for x in xs.iter_mut() {
             x.resize(self.n, 0.0);
         }
-        let mut stats = Vec::with_capacity(bs.len());
+        stats.clear();
+        stats.reserve(bs.len());
+        let mut ws = self.workspaces.checkout();
         for (b, x) in bs.iter().zip(xs.iter_mut()) {
-            stats.push(pcg::solve_into(&self.op, b, self.pre.as_ref(), &self.pcg, &mut self.ws, x));
+            stats.push(pcg::solve_into(&self.op, b, self.pre.as_ref(), &self.pcg, &mut ws, x));
         }
-        Ok(stats)
+        self.store_history(&mut ws);
+        self.workspaces.restore(ws);
+        Ok(())
+    }
+
+    /// Publish a finished workspace's residual history to the session
+    /// store (O(1) buffer swap; only when the session records history —
+    /// otherwise both buffers are empty and the lock is skipped).
+    fn store_history(&self, ws: &mut PcgWorkspace) {
+        if self.pcg.keep_history {
+            let mut store = self.history.lock().unwrap_or_else(|p| p.into_inner());
+            ws.swap_history(&mut store);
+        }
     }
 }
 

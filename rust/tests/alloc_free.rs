@@ -22,7 +22,15 @@
 //! edge weights — from the **first** refactorize onward, thanks to the
 //! spare buffers pre-warmed at build time — allocates nothing either.
 //!
-//! This lives in its own integration-test binary (one `#[test]`, three
+//! Phase 4 extends it to the **concurrent** `&self` solve path behind
+//! the serving subsystem: eight OS threads hammering one shared session
+//! through `solve_shared` / `solve_batch_shared` stay allocation-free
+//! once the workspace pool is warmed to the peak concurrency
+//! (`Solver::warm_workspaces`) — checkout is a Mutex-guarded pop, the
+//! operator and preconditioner are immutable, and the packed sweeps
+//! serialize on the pool's dispatch lock without allocating.
+//!
+//! This lives in its own integration-test binary (one `#[test]`, four
 //! phases) so no concurrently running test can touch the allocation
 //! counter.
 
@@ -182,4 +190,77 @@ fn solve_into_allocates_nothing_after_warmup() {
          frozen-pattern path must reuse every workspace and buffer",
         after - before
     );
+
+    // ---- Phase 4: the concurrent `&self` solve path. ----
+    // Eight OS threads hammer the same session through `solve_shared` /
+    // `solve_batch_shared`. The workspace pool is pre-warmed to the
+    // peak concurrency and every output buffer is pre-sized, so after
+    // one concurrent warm-up round the measured window — full PCG
+    // solves from eight threads at once, including the pooled packed
+    // sweeps — must not touch the allocator at all. (Thread spawn/join
+    // allocates, so the threads are started and barrier-synced *before*
+    // the counter is read and joined after.)
+    const CLIENTS: usize = 8;
+    pooled.refactorize(&lap_wide).expect("reset to original weights");
+    pooled.warm_workspaces(CLIENTS);
+    {
+        let session = &pooled;
+        let barrier = std::sync::Barrier::new(CLIENTS + 1);
+        let counted: AtomicU64 = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..CLIENTS {
+                let barrier = &barrier;
+                let counted = &counted;
+                let rhs_wide = &rhs_wide;
+                scope.spawn(move || {
+                    let mut x = vec![0.0; session.n()];
+                    // Mixed traffic: even threads solve one RHS per
+                    // call, odd threads drive two-RHS batches with
+                    // pre-sized solutions and reused stats storage.
+                    let mut xs = vec![vec![0.0; session.n()]; 2];
+                    let mut stats_store = Vec::with_capacity(2);
+                    let mut round = |n_rounds: usize| {
+                        for r in 0..n_rounds {
+                            if t % 2 == 0 {
+                                let b = &rhs_wide[(t + r) % rhs_wide.len()];
+                                let stats =
+                                    session.solve_shared(b, &mut x).expect("concurrent solve");
+                                assert!(stats.converged);
+                            } else {
+                                let bs: [&[f64]; 2] = [
+                                    &rhs_wide[(t + r) % rhs_wide.len()],
+                                    &rhs_wide[(t + r + 1) % rhs_wide.len()],
+                                ];
+                                session
+                                    .solve_batch_shared(&bs, &mut xs, &mut stats_store)
+                                    .expect("concurrent batch solve");
+                                assert!(stats_store.iter().all(|s| s.converged));
+                            }
+                        }
+                    };
+                    // Concurrent warm-up (pool checkout order settles).
+                    barrier.wait();
+                    round(2);
+                    // Measured window: all threads inside, zero allocs.
+                    barrier.wait();
+                    let before = allocations();
+                    round(4);
+                    counted.fetch_add(allocations() - before, Ordering::Relaxed);
+                    barrier.wait();
+                });
+            }
+            barrier.wait(); // release warm-up
+            barrier.wait(); // all warmed: open the measured window
+            barrier.wait(); // all counted: safe to join (joins allocate)
+        });
+        // Every thread measured its own window while all eight were
+        // inside theirs, so any allocation anywhere in the concurrent
+        // solve path lands in the sum.
+        assert_eq!(
+            counted.load(Ordering::Relaxed),
+            0,
+            "concurrent &self solves allocated — the shared-session \
+             zero-allocation contract is broken"
+        );
+    }
 }
