@@ -10,6 +10,12 @@
 //! smoke-runs this binary at `PARAC_SCALE=tiny`, which also guards the
 //! bit-identity of the two executors (asserted below) and the packed
 //! executor's O(1)-dispatch invariant.
+//!
+//! The packed executor is additionally timed on its **f32 storage
+//! plane** (`PackedSweeps<f32>`): same schedules, half the packed value
+//! bytes — the exact-halving is asserted, and both the per-apply times
+//! and the bytes-moved columns land in the table and the JSON so the
+//! bandwidth story is diffable per precision.
 
 mod bench_common;
 
@@ -66,8 +72,8 @@ fn main() {
     let reps = 7;
     println!("## Preconditioner apply: packed (1 dispatch/sweep) vs PR3 (1 dispatch/level)  [scale {scale:?}]\n");
     let mut table = Table::new(&[
-        "problem", "threads", "critical path", "pr3 (ms)", "packed (ms)", "speedup",
-        "dispatches/apply",
+        "problem", "threads", "critical path", "pr3 (ms)", "packed (ms)", "packed f32 (ms)",
+        "speedup", "dispatches/apply", "val KB f64", "val KB f32",
     ]);
     let mut rows: Vec<BenchRow> = Vec::new();
     for name in ["uniform_3d_poisson", "GAP-road"] {
@@ -86,10 +92,19 @@ fn main() {
         // and one packed copy serve every thread count below (only the
         // apply takes a `threads` argument).
         let sched = LevelSchedule::analyze(&f);
-        let packed = PackedSweeps::analyze(&f);
+        let packed = PackedSweeps::<f64>::analyze(&f);
+        let packed32 = PackedSweeps::<f32>::analyze(&f);
+        // The f32 plane's claim is exactly-half the packed value
+        // traffic — same entry counts, 4 bytes instead of 8.
+        assert_eq!(
+            packed32.value_bytes() * 2,
+            packed.value_bytes(),
+            "{name}: f32 plane must store exactly half the value bytes"
+        );
         let n = lap.n();
         let mut z_pr3 = vec![0.0; n];
         let mut z_packed = vec![0.0; n];
+        let mut z_packed32 = vec![0.0; n];
         let mut scratch = vec![0.0; n];
         let (mut y_fwd, mut y_bwd) = (vec![0.0; n], vec![0.0; n]);
         for &threads in &thread_counts {
@@ -108,6 +123,9 @@ fn main() {
                 packed.apply_into(&b, &mut z_packed, threads, &mut y_fwd, &mut y_bwd)
             });
             let dispatches = packed.counters().since(c0).dispatches as f64 / reps as f64;
+            let (_, t_packed32) = bench_common::median_time(reps, || {
+                packed32.apply_into(&b, &mut z_packed32, threads, &mut y_fwd, &mut y_bwd)
+            });
             let cp = packed.critical_path;
             table.row(vec![
                 e.name.into(),
@@ -115,8 +133,11 @@ fn main() {
                 cp.to_string(),
                 format!("{:.3}", t_pr3 * 1e3),
                 format!("{:.3}", t_packed * 1e3),
+                format!("{:.3}", t_packed32 * 1e3),
                 format!("{:.2}x", t_pr3 / t_packed.max(1e-12)),
                 format!("{dispatches:.0}"),
+                format!("{:.1}", packed.value_bytes() as f64 / 1e3),
+                format!("{:.1}", packed32.value_bytes() as f64 / 1e3),
             ]);
             rows.push(BenchRow {
                 name: format!("{} n={} threads={threads}", e.name, n),
@@ -125,8 +146,11 @@ fn main() {
                     ("critical_path", cp as f64),
                     ("pr3_secs", t_pr3),
                     ("packed_secs", t_packed),
+                    ("packed_f32_secs", t_packed32),
                     ("speedup", t_pr3 / t_packed.max(1e-12)),
                     ("dispatches_per_apply", dispatches),
+                    ("val_bytes_f64", packed.value_bytes() as f64),
+                    ("val_bytes_f32", packed32.value_bytes() as f64),
                 ],
             });
         }

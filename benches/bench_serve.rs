@@ -38,7 +38,7 @@ fn main() {
             // cache, then the measured window is pure serving.
             let svc = SolveService::new(
                 FactorCache::new(Solver::builder().seed(1).threads(threads), 4),
-                ServeOptions { max_wave: 8, max_wait: Duration::from_micros(200) },
+                ServeOptions { max_wave: 8, max_wait: Duration::from_micros(200), ..Default::default() },
             );
             let spec = LoadSpec {
                 clients,

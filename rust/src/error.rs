@@ -55,6 +55,15 @@ pub enum ParacError {
         /// The offending value, rendered for the message.
         got: String,
     },
+    /// A serving request was shed at admission because the wave gate's
+    /// queue already held `capacity` pending right-hand sides
+    /// (`ServeOptions::max_queue`). Back-pressure, not failure: the
+    /// caller should retry after a backoff. Counted in
+    /// `ServiceStats::shed`.
+    Overloaded {
+        /// The configured queue bound that was hit.
+        capacity: usize,
+    },
 }
 
 impl std::fmt::Display for ParacError {
@@ -72,6 +81,9 @@ impl std::fmt::Display for ParacError {
             }
             ParacError::InvalidOption { what, got } => {
                 write!(f, "invalid {what}: {got:?}")
+            }
+            ParacError::Overloaded { capacity } => {
+                write!(f, "service overloaded: {capacity} requests already queued")
             }
         }
     }
@@ -91,6 +103,8 @@ mod tests {
         assert!(e.to_string().contains("rhs") && e.to_string().contains("10"));
         let e = ParacError::InvalidOption { what: "engine", got: "tpu".into() };
         assert!(e.to_string().contains("engine") && e.to_string().contains("tpu"));
+        let e = ParacError::Overloaded { capacity: 64 };
+        assert!(e.to_string().contains("overloaded") && e.to_string().contains("64"));
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use symbolic::SymbolicFactor;
 
 use crate::graph::{LapKind, Laplacian};
 use crate::ordering::Ordering;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, Precision};
 
 /// Which factorization engine to run.
 ///
@@ -96,6 +96,13 @@ pub struct ParacOptions {
     /// Collect per-stage wall times (≈5% overhead from clock reads on
     /// the hot path; enable for stage-breakdown reports).
     pub stage_timing: bool,
+    /// Value-storage plane for the preconditioner built on the factor
+    /// (the factorization itself always computes in f64). `None` (the
+    /// default) defers to the `PARAC_PRECISION` environment variable,
+    /// then to [`Precision::F64`]; `Some` pins the plane explicitly
+    /// ([`crate::solver::SolverBuilder::precision`] / CLI
+    /// `--precision`).
+    pub precision: Option<Precision>,
 }
 
 impl Default for ParacOptions {
@@ -107,6 +114,7 @@ impl Default for ParacOptions {
             arena_factor: 6.0,
             sort_by_weight: true,
             stage_timing: false,
+            precision: None,
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Factorization statistics — the instrumentation behind the paper's
 //! stage breakdown (§5.1) and the §Perf iteration log in EXPERIMENTS.md.
 
+use crate::sparse::Precision;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 
 /// Snapshot of one factorization run.
@@ -45,6 +46,11 @@ pub struct FactorStats {
     /// `true` when this run skipped the symbolic phase entirely and
     /// reused a frozen pattern (ordering, etree, workspaces).
     pub symbolic_reused: bool,
+    /// The value-storage plane the preconditioner built on this factor
+    /// packs in (`F64` unless a `SolverBuilder::precision` /
+    /// `PARAC_PRECISION` override selected f32). The factorization
+    /// itself always runs in f64; this records what the apply streams.
+    pub precision: Precision,
 }
 
 impl FactorStats {
@@ -108,6 +114,7 @@ impl StatsCollector {
             symbolic_secs: 0.0,
             numeric_secs: wall_secs,
             symbolic_reused: false,
+            precision: Precision::default(),
         }
     }
 

@@ -177,6 +177,32 @@ pub const SUITE: &[SuiteEntry] = &[
         },
     },
     SuiteEntry {
+        name: "xcontrast_2d",
+        class: "2D mesh",
+        build: |s| {
+            let d = dims(s, 40, 130, 360);
+            let base = generators::grid2d(d, d, Coeff::Uniform, 117);
+            // Two-scale medium at an extreme absolute level: the left
+            // half of the grid carries weights ~1e39, the right half
+            // ~1e27 — a 1e12 weight ratio. f64 factors it exactly like
+            // the unit-scale grid (conditioning is scale-invariant),
+            // but an f32 value-storage plane overflows on the heavy
+            // half (f32::MAX ≈ 3.4e38), which makes this the
+            // deterministic trigger for the f32→f64 refinement guard
+            // in `solve::pcg`.
+            let edges: Vec<(u32, u32, f64)> = base
+                .edges()
+                .into_iter()
+                .map(|(a, b, w)| {
+                    let col = a as usize % d;
+                    let scale = if col * 2 < d { 1e39 } else { 1e27 };
+                    (a, b, w * scale)
+                })
+                .collect();
+            Laplacian::from_edges(base.n(), &edges, "xcontrast_2d")
+        },
+    },
+    SuiteEntry {
         name: "spe16m",
         class: "reservoir",
         build: |s| {

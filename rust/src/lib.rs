@@ -101,6 +101,22 @@
 //! `parac serve` subcommand and `benches/bench_serve.rs` measure the
 //! stack under open-loop load via [`coordinator::serve_driver`].
 //!
+//! ## Precision: the f32 value plane
+//!
+//! Numeric *storage* is a pluggable plane under the same kernels: the
+//! sealed [`sparse::Scalar`] trait (f64 / f32, always accumulating in
+//! f64) generalizes the packed triangular sweeps ([`solve::packed`]),
+//! CSR/ELL SpMV ([`sparse`]), and the preconditioner value arrays.
+//! [`solver::SolverBuilder::precision`] (or the `PARAC_PRECISION` env
+//! var, or `--precision` on the CLI) selects the plane per session:
+//! [`sparse::Precision::F64`] keeps every result bit-identical to the
+//! sequential reference, while [`sparse::Precision::F32`] halves the
+//! preconditioner-apply value traffic and is protected by an iterative-
+//! refinement guard in [`solve::pcg`] — if the f32 plane stagnates or
+//! produces non-finite values, the solve transparently rebuilds the f64
+//! plane mid-flight and continues (counted in
+//! [`solve::pcg::SolveStats::fallbacks`]).
+//!
 //! The lower-level pieces remain public: [`factor::factorize`] produces
 //! the [`factor::LdlFactor`], [`precond`] wraps it (and every baseline
 //! the paper compares against) behind the allocation-free
@@ -155,3 +171,4 @@ pub mod util;
 
 pub use error::ParacError;
 pub use solver::{PrecondKind, Solver, SolverBuilder};
+pub use sparse::Precision;

@@ -54,11 +54,17 @@ USAGE:
   parac solve  --matrix NAME
                [--method parac[:T]|ichol0|icholt[:DROPTOL]|amg|jacobi|ssor[:OMEGA]|identity]
                [--tol 1e-8] [--max-iter 1000] [--level-threads T] [--omega 1.5]
-               [--droptol 1e-3] [engine/ordering flags]
+               [--droptol 1e-3] [--precision f64|f32] [engine/ordering flags]
+               (--precision f32 stores the ParAC factor sweeps in f32 —
+               half the apply traffic — with automatic f64 fallback;
+               PARAC_PRECISION sets the default)
   parac repro table2|table3|fig3|fig4|hash [--scale tiny|small|medium] [--threads T]
   parac serve  --matrix NAME [--clients N[,N...]] [--requests R] [--interval-us U]
-               [--max-wave W] [--max-wait-us U] [--cache-cap C] [--threads T]
-               [--json PATH] [engine/ordering flags]
+               [--max-wave W] [--max-wait-us U] [--max-queue Q] [--cache-cap C]
+               [--threads T] [--precision f64|f32] [--json PATH]
+               [engine/ordering flags]
+               (--max-queue bounds admission: requests beyond Q pending
+               are shed with a typed overload error; 0 = unbounded)
                open-loop serving benchmark: N client threads share one
                cached factor through coalesced solve waves
 "
@@ -92,6 +98,10 @@ fn parac_opts(args: &Args) -> Result<ParacOptions, ParacError> {
             got: engine.into(),
         })?,
         seed: args.get_parse("seed", 0x9A9Au64),
+        precision: match args.get("precision", "") {
+            "" => None, // defer to PARAC_PRECISION, then f64
+            s => Some(parac::sparse::Precision::parse(s)?),
+        },
         ..Default::default()
     })
 }
@@ -219,14 +229,16 @@ fn serve_cmd(args: &Args) -> Result<(), ParacError> {
     let opts = ServeOptions {
         max_wave: args.get_parse("max-wave", ServeOptions::default().max_wave),
         max_wait: Duration::from_micros(args.get_parse("max-wait-us", 200u64)),
+        max_queue: args.get_parse("max-queue", ServeOptions::default().max_queue),
     };
     println!(
-        "{}: n={} nnz={}  max_wave={} max_wait={:?}",
+        "{}: n={} nnz={}  max_wave={} max_wait={:?} max_queue={}",
         lap.name,
         fmt_count(lap.n()),
         fmt_count(lap.matrix.nnz()),
         opts.max_wave,
-        opts.max_wait
+        opts.max_wait,
+        opts.max_queue
     );
     let mut t = Table::new(&[
         "clients",

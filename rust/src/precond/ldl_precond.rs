@@ -24,23 +24,47 @@
 use super::Preconditioner;
 use crate::factor::LdlFactor;
 use crate::solve::packed::{PackedSweeps, SweepCounters};
+use crate::sparse::Precision;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 
-/// `z = (G D Gᵀ)⁺ r`, sequential or level-parallel (packed executor).
+/// Which executor (and storage plane) an apply routes through.
+enum Plane {
+    /// Sequential factor solve (always f64).
+    Seq,
+    /// Packed executor, 8-byte values — bit-identical to `Seq`.
+    F64(PackedSweeps<f64>),
+    /// Packed executor, 4-byte values (half the apply traffic), with a
+    /// lazily built f64 fallback plane for the iterative-refinement
+    /// guard. `promoted` flips once — through `&self`, mid-solve — and
+    /// every later apply routes through the fallback.
+    F32 {
+        packed: PackedSweeps<f32>,
+        fallback: OnceLock<PackedSweeps<f64>>,
+        promoted: AtomicBool,
+    },
+}
+
+/// `z = (G D Gᵀ)⁺ r`, sequential or level-parallel (packed executor),
+/// in an f64 or f32 value-storage plane.
 pub struct LdlPrecond {
     factor: LdlFactor,
-    packed: Option<PackedSweeps>,
+    plane: Plane,
     threads: usize,
     /// Level-width cutoff the packed analysis ran with — kept so a
-    /// structure-changing refactorization can re-analyze identically.
+    /// structure-changing refactorization (and the f32→f64 fallback)
+    /// can re-analyze identically.
     cutoff: usize,
 }
 
 impl LdlPrecond {
-    /// Sequential-solve preconditioner.
-    pub fn new(factor: LdlFactor) -> LdlPrecond {
+    /// Sequential-solve preconditioner (always f64 — the sequential
+    /// factor solve has no narrowed storage plane).
+    pub fn new(mut factor: LdlFactor) -> LdlPrecond {
+        factor.stats.precision = Precision::F64;
         LdlPrecond {
             factor,
-            packed: None,
+            plane: Plane::Seq,
             threads: 1,
             cutoff: crate::solve::packed::default_cutoff(),
         }
@@ -64,8 +88,34 @@ impl LdlPrecond {
         threads: usize,
         cutoff: usize,
     ) -> LdlPrecond {
-        let packed = PackedSweeps::analyze_with_opts(&factor, cutoff, threads);
-        LdlPrecond { factor, packed: Some(packed), threads, cutoff }
+        Self::with_level_schedule_precision(factor, threads, cutoff, Precision::F64)
+    }
+
+    /// [`LdlPrecond::with_level_schedule_cutoff`] with an explicit
+    /// value-storage plane, selected **at analyze time**: `F64` packs
+    /// 8-byte values (bit-identical to the sequential reference),
+    /// `F32` packs 4-byte values — half the bytes streamed per apply
+    /// on this bandwidth-bound kernel — with f64 accumulation and the
+    /// automatic f64 fallback documented on
+    /// [`Preconditioner::promote_to_f64`].
+    pub fn with_level_schedule_precision(
+        mut factor: LdlFactor,
+        threads: usize,
+        cutoff: usize,
+        precision: Precision,
+    ) -> LdlPrecond {
+        factor.stats.precision = precision;
+        let plane = match precision {
+            Precision::F64 => {
+                Plane::F64(PackedSweeps::<f64>::analyze_with_opts(&factor, cutoff, threads))
+            }
+            Precision::F32 => Plane::F32 {
+                packed: PackedSweeps::<f32>::analyze_with_opts(&factor, cutoff, threads),
+                fallback: OnceLock::new(),
+                promoted: AtomicBool::new(false),
+            },
+        };
+        LdlPrecond { factor, plane, threads, cutoff }
     }
 
     /// Access the wrapped factor.
@@ -75,27 +125,78 @@ impl LdlPrecond {
 
     /// Critical path of the solve DAG (None if sequential mode).
     pub fn critical_path(&self) -> Option<usize> {
-        self.packed.as_ref().map(|p| p.critical_path)
+        match &self.plane {
+            Plane::Seq => None,
+            Plane::F64(p) => Some(p.critical_path),
+            Plane::F32 { packed, .. } => Some(packed.critical_path),
+        }
+    }
+
+    /// The storage plane selected at analyze time (what
+    /// `FactorStats::precision` records). Unlike
+    /// [`Preconditioner::precision`], this does **not** change when
+    /// the fallback guard promotes an f32 plane mid-solve.
+    pub fn selected_precision(&self) -> Precision {
+        match &self.plane {
+            Plane::F32 { .. } => Precision::F32,
+            _ => Precision::F64,
+        }
     }
 
     /// Swap a renumbered factor in under the preconditioner: `rebuild`
     /// mutates the wrapped factor in place (typically
     /// [`crate::factor::SymbolicFactor::refactorize_into`]) and returns
     /// whether the factor's sparsity structure was preserved. If so,
-    /// the packed executor is [refilled](PackedSweeps::refill) in place
-    /// — no allocation, schedules and counters untouched; otherwise the
-    /// packed analysis is redone at the original cutoff and thread
-    /// budget. Returns the closure's verdict.
+    /// the packed executor — and, in f32 mode, any materialized f64
+    /// fallback plane — is [refilled](PackedSweeps::refill) in place
+    /// (no allocation, schedules and counters untouched); otherwise
+    /// the packed analysis is redone at the original cutoff, thread
+    /// budget, and precision. Returns the closure's verdict.
     pub fn refactorize_numeric<E>(
         &mut self,
         rebuild: impl FnOnce(&mut LdlFactor) -> Result<bool, E>,
     ) -> Result<bool, E> {
         let preserved = rebuild(&mut self.factor)?;
-        if let Some(packed) = &mut self.packed {
-            if preserved {
-                packed.refill(&self.factor);
-            } else {
-                *packed = PackedSweeps::analyze_with_opts(&self.factor, self.cutoff, self.threads);
+        // Rebuilds reset the factor's stats snapshot; restamp the plane.
+        self.factor.stats.precision = match &self.plane {
+            Plane::F32 { .. } => Precision::F32,
+            _ => Precision::F64,
+        };
+        match &mut self.plane {
+            Plane::Seq => {}
+            Plane::F64(packed) => {
+                if preserved {
+                    packed.refill(&self.factor);
+                } else {
+                    *packed = PackedSweeps::<f64>::analyze_with_opts(
+                        &self.factor,
+                        self.cutoff,
+                        self.threads,
+                    );
+                }
+            }
+            Plane::F32 { packed, fallback, .. } => {
+                if preserved {
+                    packed.refill(&self.factor);
+                    if let Some(fb) = fallback.get_mut() {
+                        fb.refill(&self.factor);
+                    }
+                } else {
+                    *packed = PackedSweeps::<f32>::analyze_with_opts(
+                        &self.factor,
+                        self.cutoff,
+                        self.threads,
+                    );
+                    if fallback.get().is_some() {
+                        let fresh = OnceLock::new();
+                        let _ = fresh.set(PackedSweeps::<f64>::analyze_with_opts(
+                            &self.factor,
+                            self.cutoff,
+                            self.threads,
+                        ));
+                        *fallback = fresh;
+                    }
+                }
             }
         }
         Ok(preserved)
@@ -112,9 +213,21 @@ impl Preconditioner for LdlPrecond {
     }
 
     fn apply_scratch(&self, r: &[f64], z: &mut [f64], a: &mut [f64], b: &mut [f64]) {
-        match &self.packed {
-            None => self.factor.solve_into(r, z, a),
-            Some(packed) => packed.apply_into(r, z, self.threads, a, b),
+        match &self.plane {
+            Plane::Seq => self.factor.solve_into(r, z, a),
+            Plane::F64(packed) => packed.apply_into(r, z, self.threads, a, b),
+            Plane::F32 { packed, fallback, promoted } => {
+                if promoted.load(Ordering::Acquire) {
+                    // Promotion publishes the fallback before the flag
+                    // (see `promote_to_f64`), so `get()` cannot miss.
+                    fallback
+                        .get()
+                        .expect("promoted flag implies fallback plane")
+                        .apply_into(r, z, self.threads, a, b)
+                } else {
+                    packed.apply_into(r, z, self.threads, a, b)
+                }
+            }
         }
     }
 
@@ -127,7 +240,47 @@ impl Preconditioner for LdlPrecond {
     }
 
     fn sweep_counters(&self) -> Option<SweepCounters> {
-        self.packed.as_ref().map(|p| p.counters())
+        match &self.plane {
+            Plane::Seq => None,
+            Plane::F64(p) => Some(p.counters()),
+            Plane::F32 { packed, fallback, .. } => {
+                let a = packed.counters();
+                let b = fallback.get().map(|p| p.counters()).unwrap_or_default();
+                Some(SweepCounters {
+                    dispatches: a.dispatches + b.dispatches,
+                    barriers: a.barriers + b.barriers,
+                })
+            }
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        match &self.plane {
+            Plane::Seq | Plane::F64(_) => Precision::F64,
+            Plane::F32 { promoted, .. } => {
+                if promoted.load(Ordering::Acquire) {
+                    Precision::F64
+                } else {
+                    Precision::F32
+                }
+            }
+        }
+    }
+
+    fn promote_to_f64(&self) -> bool {
+        match &self.plane {
+            Plane::Seq | Plane::F64(_) => false,
+            Plane::F32 { fallback, promoted, .. } => {
+                // Build (or reuse) the f64 plane, then publish the
+                // flag. The one-time analysis here is the documented
+                // allocation exception to the zero-alloc solve
+                // contract — it happens at most once per executor.
+                fallback.get_or_init(|| {
+                    PackedSweeps::<f64>::analyze_with_opts(&self.factor, self.cutoff, self.threads)
+                });
+                !promoted.swap(true, Ordering::AcqRel)
+            }
+        }
     }
 
     fn as_ldl(&self) -> Option<&LdlPrecond> {
@@ -192,5 +345,46 @@ mod tests {
         let mut z = vec![0.0; l.n()];
         pre.apply_into(&pcg::random_rhs(&l, 4), &mut z);
         assert_eq!(z, want);
+    }
+
+    #[test]
+    fn f32_plane_applies_close_and_reports_its_precision() {
+        let l = generators::grid2d(20, 20, generators::Coeff::Uniform, 5);
+        let f = factorize(&l, &ParacOptions::default()).unwrap();
+        let p64 = LdlPrecond::with_level_schedule_cutoff(f.clone(), 2, 4);
+        let p32 = LdlPrecond::with_level_schedule_precision(f, 2, 4, Precision::F32);
+        assert_eq!(p64.precision(), Precision::F64);
+        assert_eq!(p32.precision(), Precision::F32);
+        assert_eq!(p32.selected_precision(), Precision::F32);
+        assert_eq!(p32.factor().stats.precision, Precision::F32);
+        let b = pcg::random_rhs(&l, 11);
+        let z64 = p64.apply(&b);
+        let z32 = p32.apply(&b);
+        let scale = z64.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1.0);
+        for (i, (x, y)) in z64.iter().zip(&z32).enumerate() {
+            assert!((x - y).abs() <= 1e-4 * scale, "f32 apply drifted at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn promotion_switches_the_apply_to_the_f64_plane_once() {
+        let l = generators::grid2d(16, 16, generators::Coeff::Uniform, 6);
+        let f = factorize(&l, &ParacOptions::default()).unwrap();
+        let p64 = LdlPrecond::with_level_schedule_cutoff(f.clone(), 2, 4);
+        let p32 = LdlPrecond::with_level_schedule_precision(f, 2, 4, Precision::F32);
+        let b = pcg::random_rhs(&l, 13);
+        // Before promotion: f32 plane, not bit-identical to f64.
+        assert_eq!(p32.precision(), Precision::F32);
+        // First promotion reports the transition, repeats don't.
+        assert!(p32.promote_to_f64());
+        assert!(!p32.promote_to_f64());
+        assert_eq!(p32.precision(), Precision::F64);
+        // Selected precision (the analyze-time choice) is unchanged.
+        assert_eq!(p32.selected_precision(), Precision::F32);
+        // After promotion the apply routes through the f64 plane —
+        // bit-identical to a preconditioner built in f64 directly.
+        assert_eq!(p32.apply(&b), p64.apply(&b));
+        // Non-f32 preconditioners never promote.
+        assert!(!p64.promote_to_f64());
     }
 }

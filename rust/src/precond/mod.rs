@@ -96,6 +96,26 @@ pub trait Preconditioner: Send + Sync {
         None
     }
 
+    /// The storage plane this preconditioner currently applies in.
+    /// `F64` (the default — every baseline stores doubles) keeps the
+    /// bit-identity contract; `F32` signals the PCG driver that the
+    /// apply obeys a residual contract instead, arming the
+    /// stagnation/NaN fallback guard in [`crate::solve::pcg`].
+    fn precision(&self) -> crate::sparse::Precision {
+        crate::sparse::Precision::F64
+    }
+
+    /// Ask an f32-plane preconditioner to switch itself to an f64
+    /// plane (the iterative-refinement fallback). Returns `true` the
+    /// first time the promotion actually happens — subsequent calls,
+    /// and every preconditioner already in f64, return `false`. The
+    /// default is a no-op: only [`LdlPrecond`] in f32 packed mode can
+    /// promote. Must be callable through `&self` from inside a solve
+    /// (interior one-shot state, still `Sync`).
+    fn promote_to_f64(&self) -> bool {
+        false
+    }
+
     /// Downcast to the ParAC factor preconditioner, for callers that
     /// hold a `dyn Preconditioner` and need factor-specific operations
     /// (stats, refactorization). `None` for everything else.

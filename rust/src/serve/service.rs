@@ -17,6 +17,12 @@
 //! right-hand side is solved from a zero initial guess by the same
 //! arithmetic as a lone [`Solver::solve_shared`] call.
 //!
+//! Admission is **bounded**: a request that finds the collecting wave
+//! already holding [`ServeOptions::max_queue`] right-hand sides is shed
+//! with a typed [`ParacError::Overloaded`] before its buffer is copied,
+//! and counted in [`ServiceStats::shed`] — overload surfaces as
+//! back-pressure instead of an unbounded queue.
+//!
 //! No background threads anywhere: the service borrows its clients'
 //! threads, so a binary that drops the service leaks nothing.
 
@@ -38,11 +44,21 @@ pub struct ServeOptions {
     pub max_wave: usize,
     /// Seal a wave after the leader has waited this long, full or not.
     pub max_wait: Duration,
+    /// Admission bound: a request arriving while the collecting wave
+    /// already holds this many right-hand sides is **shed** with a
+    /// typed [`ParacError::Overloaded`] instead of queueing without
+    /// bound — back-pressure the caller can retry on. `0` disables the
+    /// bound (the pre-admission-control behaviour).
+    pub max_queue: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_wave: 8, max_wait: Duration::from_micros(200) }
+        ServeOptions {
+            max_wave: 8,
+            max_wait: Duration::from_micros(200),
+            max_queue: 1024,
+        }
     }
 }
 
@@ -84,7 +100,10 @@ impl BatchGate {
     /// has been solved, plus `Some(wave_size)` when this thread led the
     /// wave (for the caller's traffic accounting). The calling thread
     /// either leads the wave (collect, seal, solve, distribute) or
-    /// follows (wait for the leader's hand-off).
+    /// follows (wait for the leader's hand-off). A request that finds
+    /// the collecting wave already at [`ServeOptions::max_queue`] is
+    /// shed at this admission point — before buffering its right-hand
+    /// side — with [`ParacError::Overloaded`].
     fn solve(
         &self,
         solver: &Solver<'static>,
@@ -93,6 +112,9 @@ impl BatchGate {
     ) -> (WaveItem, Option<usize>) {
         let (my_gen, my_idx) = {
             let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            if opts.max_queue > 0 && st.pending.len() >= opts.max_queue {
+                return (Err(ParacError::Overloaded { capacity: opts.max_queue }), None);
+            }
             let slot = (st.generation, st.pending.len());
             st.pending.push(b.to_vec());
             if st.pending.len() >= opts.max_wave.max(1) {
@@ -188,13 +210,17 @@ impl BatchGate {
 /// Aggregate service traffic counters (monotonic, lock-free reads).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServiceStats {
-    /// Requests admitted.
+    /// Requests received (shed requests included).
     pub requests: u64,
     /// `solve_batch` waves executed.
     pub waves: u64,
     /// Requests beyond the first in each wave — the solves that rode
     /// another request's admission instead of paying their own.
     pub coalesced: u64,
+    /// Requests shed at admission ([`ParacError::Overloaded`]) because
+    /// the collecting wave was already at
+    /// [`ServeOptions::max_queue`].
+    pub shed: u64,
 }
 
 /// A concurrent solve front end: factor cache + per-operator
@@ -206,6 +232,7 @@ pub struct SolveService {
     requests: AtomicU64,
     waves: AtomicU64,
     coalesced: AtomicU64,
+    shed: AtomicU64,
 }
 
 impl SolveService {
@@ -218,6 +245,7 @@ impl SolveService {
             requests: AtomicU64::new(0),
             waves: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         }
     }
 
@@ -237,6 +265,7 @@ impl SolveService {
             requests: self.requests.load(Ordering::Relaxed),
             waves: self.waves.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
         }
     }
 
@@ -257,6 +286,9 @@ impl SolveService {
         if let Some(wave) = led {
             self.waves.fetch_add(1, Ordering::Relaxed);
             self.coalesced.fetch_add(wave.saturating_sub(1) as u64, Ordering::Relaxed);
+        }
+        if matches!(out, Err(ParacError::Overloaded { .. })) {
+            self.shed.fetch_add(1, Ordering::Relaxed);
         }
         out
     }
@@ -280,7 +312,20 @@ mod tests {
 
     fn service(max_wave: usize, max_wait: Duration) -> SolveService {
         let cache = FactorCache::new(Solver::builder().seed(7), 4);
-        SolveService::new(cache, ServeOptions { max_wave, max_wait })
+        SolveService::new(cache, ServeOptions { max_wave, max_wait, ..Default::default() })
+    }
+
+    #[test]
+    fn zero_max_queue_disables_admission_control() {
+        let cache = FactorCache::new(Solver::builder().seed(7), 4);
+        let svc = SolveService::new(
+            cache,
+            ServeOptions { max_wave: 1, max_queue: 0, ..Default::default() },
+        );
+        let lap = Arc::new(generators::grid2d(8, 8, generators::Coeff::Uniform, 0));
+        let b = pcg::random_rhs(&lap, 2);
+        assert!(svc.solve(&lap, &b).unwrap().1.converged);
+        assert_eq!(svc.stats().shed, 0);
     }
 
     #[test]

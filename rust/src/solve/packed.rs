@@ -48,11 +48,24 @@
 //! (`rust/tests/alloc_free.rs`). Dispatch and barrier counts are
 //! recorded per executor ([`PackedSweeps::counters`]) and surfaced
 //! through the solver stats, making the O(1)-dispatch claim observable.
+//!
+//! **Value storage is generic** over the sealed
+//! [`Scalar`](crate::sparse::Scalar) layer: `PackedSweeps<f64>` (the
+//! default) stores 8-byte values and keeps every bit-identity claim
+//! above verbatim (`f64`'s conversions are the identity), while
+//! `PackedSweeps<f32>` halves the bytes of the packed `val`/`diag`
+//! arrays — the dominant traffic of this bandwidth-bound kernel —
+//! and *accumulates in f64* (each loaded value widens before the
+//! multiply-subtract). The f32 plane trades bit-identity for the
+//! residual contract documented in [`crate::sparse::scalar`]; the
+//! sweep structure, schedules, and dispatch economics are identical
+//! in both planes.
 
 use crate::etree;
 use crate::factor::LdlFactor;
 use crate::par::{self, SendPtr, SweepBarrier};
 use crate::solve::trisolve::LEVEL_PAR_CUTOFF;
+use crate::sparse::scalar::{Precision, Scalar};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Cumulative dispatch/barrier counts of one [`PackedSweeps`] executor
@@ -104,14 +117,15 @@ fn cutoff_from(var: Option<&str>) -> usize {
 /// contiguous CSR-style arrays whose indices are packed positions.
 /// Levels are contiguous position ranges, so the schedule needs no
 /// `order[]` indirection at solve time.
-struct PackedTri {
+struct PackedTri<S: Scalar> {
     /// Entry pointer per packed position (`len = n + 1`).
     ptr: Vec<usize>,
     /// Dependency packed positions (always < the consuming position).
     idx: Vec<u32>,
-    /// Factor values, parallel to `idx`, in the original ascending
-    /// neighbor order (bit-identical accumulation).
-    val: Vec<f64>,
+    /// Factor values in storage precision, parallel to `idx`, in the
+    /// original ascending neighbor order (f64-identical accumulation
+    /// order; the values themselves round only for `S = f32`).
+    val: Vec<S>,
     /// Level boundaries in packed positions (`lev_ptr[t]..lev_ptr[t+1]`
     /// is level `t`).
     lev_ptr: Vec<usize>,
@@ -120,14 +134,15 @@ struct PackedTri {
     any_wide: bool,
 }
 
-impl PackedTri {
+impl<S: Scalar> PackedTri<S> {
     /// Pack one direction: position `i` holds vertex `order[i]`, whose
     /// dependency list is supplied by `entries(vertex)` (row of the CSR
     /// forward view, column of the CSC backward view) and remapped
-    /// through `pos`. With `threads > 1` and a large enough factor the
-    /// level-major copy runs on the worker pool — two passes (exact
-    /// per-position sizing, then a disjoint parallel fill), so the
-    /// result is **bit-identical** to the sequential pass.
+    /// through `pos`; values narrow into storage precision on copy.
+    /// With `threads > 1` and a large enough factor the level-major
+    /// copy runs on the worker pool — two passes (exact per-position
+    /// sizing, then a disjoint parallel fill), so the result is
+    /// **bit-identical** to the sequential pass at every thread count.
     fn build<'a>(
         order: &[u32],
         lev_ptr: Vec<usize>,
@@ -135,7 +150,7 @@ impl PackedTri {
         entries: impl Fn(usize) -> (&'a [u32], &'a [f64]) + Sync,
         cutoff: usize,
         threads: usize,
-    ) -> PackedTri {
+    ) -> PackedTri<S> {
         let n = order.len();
         let pool = par::global();
         let parts = threads.max(1).min(pool.size()).min(n.max(1));
@@ -150,14 +165,14 @@ impl PackedTri {
         }
         let total = ptr[n];
         let mut idx = vec![0u32; total];
-        let mut val = vec![0.0f64; total];
+        let mut val = vec![S::from_f64(0.0); total];
         if parts <= 1 || n < 2048 {
             for (i, &v) in order.iter().enumerate() {
                 let (deps, vals) = entries(v as usize);
                 let base = ptr[i];
                 for (j, (&d, &w)) in deps.iter().zip(vals).enumerate() {
                     idx[base + j] = pos[d as usize];
-                    val[base + j] = w;
+                    val[base + j] = S::from_f64(w);
                 }
             }
         } else {
@@ -176,7 +191,7 @@ impl PackedTri {
                     for (j, (&d, &w)) in deps.iter().zip(vals).enumerate() {
                         unsafe {
                             ip.write(base + j, pos[d as usize]);
-                            vp.write(base + j, w);
+                            vp.write(base + j, S::from_f64(w));
                         }
                     }
                 }
@@ -218,12 +233,15 @@ fn invert_order(order: &[u32], threads: usize) -> Vec<u32> {
 
 /// The packed analysis product for both sweeps of `G D Gᵀ` solves (see
 /// the module docs). Analyze once per factor, apply every PCG
-/// iteration; `Sync`, allocation-free after construction.
-pub struct PackedSweeps {
+/// iteration; `Sync`, allocation-free after construction. The type
+/// parameter selects the **value storage plane** — `f64` (default,
+/// bit-identical to the sequential reference) or `f32` (half the
+/// value bytes, f64 accumulation, residual contract).
+pub struct PackedSweeps<S: Scalar = f64> {
     /// Forward sweep (`G y = r`), level-major packed rows of `G`.
-    fwd: PackedTri,
+    fwd: PackedTri<S>,
     /// Backward sweep (`Gᵀ z = y`), level-major packed columns of `G`.
-    bwd: PackedTri,
+    bwd: PackedTri<S>,
     /// `fwd_pos[vertex] = forward packed position` (permuted space).
     fwd_pos: Vec<u32>,
     /// `bwd_pos[vertex] = backward packed position` (permuted space).
@@ -236,9 +254,10 @@ pub struct PackedSweeps {
     /// Boundary gather: backward position `i` reads forward position
     /// `mid[i]` (same vertex, both renumberings).
     mid: Vec<u32>,
-    /// `D` arranged in backward packed order (scaling fused into the
-    /// boundary pass; zero pivots apply pseudo-inversely).
-    diag_bwd: Vec<f64>,
+    /// `D` arranged in backward packed order, in storage precision
+    /// (scaling fused into the boundary pass; zero pivots apply
+    /// pseudo-inversely).
+    diag_bwd: Vec<S>,
     /// Composed output gather: `z[i] = y_bwd[bwd_out[i]]`; `None` ≡
     /// `bwd_pos` (same rationale as `fwd_in`).
     bwd_out: Option<Vec<u32>>,
@@ -263,9 +282,9 @@ pub struct PackedSweeps {
     barriers: AtomicU64,
 }
 
-impl PackedSweeps {
+impl<S: Scalar> PackedSweeps<S> {
     /// Analyze a factor with the [`default_cutoff`].
-    pub fn analyze(f: &LdlFactor) -> PackedSweeps {
+    pub fn analyze(f: &LdlFactor) -> PackedSweeps<S> {
         PackedSweeps::analyze_with_cutoff(f, default_cutoff())
     }
 
@@ -274,7 +293,7 @@ impl PackedSweeps {
     /// contiguously. `cutoff` is the minimum level width dispatched in
     /// parallel (clamped to at least 1). Sequential reference —
     /// equivalent to [`PackedSweeps::analyze_with_opts`] at one thread.
-    pub fn analyze_with_cutoff(f: &LdlFactor, cutoff: usize) -> PackedSweeps {
+    pub fn analyze_with_cutoff(f: &LdlFactor, cutoff: usize) -> PackedSweeps<S> {
         PackedSweeps::analyze_with_opts(f, cutoff, 1)
     }
 
@@ -285,7 +304,7 @@ impl PackedSweeps {
     /// two-pass scatters with exact per-part offsets — so the product
     /// is **bit-identical** for every thread count (asserted across the
     /// generator suite in `rust/tests/properties.rs`).
-    pub fn analyze_with_opts(f: &LdlFactor, cutoff: usize, threads: usize) -> PackedSweeps {
+    pub fn analyze_with_opts(f: &LdlFactor, cutoff: usize, threads: usize) -> PackedSweeps<S> {
         let cutoff = cutoff.max(1);
         let threads = threads.max(1);
         // Forward packing reads rows of `G`; one transient CSR
@@ -334,7 +353,7 @@ impl PackedSweeps {
             None => (None, None),
         };
         let mid = bwd_order.iter().map(|&v| fwd_pos[v as usize]).collect();
-        let diag_bwd = bwd_order.iter().map(|&v| f.diag[v as usize]).collect();
+        let diag_bwd = bwd_order.iter().map(|&v| S::from_f64(f.diag[v as usize])).collect();
         PackedSweeps {
             fwd,
             bwd,
@@ -358,19 +377,22 @@ impl PackedSweeps {
     /// sparsity structure matches the analyzed one (same `g.colptr`/
     /// `g.rowidx` and permutation) — the "near-free" half of the
     /// symbolic/numeric split. Copies values through the recorded
-    /// provenance maps; every schedule array, counter, and the barrier
-    /// stay untouched, and no heap allocation happens.
+    /// provenance maps, narrowing into storage precision exactly like
+    /// the original packing; every schedule array, counter, and the
+    /// barrier stay untouched, and no heap allocation happens.
     pub fn refill(&mut self, f: &LdlFactor) {
         debug_assert_eq!(self.n(), f.n());
         debug_assert_eq!(self.fwd.idx.len(), f.g.nnz(), "structure changed; re-analyze");
         for (dst, &s) in self.fwd.val.iter_mut().zip(&self.fwd_src) {
-            *dst = f.g.data[s];
+            *dst = S::from_f64(f.g.data[s]);
         }
         for (i, &v) in self.bwd_order.iter().enumerate() {
             let vals = f.g.col_data(v as usize);
             let base = self.bwd.ptr[i];
-            self.bwd.val[base..base + vals.len()].copy_from_slice(vals);
-            self.diag_bwd[i] = f.diag[v as usize];
+            for (dst, &w) in self.bwd.val[base..base + vals.len()].iter_mut().zip(vals) {
+                *dst = S::from_f64(w);
+            }
+            self.diag_bwd[i] = S::from_f64(f.diag[v as usize]);
         }
     }
 
@@ -378,11 +400,14 @@ impl PackedSweeps {
     /// packing, provenance, and value array (float compare is by bits).
     /// Counters and the barrier are runtime state and excluded. Used by
     /// the pooled-analysis determinism tests.
-    pub fn bitwise_eq(&self, other: &PackedSweeps) -> bool {
-        fn bits_eq(a: &[f64], b: &[f64]) -> bool {
-            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    pub fn bitwise_eq(&self, other: &PackedSweeps<S>) -> bool {
+        // `to_f64` is injective for both storage planes, so comparing
+        // widened bits is exact value-bit equality.
+        fn bits_eq<S: Scalar>(a: &[S], b: &[S]) -> bool {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| x.to_f64().to_bits() == y.to_f64().to_bits())
         }
-        fn tri_eq(a: &PackedTri, b: &PackedTri) -> bool {
+        fn tri_eq<S: Scalar>(a: &PackedTri<S>, b: &PackedTri<S>) -> bool {
             a.ptr == b.ptr
                 && a.idx == b.idx
                 && bits_eq(&a.val, &b.val)
@@ -412,6 +437,19 @@ impl PackedSweeps {
     /// `PARAC_LEVEL_CUTOFF` or [`LEVEL_PAR_CUTOFF`]).
     pub fn cutoff(&self) -> usize {
         self.cutoff
+    }
+
+    /// The storage plane of this executor's value arrays.
+    pub fn precision(&self) -> Precision {
+        S::PRECISION
+    }
+
+    /// Bytes of packed **value** storage streamed per full apply (both
+    /// sweeps' `val` arrays plus the fused diagonal) — the traffic a
+    /// narrower storage plane halves. Index/pointer bytes are excluded:
+    /// they are precision-invariant.
+    pub fn value_bytes(&self) -> usize {
+        (self.fwd.val.len() + self.bwd.val.len() + self.diag_bwd.len()) * S::BYTES
     }
 
     /// Snapshot of the cumulative dispatch/barrier counters.
@@ -447,7 +485,7 @@ impl PackedSweeps {
         }
         self.sweep(&self.fwd, y_fwd, threads);
         for i in 0..n {
-            let d = self.diag_bwd[i];
+            let d = self.diag_bwd[i].to_f64();
             y_bwd[i] = if d > 0.0 { y_fwd[self.mid[i] as usize] / d } else { 0.0 };
         }
         self.sweep(&self.bwd, y_bwd, threads);
@@ -493,15 +531,16 @@ impl PackedSweeps {
     /// when `threads <= 1` or no level clears the cutoff; otherwise one
     /// pool dispatch for the whole sweep, with resident participants
     /// barrier-syncing at level boundaries.
-    fn sweep(&self, tri: &PackedTri, y: &mut [f64], threads: usize) {
+    fn sweep(&self, tri: &PackedTri<S>, y: &mut [f64], threads: usize) {
         let n = tri.n();
         if threads.max(1) == 1 || !tri.any_wide {
             // Dependencies always sit at smaller packed positions, so
-            // one ascending pass is the whole solve.
+            // one ascending pass is the whole solve. Values widen to
+            // f64 before the multiply-subtract (identity for S = f64).
             for i in 0..n {
                 let mut acc = y[i];
                 for e in tri.ptr[i]..tri.ptr[i + 1] {
-                    acc -= tri.val[e] * y[tri.idx[e] as usize];
+                    acc -= tri.val[e].to_f64() * y[tri.idx[e] as usize];
                 }
                 y[i] = acc;
             }
@@ -517,7 +556,7 @@ impl PackedSweeps {
             let eliminate = |i: usize| unsafe {
                 let mut acc = yptr.read(i);
                 for e in tri.ptr[i]..tri.ptr[i + 1] {
-                    acc -= tri.val[e] * yptr.read(tri.idx[e] as usize);
+                    acc -= tri.val[e].to_f64() * yptr.read(tri.idx[e] as usize);
                 }
                 yptr.write(i, acc);
             };
@@ -585,7 +624,7 @@ mod tests {
         let f = seq_factor(&l);
         // Cutoff of 4 forces real pool dispatches + barriers even on
         // this small grid.
-        let packed = PackedSweeps::analyze_with_cutoff(&f, 4);
+        let packed = PackedSweeps::<f64>::analyze_with_cutoff(&f, 4);
         let n = f.n();
         let r: Vec<f64> = (0..n).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
         let want = f.solve(&r);
@@ -600,7 +639,7 @@ mod tests {
     fn packed_sweeps_match_inplace_reference() {
         let l = generators::random_connected(300, 460, 5);
         let f = seq_factor(&l);
-        let packed = PackedSweeps::analyze_with_cutoff(&f, 8);
+        let packed = PackedSweeps::<f64>::analyze_with_cutoff(&f, 8);
         let p = f.perm.as_ref().unwrap();
         let r: Vec<f64> = (0..f.n()).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
         let mut want = perm::apply_vec(p, &r);
@@ -622,7 +661,7 @@ mod tests {
         // must pay exactly one per sweep.
         let l = generators::grid3d(7, 7, 7, generators::Coeff::Uniform, 1);
         let f = seq_factor(&l);
-        let packed = PackedSweeps::analyze_with_cutoff(&f, 2);
+        let packed = PackedSweeps::<f64>::analyze_with_cutoff(&f, 2);
         assert!(packed.critical_path > 3, "need a multi-level DAG");
         let n = f.n();
         let r = vec![1.0; n];
@@ -650,7 +689,7 @@ mod tests {
         // extremes don't flip the expectation.)
         let l = generators::path(200);
         let f = seq_factor(&l);
-        let packed = PackedSweeps::analyze_with_cutoff(&f, LEVEL_PAR_CUTOFF);
+        let packed = PackedSweeps::<f64>::analyze_with_cutoff(&f, LEVEL_PAR_CUTOFF);
         let n = f.n();
         let r: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 8.0).collect();
         let want = f.solve(&r);
@@ -669,7 +708,7 @@ mod tests {
         let l = crate::graph::Laplacian::from_edges(91, &edges, "two-comp");
         let f = seq_factor(&l);
         assert_eq!(f.diag.iter().filter(|&&d| d == 0.0).count(), 2);
-        let packed = PackedSweeps::analyze_with_cutoff(&f, 4);
+        let packed = PackedSweeps::<f64>::analyze_with_cutoff(&f, 4);
         let r: Vec<f64> = (0..f.n()).map(|i| ((i * 29) % 13) as f64 - 6.0).collect();
         let want = f.solve(&r);
         let n = f.n();
@@ -684,13 +723,13 @@ mod tests {
         // packing / inversion paths rather than their fallbacks.
         let l = generators::grid2d(50, 50, generators::Coeff::HighContrast(3.0), 3);
         let f = seq_factor(&l);
-        let reference = PackedSweeps::analyze_with_opts(&f, 4, 1);
+        let reference = PackedSweeps::<f64>::analyze_with_opts(&f, 4, 1);
         for threads in [2usize, 4] {
-            let pooled = PackedSweeps::analyze_with_opts(&f, 4, threads);
+            let pooled = PackedSweeps::<f64>::analyze_with_opts(&f, 4, threads);
             assert!(pooled.bitwise_eq(&reference), "threads={threads}");
         }
         // Refilling from the same factor must be a bitwise no-op.
-        let mut refilled = PackedSweeps::analyze_with_opts(&f, 4, 2);
+        let mut refilled = PackedSweeps::<f64>::analyze_with_opts(&f, 4, 2);
         refilled.refill(&f);
         assert!(refilled.bitwise_eq(&reference));
         // And the refilled executor still solves correctly.
@@ -700,6 +739,40 @@ mod tests {
         let (mut z, mut a, mut b) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
         refilled.apply_into(&r, &mut z, 4, &mut a, &mut b);
         assert_eq!(z, want);
+    }
+
+    #[test]
+    fn f32_plane_halves_value_bytes_and_stays_close() {
+        let l = generators::grid2d(30, 30, generators::Coeff::HighContrast(3.0), 9);
+        let f = seq_factor(&l);
+        let p64 = PackedSweeps::<f64>::analyze_with_cutoff(&f, 4);
+        let p32 = PackedSweeps::<f32>::analyze_with_cutoff(&f, 4);
+        assert_eq!(p64.precision(), crate::sparse::Precision::F64);
+        assert_eq!(p32.precision(), crate::sparse::Precision::F32);
+        // The value traffic is exactly halved — same entry counts,
+        // half the bytes per entry.
+        assert_eq!(p32.value_bytes() * 2, p64.value_bytes());
+        // The f32 apply is not bit-identical, but must stay close to
+        // the f64 plane (f32 rounding on a well-conditioned factor):
+        // the residual contract the solver layer builds on.
+        let n = f.n();
+        let r: Vec<f64> = (0..n).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let (mut z64, mut z32) = (vec![0.0; n], vec![0.0; n]);
+        let (mut a, mut b) = (vec![0.0; n], vec![0.0; n]);
+        p64.apply_into(&r, &mut z64, 1, &mut a, &mut b);
+        p32.apply_into(&r, &mut z32, 1, &mut a, &mut b);
+        let scale = z64.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1.0);
+        for (i, (x, y)) in z64.iter().zip(&z32).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-4 * scale,
+                "f32 plane drifted at {i}: {x} vs {y}"
+            );
+        }
+        // And thread count still changes nothing within the f32 plane:
+        // the sweep structure is precision-independent.
+        let mut z32t = vec![0.0; n];
+        p32.apply_into(&r, &mut z32t, 4, &mut a, &mut b);
+        assert_eq!(z32, z32t, "f32 plane must stay thread-invariant");
     }
 
     #[test]

@@ -34,6 +34,21 @@
 //! passes outside the SpMV and the preconditioner apply roughly in half
 //! while staying **bit-identical** to the unfused formulation (pinned
 //! by `fused_pcg_matches_unfused_reference` below).
+//!
+//! ## The f32 refinement guard
+//!
+//! When the preconditioner reports
+//! [`Precision::F32`](crate::sparse::Precision) storage
+//! ([`Preconditioner::precision`]), its apply obeys a residual contract
+//! instead of the bit-identity contract, and the driver arms a guard:
+//! the true (f64) relative residual is tracked every iteration, and on
+//! a non-finite value, a `pᵀAp` breakdown, or
+//! [`F32_STAGNATION_WINDOW`] iterations without improvement, the driver
+//! asks the preconditioner to
+//! [`promote_to_f64`](Preconditioner::promote_to_f64), rebuilds the
+//! Krylov state from the current iterate, and continues — counting the
+//! event in [`SolveStats::fallbacks`]. F64-plane solves never take any
+//! of these branches, so the bit-identity pins are unaffected.
 
 use crate::precond::Preconditioner;
 use crate::solve::linop::LinearOperator;
@@ -41,6 +56,13 @@ use crate::sparse::ops::{
     dot, fused_axpy2, fused_axpy2_nrm2sq, fused_init_dir, fused_project_dot,
     fused_project_nrm2sq, fused_search_dir, mean, nrm2, project_mean_zero,
 };
+use crate::sparse::Precision;
+
+/// Iterations without a new best true residual before the f32
+/// refinement guard declares stagnation and promotes the preconditioner
+/// to its f64 plane. Generous on purpose: PCG residuals are not
+/// monotone, and a premature promotion wastes the cheap plane.
+pub const F32_STAGNATION_WINDOW: usize = 40;
 
 /// PCG options.
 #[derive(Clone, Debug)]
@@ -95,6 +117,14 @@ pub struct SolveStats {
     pub precond_dispatches: u64,
     /// In-sweep level-boundary barrier episodes during this solve.
     pub precond_barriers: u64,
+    /// The value plane the preconditioner **ended** the solve in:
+    /// `F64` for every baseline and for an f32 session that the
+    /// refinement guard promoted mid-solve; `F32` only when the whole
+    /// solve ran on the f32 plane.
+    pub precision: Precision,
+    /// f32 → f64 refinement-guard promotions during this solve (0 or
+    /// 1: a session promotes at most once, and f64 sessions never do).
+    pub fallbacks: u32,
 }
 
 /// Reusable buffers for [`solve_into`]: the five Krylov-loop vectors
@@ -233,14 +263,67 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
     let mut rz = fused_init_dir(z, mz, r, p);
     let mut iters = 0;
     let mut converged = false;
+    // F32 refinement guard (module docs): armed only when the
+    // preconditioner stores its factor in f32. Every guard branch below
+    // is dead on the f64 plane, keeping the bit-identity pins intact.
+    let mut guard = m.precision() == Precision::F32;
+    let mut fallbacks: u32 = 0;
+    let mut best_rel = f64::INFINITY;
+    let mut since_best = 0usize;
 
-    for it in 1..=opts.max_iter {
-        iters = it;
+    // Promote to the f64 plane and rebuild the Krylov state from the
+    // current iterate (true residual, fresh z and p). A non-finite
+    // iterate cannot seed a restart, so it drops back to x = 0.
+    macro_rules! restart_on_f64_plane {
+        () => {{
+            if x.iter().any(|v| !v.is_finite()) || x.iter().all(|v| *v == 0.0) {
+                // Also taken when the guard fired on the very first
+                // apply (x still zero): the restart is then exactly a
+                // clean f64-plane solve, not an A·0 detour.
+                x.fill(0.0);
+                r.copy_from_slice(bwork);
+            } else {
+                a.apply_to(x, ap);
+                for i in 0..n {
+                    r[i] = bwork[i] - ap[i];
+                }
+                if opts.project {
+                    project_mean_zero(r);
+                }
+            }
+            m.apply_scratch(r, z, pre_a, pre_b);
+            let mz = if opts.project { mean(z) } else { 0.0 };
+            rz = fused_init_dir(z, mz, r, p);
+            best_rel = f64::INFINITY;
+            since_best = 0;
+        }};
+    }
+
+    // A non-finite initial rz means the f32 plane overflowed (or
+    // NaN-ed) on the very first apply — promote before iterating.
+    if guard && !rz.is_finite() {
+        guard = false;
+        if m.promote_to_f64() {
+            fallbacks += 1;
+            restart_on_f64_plane!();
+        }
+    }
+
+    while iters < opts.max_iter {
+        iters += 1;
         a.apply_to(p, ap);
         let pap = dot(p, ap);
         if pap <= 0.0 || !pap.is_finite() {
+            if guard {
+                guard = false;
+                if m.promote_to_f64() {
+                    fallbacks += 1;
+                    restart_on_f64_plane!();
+                    continue;
+                }
+            }
             // Breakdown (semi-definite direction) — stop with best x.
-            iters = it - 1;
+            iters -= 1;
             break;
         }
         let alpha = rz / pap;
@@ -259,9 +342,33 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
             converged = true;
             break;
         }
+        if guard {
+            if rel.is_finite() && rel < best_rel {
+                best_rel = rel;
+                since_best = 0;
+            } else {
+                since_best += 1;
+            }
+            if !rel.is_finite() || since_best >= F32_STAGNATION_WINDOW {
+                guard = false;
+                if m.promote_to_f64() {
+                    fallbacks += 1;
+                    restart_on_f64_plane!();
+                    continue;
+                }
+            }
+        }
         m.apply_scratch(r, z, pre_a, pre_b);
         let mz = if opts.project { mean(z) } else { 0.0 };
         let rz_new = fused_project_dot(r, z, mz);
+        if guard && !rz_new.is_finite() {
+            guard = false;
+            if m.promote_to_f64() {
+                fallbacks += 1;
+                restart_on_f64_plane!();
+                continue;
+            }
+        }
         let beta = rz_new / rz;
         rz = rz_new;
         fused_search_dir(z, mz, beta, p);
@@ -285,6 +392,9 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
         converged,
         precond_dispatches: sweeps.dispatches,
         precond_barriers: sweeps.barriers,
+        // Sampled after the solve: a mid-solve promotion reports F64.
+        precision: m.precision(),
+        fallbacks,
     }
 }
 
@@ -520,6 +630,73 @@ mod tests {
         assert_eq!(got.iters, want.iters);
         assert_eq!(got.history, want.history);
         assert_eq!(got.rel_residual.to_bits(), want.rel_residual.to_bits());
+    }
+
+    /// Test double for the refinement guard: reports f32 storage and
+    /// poisons every apply with NaN until promoted, then delegates to a
+    /// real Jacobi preconditioner — the same observable shape as an
+    /// overflowed f32 packed plane backed by an f64 fallback.
+    struct FlakyF32 {
+        inner: JacobiPrecond,
+        promoted: std::sync::atomic::AtomicBool,
+    }
+
+    impl crate::precond::Preconditioner for FlakyF32 {
+        fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+            if self.promoted.load(std::sync::atomic::Ordering::Acquire) {
+                self.inner.apply_into(r, z);
+            } else {
+                z[..r.len()].fill(f64::NAN);
+            }
+        }
+        fn name(&self) -> &'static str {
+            "flaky-f32"
+        }
+        fn precision(&self) -> crate::sparse::Precision {
+            if self.promoted.load(std::sync::atomic::Ordering::Acquire) {
+                crate::sparse::Precision::F64
+            } else {
+                crate::sparse::Precision::F32
+            }
+        }
+        fn promote_to_f64(&self) -> bool {
+            !self.promoted.swap(true, std::sync::atomic::Ordering::AcqRel)
+        }
+    }
+
+    #[test]
+    fn refinement_guard_promotes_a_poisoned_f32_plane_and_converges() {
+        let l = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let b = random_rhs(&l, 7);
+        let pre = FlakyF32 {
+            inner: JacobiPrecond::new(&l.matrix),
+            promoted: std::sync::atomic::AtomicBool::new(false),
+        };
+        let o = PcgOptions { max_iter: 5000, ..Default::default() };
+        let mut ws = PcgWorkspace::new(l.n());
+        let mut x = vec![0.0; l.n()];
+        let stats = solve_into(&l.matrix, &b, &pre, &o, &mut ws, &mut x);
+        assert!(stats.converged, "rel={}", stats.rel_residual);
+        assert_eq!(stats.fallbacks, 1, "exactly one guard promotion");
+        assert_eq!(stats.precision, crate::sparse::Precision::F64);
+        // The guard fired before the first iteration (non-finite rz at
+        // init), so the restarted solve is exactly a clean Jacobi run.
+        let plain = solve(&l.matrix, &b, &pre.inner, &o);
+        assert_eq!(x, plain.x, "restart from x = 0 must match a clean solve");
+        assert_eq!(stats.iters, plain.iters);
+    }
+
+    #[test]
+    fn f64_solves_report_no_fallbacks() {
+        let l = generators::grid2d(8, 8, generators::Coeff::Uniform, 0);
+        let b = random_rhs(&l, 3);
+        let pre = JacobiPrecond::new(&l.matrix);
+        let mut ws = PcgWorkspace::new(l.n());
+        let mut x = vec![0.0; l.n()];
+        let stats = solve_into(&l.matrix, &b, &pre, &PcgOptions::default(), &mut ws, &mut x);
+        assert!(stats.converged);
+        assert_eq!(stats.fallbacks, 0);
+        assert_eq!(stats.precision, crate::sparse::Precision::F64);
     }
 
     #[test]

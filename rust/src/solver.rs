@@ -57,6 +57,17 @@
 //! * [`Solver::solve_batch`] runs many right-hand sides through one
 //!   session: one factor, one pool, one workspace, results
 //!   **bit-identical** to looping [`Solver::solve_into`] per RHS.
+//! * [`SolverBuilder::precision`] picks the value-storage plane of the
+//!   ParAC preconditioner ([`Precision::F64`], the default, keeps every
+//!   bit-identity guarantee; [`Precision::F32`] halves the bytes each
+//!   apply streams, with an automatic mid-solve fallback to f64 for
+//!   systems too ill-conditioned for narrow storage — see
+//!   [`crate::sparse::scalar`] and the crate-level "Precision"
+//!   section). Unset, the `PARAC_PRECISION` environment variable is
+//!   consulted, then f64. The resolved plane is reported in
+//!   [`FactorStats::precision`] and per-solve in
+//!   [`SolveStats::precision`] /
+//!   [`SolveStats::fallbacks`](crate::solve::pcg::SolveStats::fallbacks).
 //! * [`SolverBuilder::build_shared`] returns a `Solver<'static>` that
 //!   **owns** its Laplacian through an [`Arc`] — the form the
 //!   [`crate::serve`] factor cache stores and shares across clients.
@@ -103,7 +114,7 @@ use crate::precond::amg::AmgOptions;
 use crate::serve::WorkspacePool;
 use crate::solve::linop::LinearOperator;
 use crate::solve::pcg::{self, PcgOptions, PcgResult, PcgWorkspace, SolveStats};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, Precision};
 use crate::util::Timer;
 use std::sync::{Arc, Mutex};
 
@@ -312,6 +323,21 @@ impl SolverBuilder {
         self
     }
 
+    /// Value-storage plane for the ParAC preconditioner's packed
+    /// triangular sweeps (the factorization itself always computes in
+    /// f64). [`Precision::F64`] — the default — keeps the bit-identity
+    /// contract; [`Precision::F32`] halves the bytes streamed per
+    /// apply, obeys a residual contract instead, and arms the
+    /// [refinement guard](crate::solve::pcg) that transparently
+    /// promotes back to f64 if the narrowed plane stagnates or
+    /// overflows. Unset, the `PARAC_PRECISION` environment variable
+    /// (then f64) decides. Ignored by the baseline preconditioners,
+    /// which all store doubles.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.parac.precision = Some(precision);
+        self
+    }
+
     /// PCG relative-residual tolerance.
     pub fn tol(mut self, tol: f64) -> Self {
         self.pcg.tol = tol;
@@ -405,9 +431,11 @@ impl SolverBuilder {
         let (pre, stats): (Box<dyn Preconditioner>, _) = match &self.precond {
             PrecondKind::Parac { level_threads } => {
                 let f = factor::factorize_sdd(a, &self.parac)?;
-                let stats = f.stats.clone();
+                let precision = self.resolved_precision();
+                let mut stats = f.stats.clone();
+                stats.precision = precision;
                 (
-                    wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff),
+                    wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff, precision),
                     Some(stats),
                 )
             }
@@ -486,15 +514,24 @@ impl SolverBuilder {
             PrecondKind::Parac { level_threads } => {
                 let mut sym = self.build_symbolic(lap)?;
                 let f = sym.factorize(lap)?;
-                let stats = f.stats.clone();
+                let precision = self.resolved_precision();
+                let mut stats = f.stats.clone();
+                stats.precision = precision;
                 Ok((
-                    wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff),
+                    wrap_ldl(f, self.level_threads(*level_threads), self.level_cutoff, precision),
                     Some(stats),
                     Some(sym),
                 ))
             }
             other => Ok((build_baseline(&lap.matrix, other, self.solve_threads())?, None, None)),
         }
+    }
+
+    /// Resolve the value-storage plane: an explicit
+    /// [`SolverBuilder::precision`] wins, then the `PARAC_PRECISION`
+    /// environment variable, then [`Precision::F64`].
+    fn resolved_precision(&self) -> Precision {
+        self.parac.precision.or_else(Precision::from_env).unwrap_or_default()
     }
 
     /// Resolve the `threads` knob (0 = every worker of the global pool).
@@ -522,19 +559,33 @@ impl SolverBuilder {
 
 /// Wrap a ParAC factor as a preconditioner, with or without the
 /// level-scheduled (packed-executor) parallel solve; `cutoff = None`
-/// resolves to the environment/default cutoff.
+/// resolves to the environment/default cutoff. An `F32` plane always
+/// routes through the packed executor — the sequential factor solve
+/// has no narrowed storage — so `level_threads = 0` degrades to a
+/// single-worker packed analysis there.
 fn wrap_ldl(
     f: crate::factor::LdlFactor,
     level_threads: usize,
     cutoff: Option<usize>,
+    precision: Precision,
 ) -> Box<dyn Preconditioner> {
-    if level_threads > 0 {
-        Box::new(match cutoff {
-            Some(c) => LdlPrecond::with_level_schedule_cutoff(f, level_threads, c),
-            None => LdlPrecond::with_level_schedule(f, level_threads),
-        })
-    } else {
-        Box::new(LdlPrecond::new(f))
+    match precision {
+        Precision::F64 => {
+            if level_threads > 0 {
+                Box::new(match cutoff {
+                    Some(c) => LdlPrecond::with_level_schedule_cutoff(f, level_threads, c),
+                    None => LdlPrecond::with_level_schedule(f, level_threads),
+                })
+            } else {
+                Box::new(LdlPrecond::new(f))
+            }
+        }
+        Precision::F32 => Box::new(LdlPrecond::with_level_schedule_precision(
+            f,
+            level_threads.max(1),
+            cutoff.unwrap_or_else(crate::solve::packed::default_cutoff),
+            Precision::F32,
+        )),
     }
 }
 
@@ -1078,6 +1129,32 @@ mod tests {
                 "{bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn f32_precision_session_converges_and_reports_the_plane() {
+        let lap = generators::grid2d(20, 20, generators::Coeff::HighContrast(3.0), 1);
+        let b = pcg::random_rhs(&lap, 8);
+        let mut s64 = Solver::builder().seed(2).precision(Precision::F64).build(&lap).unwrap();
+        let mut s32 = Solver::builder().seed(2).precision(Precision::F32).build(&lap).unwrap();
+        assert_eq!(s64.factor_stats().unwrap().precision, Precision::F64);
+        assert_eq!(s32.factor_stats().unwrap().precision, Precision::F32);
+        let mut x64 = vec![0.0; lap.n()];
+        let mut x32 = vec![0.0; lap.n()];
+        let st64 = s64.solve_into(&b, &mut x64).unwrap();
+        let st32 = s32.solve_into(&b, &mut x32).unwrap();
+        assert!(st64.converged && st32.converged);
+        assert_eq!((st64.precision, st64.fallbacks), (Precision::F64, 0));
+        // This benign grid converges on the narrow plane without the
+        // guard firing, and within the iteration-budget contract.
+        assert_eq!((st32.precision, st32.fallbacks), (Precision::F32, 0));
+        assert!(st32.rel_residual <= s32.pcg_options().tol);
+        assert!(
+            st32.iters as f64 <= (st64.iters as f64 * 1.3).ceil(),
+            "f32 iters {} vs f64 iters {}",
+            st32.iters,
+            st64.iters
+        );
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Compressed sparse row format — the crate's primary operator format.
 
+use crate::sparse::scalar::Scalar;
+
 /// Rows below which [`Csr::spmv_par`] runs the sequential kernel —
 /// pool-dispatch latency would dominate the arithmetic.
 pub const PAR_SPMV_CUTOFF: usize = 1024;
@@ -64,6 +66,16 @@ impl Csr {
 
     /// `y = A·x`.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_with(&self.data, x, y);
+    }
+
+    /// `y = A·x` with the matrix **values** supplied externally in any
+    /// [`Scalar`] storage plane (`vals` parallel to `self.indices`,
+    /// e.g. from [`Csr::values_as`]). Accumulation is f64 regardless
+    /// of storage — with `vals = &self.data` this *is* [`Csr::spmv`]
+    /// bit for bit; with f32 values the streamed matrix bytes halve.
+    pub fn spmv_with<S: Scalar>(&self, vals: &[S], x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(vals.len(), self.nnz());
         debug_assert_eq!(x.len(), self.ncols);
         debug_assert_eq!(y.len(), self.nrows);
         for r in 0..self.nrows {
@@ -71,7 +83,7 @@ impl Csr {
             let lo = self.indptr[r];
             let hi = self.indptr[r + 1];
             for k in lo..hi {
-                acc += self.data[k] * x[self.indices[k] as usize];
+                acc += vals[k].to_f64() * x[self.indices[k] as usize];
             }
             y[r] = acc;
         }
@@ -85,10 +97,20 @@ impl Csr {
     /// [`PAR_SPMV_CUTOFF`] rows or with `threads <= 1`. Allocation-free
     /// (the dispatch borrows the closure from this stack frame).
     pub fn spmv_par(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        self.spmv_with_par(&self.data, x, y, threads);
+    }
+
+    /// [`Csr::spmv_par`] over externally supplied values in any
+    /// [`Scalar`] storage plane — the same row-split pool dispatch,
+    /// same per-row f64 accumulation order, so within one plane the
+    /// result is bit-identical to [`Csr::spmv_with`] at any thread
+    /// count.
+    pub fn spmv_with_par<S: Scalar>(&self, vals: &[S], x: &[f64], y: &mut [f64], threads: usize) {
+        debug_assert_eq!(vals.len(), self.nnz());
         debug_assert_eq!(x.len(), self.ncols);
         debug_assert_eq!(y.len(), self.nrows);
         if threads <= 1 || self.nrows < PAR_SPMV_CUTOFF {
-            return self.spmv(x, y);
+            return self.spmv_with(vals, x, y);
         }
         let yptr = crate::par::SendPtr::new(y.as_mut_ptr());
         crate::par::global().run(threads, |part, parts| {
@@ -96,13 +118,20 @@ impl Csr {
             for r in lo..hi {
                 let mut acc = 0.0;
                 for k in self.indptr[r]..self.indptr[r + 1] {
-                    acc += self.data[k] * x[self.indices[k] as usize];
+                    acc += vals[k].to_f64() * x[self.indices[k] as usize];
                 }
                 // SAFETY: row ranges are disjoint across parts and `y`
                 // outlives the (blocking) dispatch.
                 unsafe { yptr.write(r, acc) };
             }
         });
+    }
+
+    /// The value array narrowed into storage plane `S` (parallel to
+    /// `self.indices`), for use with [`Csr::spmv_with`] /
+    /// [`Csr::spmv_with_par`]. For `S = f64` this is a plain copy.
+    pub fn values_as<S: Scalar>(&self) -> Vec<S> {
+        self.data.iter().map(|&v| S::from_f64(v)).collect()
     }
 
     /// Allocating SpMV convenience.
@@ -379,6 +408,41 @@ mod tests {
         let mut one = vec![f64::NAN; n];
         a.spmv_par(&x, &mut one, 1);
         assert_eq!(seq, one);
+    }
+
+    #[test]
+    fn spmv_with_planes_share_the_row_split_kernel() {
+        // Same matrix as the bitwise test above, exercised through the
+        // scalar-storage layer: the f64 plane is bit-identical to the
+        // classic kernel, and the f32 plane is thread-invariant within
+        // itself (same accumulation order, only the values rounded).
+        let n = 2 * PAR_SPMV_CUTOFF;
+        let mut c = Coo::new(n, n);
+        for i in 0..n {
+            c.push(i as u32, i as u32, 2.0);
+        }
+        for i in 0..n - 1 {
+            c.push_sym(i as u32, (i + 1) as u32, -(1.0 + (i % 3) as f64 * 0.1));
+        }
+        let a = c.to_csr();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut want = vec![0.0; n];
+        a.spmv(&x, &mut want);
+
+        let v64 = a.values_as::<f64>();
+        let mut y64 = vec![f64::NAN; n];
+        a.spmv_with_par(&v64, &x, &mut y64, 4);
+        assert_eq!(want, y64, "f64 plane must match spmv bit for bit");
+
+        let v32 = a.values_as::<f32>();
+        let mut y32 = vec![f64::NAN; n];
+        a.spmv_with(&v32, &x, &mut y32);
+        let mut y32p = vec![f64::NAN; n];
+        a.spmv_with_par(&v32, &x, &mut y32p, 4);
+        assert_eq!(y32, y32p, "f32 plane must be thread-invariant");
+        for (w, y) in want.iter().zip(&y32) {
+            assert!((w - y).abs() <= 1e-4 * (1.0 + w.abs()), "f32 plane drifted: {w} vs {y}");
+        }
     }
 
     #[test]

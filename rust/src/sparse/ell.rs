@@ -5,12 +5,21 @@
 //! a CSR operator to `(n_pad, width)`: every row gets exactly `width`
 //! slots; unused slots carry column `row` (a self-reference) and value
 //! `0.0` so gathers stay in-bounds and contribute nothing.
+//!
+//! Value storage rides the crate-wide [`Scalar`] layer. The default
+//! plane is `f32` — what the compiled Pallas `spmv_ell` kernel and the
+//! PJRT `run_f32` path consume — but `Ell<f64>` is available for
+//! oracles and for backends that execute in double; [`Ell::spmv_ref`]
+//! accumulates in f64 in every plane.
 
 use super::csr::Csr;
+use super::scalar::Scalar;
 
-/// A padded ELL matrix with fixed row width.
+/// A padded ELL matrix with fixed row width. `S` selects the value
+/// (and vector) storage plane; the default `f32` matches the GPU
+/// kernels' element type.
 #[derive(Clone, Debug)]
-pub struct Ell {
+pub struct Ell<S: Scalar = f32> {
     /// Logical number of rows (≤ `n_pad`).
     pub nrows: usize,
     /// Padded number of rows (the compiled kernel's static dimension).
@@ -19,14 +28,15 @@ pub struct Ell {
     pub width: usize,
     /// Column indices, row-major `(n_pad, width)`.
     pub cols: Vec<i32>,
-    /// Values, row-major `(n_pad, width)`.
-    pub vals: Vec<f32>,
+    /// Values in storage precision, row-major `(n_pad, width)`.
+    pub vals: Vec<S>,
 }
 
-impl Ell {
-    /// Pad `a` to `(n_pad, width)`. Fails if any row has more than
-    /// `width` entries or `a.nrows > n_pad`.
-    pub fn from_csr(a: &Csr, n_pad: usize, width: usize) -> Result<Ell, String> {
+impl<S: Scalar> Ell<S> {
+    /// Pad `a` to `(n_pad, width)`, narrowing values into the storage
+    /// plane. Fails if any row has more than `width` entries or
+    /// `a.nrows > n_pad`.
+    pub fn from_csr(a: &Csr, n_pad: usize, width: usize) -> Result<Ell<S>, String> {
         if a.nrows > n_pad {
             return Err(format!("nrows {} exceeds n_pad {}", a.nrows, n_pad));
         }
@@ -35,7 +45,7 @@ impl Ell {
             return Err(format!("row width {max_row} exceeds ELL width {width}"));
         }
         let mut cols = vec![0i32; n_pad * width];
-        let mut vals = vec![0f32; n_pad * width];
+        let mut vals = vec![S::from_f64(0.0); n_pad * width];
         for r in 0..n_pad {
             for k in 0..width {
                 cols[r * width + k] = r.min(n_pad - 1) as i32; // safe self-reference
@@ -46,7 +56,7 @@ impl Ell {
             let dat = a.row_data(r);
             for (k, (&c, &v)) in idx.iter().zip(dat).enumerate() {
                 cols[r * width + k] = c as i32;
-                vals[r * width + k] = v as f32;
+                vals[r * width + k] = S::from_f64(v);
             }
         }
         Ok(Ell { nrows: a.nrows, n_pad, width, cols, vals })
@@ -54,28 +64,35 @@ impl Ell {
 
     /// Reference SpMV in f64 accumulation (oracle for the Pallas kernel
     /// and for tests). `x` has length `n_pad`.
-    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+    pub fn spmv_ref(&self, x: &[S]) -> Vec<S> {
         assert_eq!(x.len(), self.n_pad);
-        let mut y = vec![0f32; self.n_pad];
+        let mut y = vec![S::from_f64(0.0); self.n_pad];
         for r in 0..self.n_pad {
             let mut acc = 0f64;
             for k in 0..self.width {
                 let c = self.cols[r * self.width + k] as usize;
-                acc += self.vals[r * self.width + k] as f64 * x[c] as f64;
+                acc += self.vals[r * self.width + k].to_f64() * x[c].to_f64();
             }
-            y[r] = acc as f32;
+            y[r] = S::from_f64(acc);
         }
         y
     }
 
-    /// Pad a length-`nrows` vector to `n_pad` with zeros.
-    pub fn pad_vec(&self, x: &[f64]) -> Vec<f32> {
+    /// Pad a length-`nrows` vector to `n_pad` with zeros, narrowing
+    /// into the storage plane.
+    pub fn pad_vec(&self, x: &[f64]) -> Vec<S> {
         assert_eq!(x.len(), self.nrows);
-        let mut out = vec![0f32; self.n_pad];
+        let mut out = vec![S::from_f64(0.0); self.n_pad];
         for (o, &v) in out.iter_mut().zip(x.iter()) {
-            *o = v as f32;
+            *o = S::from_f64(v);
         }
         out
+    }
+
+    /// Bytes of value storage (`vals` only — `cols` is
+    /// precision-invariant).
+    pub fn value_bytes(&self) -> usize {
+        self.vals.len() * S::BYTES
     }
 }
 
@@ -88,7 +105,7 @@ mod tests {
     fn ell_matches_csr_spmv() {
         let lap = generators::grid2d(8, 8, generators::Coeff::Uniform, 3);
         let a = &lap.matrix;
-        let ell = Ell::from_csr(a, 80, 8).unwrap();
+        let ell = Ell::<f32>::from_csr(a, 80, 8).unwrap();
         let x: Vec<f64> = (0..a.nrows).map(|i| (i as f64 * 0.37).sin()).collect();
         let y_csr = a.mul_vec(&x);
         let xp = ell.pad_vec(&x);
@@ -102,8 +119,26 @@ mod tests {
     }
 
     #[test]
+    fn f64_plane_matches_csr_exactly_and_doubles_bytes() {
+        let lap = generators::grid2d(8, 8, generators::Coeff::Uniform, 3);
+        let a = &lap.matrix;
+        let e32 = Ell::<f32>::from_csr(a, 80, 8).unwrap();
+        let e64 = Ell::<f64>::from_csr(a, 80, 8).unwrap();
+        assert_eq!(e64.value_bytes(), 2 * e32.value_bytes());
+        // In the f64 plane the padded SpMV reproduces CSR bit for bit
+        // on the logical rows: same values, f64 accumulation, and the
+        // padding slots contribute v·0 with in-bounds self-references.
+        let x: Vec<f64> = (0..a.nrows).map(|i| (i as f64 * 0.29).cos()).collect();
+        let y_csr = a.mul_vec(&x);
+        let y_ell = e64.spmv_ref(&e64.pad_vec(&x));
+        for i in 0..a.nrows {
+            assert_eq!(y_csr[i], y_ell[i], "row {i}");
+        }
+    }
+
+    #[test]
     fn width_overflow_rejected() {
         let lap = generators::grid2d(4, 4, generators::Coeff::Uniform, 3);
-        assert!(Ell::from_csr(&lap.matrix, 16, 2).is_err());
+        assert!(Ell::<f32>::from_csr(&lap.matrix, 16, 2).is_err());
     }
 }

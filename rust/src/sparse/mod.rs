@@ -15,7 +15,10 @@
 //!
 //! Conventions:
 //! * Row/column indices are `u32` (matrices up to 4·10⁹ rows — far beyond
-//!   the paper's largest testcase), values are `f64`.
+//!   the paper's largest testcase). Values are `f64` in the assembly and
+//!   operator formats; kernels that *stream* values (packed sweeps, SpMV,
+//!   ELL) are generic over the [`scalar::Scalar`] storage layer (`f64` or
+//!   `f32` storage, always f64 accumulation).
 //! * Symmetric matrices are stored with **both** triangles unless a type
 //!   says otherwise (`Csc` factor columns store strictly-lower entries).
 
@@ -25,8 +28,10 @@ pub mod csr;
 pub mod ell;
 pub mod mm;
 pub mod ops;
+pub mod scalar;
 
 pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
+pub use scalar::{Precision, Scalar};

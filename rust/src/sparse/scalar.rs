@@ -1,0 +1,193 @@
+//! The scalar-storage layer: which float type *stores* matrix values.
+//!
+//! Every kernel in this crate that streams matrix values — the packed
+//! triangular sweeps (`solve::packed`), row-split SpMV
+//! (`sparse::csr`), the ELL plane (`sparse::ell`) — is
+//! bandwidth-bound: the bytes of the `val` arrays are the cost. This
+//! module makes that byte width a type parameter. [`Scalar`] is a
+//! **sealed** trait implemented for exactly `f64` and `f32`;
+//! generic kernels store `Vec<S>` but always *accumulate in f64*
+//! (`S::to_f64` per loaded value), so `f32` halves the traffic of the
+//! memory-bound inner loops while the arithmetic stays double.
+//!
+//! The contract is two-tier:
+//!
+//! - **`f64` plane** — `from_f64`/`to_f64` are the identity, so every
+//!   generic kernel is bit-identical to the pre-generic code. All
+//!   bit-identity pins (engines × orderings × threads) keep holding.
+//! - **`f32` plane** — values round on store. Bit-identity is
+//!   deliberately traded for a *residual contract*: PCG still
+//!   converges to the same f64 tolerance (the preconditioner only
+//!   needs to be spectrally close, not exact), with iteration counts
+//!   within a budgeted factor of the f64 plane, and a fallback guard
+//!   in `solve::pcg` for systems too ill-conditioned for f32 storage.
+//!
+//! [`Precision`] is the user-facing name for the choice, parsed from
+//! the CLI (`--precision`), the `PARAC_PRECISION` environment
+//! variable, or set via `SolverBuilder::precision`.
+
+use crate::error::ParacError;
+
+mod sealed {
+    /// Seals [`super::Scalar`]: only `f64` and `f32` ever implement
+    /// it, so generic kernels may rely on the exact conversion
+    /// semantics documented there.
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// A float type usable as *storage* for matrix values.
+///
+/// Sealed: implemented for `f64` (identity conversions — generic code
+/// is bit-identical to hand-written f64 code) and `f32` (values round
+/// on store; kernels convert back with [`Scalar::to_f64`] and
+/// accumulate in f64).
+pub trait Scalar:
+    sealed::Sealed + Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static
+{
+    /// Human-readable name of this storage plane (`"f64"` / `"f32"`).
+    const NAME: &'static str;
+    /// Bytes per stored value (8 / 4).
+    const BYTES: usize;
+    /// The [`Precision`] tag naming this storage type.
+    const PRECISION: Precision;
+    /// Narrow an f64 value into this storage type (identity for f64).
+    fn from_f64(v: f64) -> Self;
+    /// Widen a stored value back to f64 for accumulation (identity
+    /// for f64).
+    fn to_f64(self) -> f64;
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    const BYTES: usize = 8;
+    const PRECISION: Precision = Precision::F64;
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    const BYTES: usize = 4;
+    const PRECISION: Precision = Precision::F32;
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// Which storage plane the preconditioner's value arrays use.
+///
+/// `F64` (the default) keeps every bit-identity guarantee. `F32`
+/// halves the bytes streamed per preconditioner apply — the win on a
+/// bandwidth-bound kernel — at the cost of bit-identity: results obey
+/// a residual contract instead (converged to the same tolerance,
+/// iteration counts within a budgeted factor of f64, automatic f64
+/// fallback on stagnation or non-finite arithmetic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// 8-byte value storage; bit-identical to the sequential
+    /// reference (the crate's historical behavior).
+    #[default]
+    F64,
+    /// 4-byte value storage with f64 accumulation; residual contract
+    /// instead of bit-identity.
+    F32,
+}
+
+impl Precision {
+    /// Canonical lowercase name (`"f64"` / `"f32"`), round-tripping
+    /// through [`Precision::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse a precision name from the CLI / environment.
+    ///
+    /// Accepts `f64`/`f32` (any ASCII case) and the common synonyms
+    /// `double`/`single`. Anything else is a typed
+    /// [`ParacError::InvalidOption`].
+    pub fn parse(s: &str) -> Result<Precision, ParacError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" | "fp64" | "double" => Ok(Precision::F64),
+            "f32" | "fp32" | "single" => Ok(Precision::F32),
+            _ => Err(ParacError::InvalidOption {
+                what: "precision",
+                got: s.to_string(),
+            }),
+        }
+    }
+
+    /// The `PARAC_PRECISION` environment override, if set and
+    /// parsable. Unset or unparsable values yield `None` (mirroring
+    /// how `PARAC_LEVEL_CUTOFF` ignores garbage rather than failing a
+    /// run at solve time).
+    pub fn from_env() -> Option<Precision> {
+        std::env::var("PARAC_PRECISION").ok().and_then(|s| Precision::parse(&s).ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_conversions_are_the_identity() {
+        for v in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, 1e308, -3.25e-200] {
+            assert_eq!(f64::from_f64(v).to_bits(), v.to_bits());
+            assert_eq!(v.to_f64().to_bits(), v.to_bits());
+        }
+        assert_eq!(f64::BYTES, 8);
+        assert_eq!(f64::NAME, "f64");
+        assert_eq!(f64::PRECISION, Precision::F64);
+    }
+
+    #[test]
+    fn f32_round_trips_through_f64_accumulation() {
+        // Exactly representable values survive the round trip...
+        for v in [0.0, 1.5, -2.0, 1024.25] {
+            assert_eq!(f32::from_f64(v).to_f64(), v);
+        }
+        // ...inexact ones round, and overflow saturates to infinity
+        // (the trigger the pcg fallback guard detects).
+        assert!((f32::from_f64(0.1).to_f64() - 0.1).abs() > 0.0);
+        assert!(f32::from_f64(1e300).to_f64().is_infinite());
+        assert_eq!(f32::BYTES, 4);
+        assert_eq!(f32::PRECISION, Precision::F32);
+    }
+
+    #[test]
+    fn precision_parses_names_and_rejects_garbage() {
+        assert_eq!(Precision::parse("f64").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("F32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("double").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("single").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse(" f32 ").unwrap(), Precision::F32);
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        let err = Precision::parse("f16").unwrap_err();
+        match err {
+            ParacError::InvalidOption { what, got } => {
+                assert_eq!(what, "precision");
+                assert_eq!(got, "f16");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+}

@@ -263,4 +263,84 @@ fn solve_into_allocates_nothing_after_warmup() {
              zero-allocation contract is broken"
         );
     }
+
+    // ---- Phase 5: the f32 storage plane. ----
+    // Narrowing the plane swaps the packed value arrays, not the
+    // execution structure, so the whole contract above must hold
+    // verbatim on an f32 session — warm single-owner solves and the
+    // concurrent `&self` path. (A refinement-guard promotion builds the
+    // f64 fallback plane once, which is an allocation by design; this
+    // phase therefore uses the same well-conditioned operator, which
+    // never promotes — asserted via `fallbacks`.)
+    let mut narrow = Solver::builder()
+        .engine(Engine::Seq)
+        .threads(2)
+        .level_cutoff(8)
+        .seed(9)
+        .tol(1e-8)
+        .precision(parac::sparse::Precision::F32)
+        .build(&lap_wide)
+        .expect("f32 solver setup");
+    let warm = narrow.solve_into(&rhs_wide[0], &mut xw).expect("f32 warm-up solve");
+    assert!(warm.converged, "f32 warm-up must converge (rel={})", warm.rel_residual);
+    assert_eq!(warm.precision, parac::sparse::Precision::F32, "must stay on the f32 plane");
+    assert_eq!(warm.fallbacks, 0, "a well-conditioned operator must not promote");
+
+    let before = allocations();
+    for b in rhs_wide.iter().cycle().take(12) {
+        let stats = narrow.solve_into(b, &mut xw).expect("f32 steady-state solve");
+        assert!(stats.converged);
+        assert_eq!(stats.fallbacks, 0);
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "f32-plane solve_into allocated {} times across 12 warm solves — the \
+         zero-allocation contract must be precision-independent",
+        after - before
+    );
+
+    // Concurrent `&self` solves on the f32 plane.
+    narrow.warm_workspaces(CLIENTS);
+    {
+        let session = &narrow;
+        let barrier = std::sync::Barrier::new(CLIENTS + 1);
+        let counted: AtomicU64 = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..CLIENTS {
+                let barrier = &barrier;
+                let counted = &counted;
+                let rhs_wide = &rhs_wide;
+                scope.spawn(move || {
+                    let mut x = vec![0.0; session.n()];
+                    let mut round = |n_rounds: usize| {
+                        for r in 0..n_rounds {
+                            let b = &rhs_wide[(t + r) % rhs_wide.len()];
+                            let stats =
+                                session.solve_shared(b, &mut x).expect("concurrent f32 solve");
+                            assert!(stats.converged);
+                            assert_eq!(stats.fallbacks, 0);
+                        }
+                    };
+                    barrier.wait();
+                    round(2);
+                    barrier.wait();
+                    let before = allocations();
+                    round(4);
+                    counted.fetch_add(allocations() - before, Ordering::Relaxed);
+                    barrier.wait();
+                });
+            }
+            barrier.wait(); // release warm-up
+            barrier.wait(); // all warmed: open the measured window
+            barrier.wait(); // all counted: safe to join (joins allocate)
+        });
+        assert_eq!(
+            counted.load(Ordering::Relaxed),
+            0,
+            "concurrent &self solves on the f32 plane allocated — the \
+             shared-session contract must be precision-independent"
+        );
+    }
 }

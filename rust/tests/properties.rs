@@ -328,7 +328,7 @@ fn pooled_analysis_deterministic_across_suite() {
         let (bwd_levels, bwd_max) = parac::etree::trisolve_levels_bwd(&f.g);
         let fwd_ref = parac::etree::bucket_by_level(&fwd_levels, fwd_max);
         let bwd_ref = parac::etree::bucket_by_level(&bwd_levels, bwd_max);
-        let reference = PackedSweeps::analyze_with_opts(&f, 4, 1);
+        let reference = PackedSweeps::<f64>::analyze_with_opts(&f, 4, 1);
 
         for threads in [2usize, 4] {
             assert_eq!(
@@ -343,7 +343,7 @@ fn pooled_analysis_deterministic_across_suite() {
                 "{} t={threads}: backward level buckets deviate",
                 l.name
             );
-            let pooled = PackedSweeps::analyze_with_opts(&f, 4, threads);
+            let pooled = PackedSweeps::<f64>::analyze_with_opts(&f, 4, threads);
             assert!(
                 pooled.bitwise_eq(&reference),
                 "{} t={threads}: pooled packed layout deviates",
@@ -398,7 +398,7 @@ fn packed_sweeps_bit_identical_to_sequential_reference() {
                 // Cutoff 16: the wide graphs really dispatch pooled
                 // sweeps with level-boundary barriers, narrow ones
                 // exercise the worker-0 sequential runs.
-                let packed = PackedSweeps::analyze_with_cutoff(&f, 16);
+                let packed = PackedSweeps::<f64>::analyze_with_cutoff(&f, 16);
                 let pre = LdlPrecond::with_level_schedule_cutoff(f.clone(), 4, 16);
                 let n = f.n();
                 let r: Vec<f64> = (0..n).map(|i| ((i * 31) % 17) as f64 - 8.0).collect();
@@ -437,7 +437,7 @@ fn packed_sweeps_bit_identical_to_sequential_reference() {
     // CI reruns the suite under `PARAC_LEVEL_CUTOFF` extremes.)
     let f = factorize(&graphs[1].1, &opts(11, Ordering::Natural, Engine::Seq)).unwrap();
     let packed =
-        PackedSweeps::analyze_with_cutoff(&f, parac::solve::trisolve::LEVEL_PAR_CUTOFF);
+        PackedSweeps::<f64>::analyze_with_cutoff(&f, parac::solve::trisolve::LEVEL_PAR_CUTOFF);
     let (levels, _) = parac::etree::trisolve_levels(&f.g);
     let widest = parac::etree::level_histogram(&levels).into_iter().max().unwrap();
     assert!(
@@ -453,4 +453,96 @@ fn packed_sweeps_bit_identical_to_sequential_reference() {
     assert_eq!(z, want);
     let delta = packed.counters().since(before);
     assert_eq!(delta.dispatches, 2, "one dispatch per sweep at the default cutoff");
+}
+
+/// The f32 value plane's two-tier contract, over the whole suite: every
+/// matrix still converges to the same tolerance, within an iteration
+/// budget of 1.3× the f64 plane — plus, per refinement-guard fallback,
+/// one stagnation window of detection latency and one restarted solve.
+#[test]
+fn f32_plane_converges_within_iteration_budget_across_suite() {
+    use parac::graph::suite::{Scale, SUITE};
+    use parac::solve::pcg::{self, F32_STAGNATION_WINDOW};
+    use parac::solver::Solver;
+    use parac::sparse::Precision;
+
+    for e in SUITE {
+        let lap = (e.build)(Scale::Tiny);
+        let b = pcg::random_rhs(&lap, 29);
+        let run = |precision| {
+            let mut s = Solver::builder()
+                .seed(5)
+                .threads(2)
+                .precision(precision)
+                .tol(1e-7)
+                .max_iter(4000)
+                .build(&lap)
+                .unwrap();
+            let mut x = vec![0.0; lap.n()];
+            s.solve_into(&b, &mut x).unwrap()
+        };
+        let st64 = run(Precision::F64);
+        let st32 = run(Precision::F32);
+        assert!(st64.converged, "{}: f64 plane must converge", e.name);
+        assert_eq!(st64.fallbacks, 0, "{}: the f64 plane never falls back", e.name);
+        assert!(
+            st32.converged && st32.rel_residual <= 1e-7,
+            "{}: f32 plane must reach the same tolerance (rel={})",
+            e.name,
+            st32.rel_residual
+        );
+        // Clean f32 sessions are pinned at 1.3× the f64 count. Each
+        // guard fallback may additionally spend a detection phase (some
+        // partial progress, then one stagnation window) plus a restarted
+        // solve — allow 2× (window + f64 count) per fallback for it.
+        let budget = (st64.iters as f64 * 1.3).ceil()
+            + st32.fallbacks as f64 * 2.0 * (F32_STAGNATION_WINDOW + st64.iters) as f64;
+        assert!(
+            st32.iters as f64 <= budget,
+            "{}: f32 took {} iters vs f64 {} (budget {budget}, fallbacks {})",
+            e.name,
+            st32.iters,
+            st64.iters,
+            st32.fallbacks
+        );
+    }
+}
+
+/// The extreme-contrast suite entry overwhelms the f32 plane by
+/// construction (heavy-half factor diagonal > `f32::MAX` saturates to
+/// `inf`, zeroing that half of every apply): the refinement guard must
+/// detect the stagnation, promote the session to the f64 plane
+/// mid-solve, and still converge — and the promotion must be sticky.
+#[test]
+fn refinement_guard_rescues_extreme_contrast_in_f32_sessions() {
+    use parac::graph::suite::{self, Scale};
+    use parac::solve::pcg;
+    use parac::solver::Solver;
+    use parac::sparse::Precision;
+
+    let lap = (suite::by_name("xcontrast_2d").unwrap().build)(Scale::Tiny);
+    let b = pcg::random_rhs(&lap, 41);
+    let mut s = Solver::builder()
+        .seed(9)
+        .threads(2)
+        .precision(Precision::F32)
+        .tol(1e-7)
+        .max_iter(4000)
+        .build(&lap)
+        .unwrap();
+    assert_eq!(s.factor_stats().unwrap().precision, Precision::F32);
+    let mut x = vec![0.0; lap.n()];
+    let st = s.solve_into(&b, &mut x).unwrap();
+    assert!(st.converged, "guarded f32 session must converge (rel={})", st.rel_residual);
+    assert_eq!(st.fallbacks, 1, "the overflowed plane must promote exactly once");
+    assert_eq!(st.precision, Precision::F64, "the solve must end on the f64 plane");
+    assert!(st.rel_residual <= 1e-7);
+
+    // Follow-up solves run on the promoted plane from the start: no
+    // second fallback, no renewed stagnation.
+    let b2 = pcg::random_rhs(&lap, 42);
+    let st2 = s.solve_into(&b2, &mut x).unwrap();
+    assert!(st2.converged);
+    assert_eq!(st2.fallbacks, 0, "promotion is sticky across solves");
+    assert_eq!(st2.precision, Precision::F64);
 }

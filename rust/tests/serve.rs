@@ -129,7 +129,7 @@ fn service_under_concurrent_mixed_graphs_stays_bit_identical() {
 
     let svc = SolveService::new(
         FactorCache::new(Solver::builder().seed(9).threads(2), 4),
-        ServeOptions { max_wave: 4, max_wait: Duration::from_micros(200) },
+        ServeOptions { max_wave: 4, max_wait: Duration::from_micros(200), ..Default::default() },
     );
     // Pre-build all three operators so no client pays a cold build
     // inside the concurrent phase. `heavy` shares `grid`'s pattern, so
@@ -181,6 +181,52 @@ fn service_under_concurrent_mixed_graphs_stays_bit_identical() {
 }
 
 #[test]
+fn bounded_admission_sheds_excess_requests_under_contention() {
+    // Queue bound of one: the first request to reach the gate leads a
+    // wave and holds the coalescing window open (max_wave is out of
+    // reach), so a second concurrent request must be shed at admission
+    // with the typed overload error — back-pressure, not an unbounded
+    // queue, not a panic.
+    let lap = Arc::new(generators::grid2d(12, 12, Coeff::Uniform, 6));
+    let svc = SolveService::new(
+        FactorCache::new(Solver::builder().seed(3), 2),
+        ServeOptions { max_wave: 8, max_wait: Duration::from_secs(1), max_queue: 1 },
+    );
+    // Pre-build the factor through the cache so neither contender pays
+    // the build inside the timed window.
+    svc.cache().get_or_build(&lap).expect("pre-build");
+    let before = svc.stats();
+
+    let b1 = pcg::random_rhs(&lap, 1);
+    let b2 = pcg::random_rhs(&lap, 2);
+    let (first, second) = std::thread::scope(|scope| {
+        let leader = scope.spawn(|| svc.solve(&lap, &b1));
+        // Give the spawned request time to enter the window; even if
+        // this loses the race, exactly one of the two is shed.
+        std::thread::sleep(Duration::from_millis(100));
+        let contender = svc.solve(&lap, &b2);
+        (leader.join().expect("leader panicked"), contender)
+    });
+
+    let served = [&first, &second].into_iter().filter(|r| r.is_ok()).count();
+    assert_eq!(served, 1, "exactly one of two contending requests is served");
+    for r in [&first, &second] {
+        match r {
+            Ok((_, stats)) => assert!(stats.converged, "served request must converge"),
+            Err(e) => assert!(
+                matches!(e, parac::ParacError::Overloaded { capacity: 1 }),
+                "shed request must carry the typed overload error, got: {e}"
+            ),
+        }
+    }
+    let st = svc.stats();
+    assert_eq!(st.requests - before.requests, 2, "shed requests still count as received");
+    assert_eq!(st.shed - before.shed, 1, "exactly one request shed");
+    assert_eq!(st.waves - before.waves, 1, "the survivor solves in a wave of one");
+    assert_eq!(st.coalesced - before.coalesced, 0, "nothing rode the survivor's wave");
+}
+
+#[test]
 fn reweighted_serving_routes_through_refactorize_and_matches_fresh_build() {
     // Serve graph A, drop every client, then serve reweighted A': the
     // cache must take the numeric-only path (symbolic_reused) and the
@@ -188,7 +234,7 @@ fn reweighted_serving_routes_through_refactorize_and_matches_fresh_build() {
     let a = Arc::new(generators::grid2d(12, 12, Coeff::Uniform, 4));
     let svc = SolveService::new(
         FactorCache::new(Solver::builder().seed(13), 2),
-        ServeOptions { max_wave: 2, max_wait: Duration::from_micros(50) },
+        ServeOptions { max_wave: 2, max_wait: Duration::from_micros(50), ..Default::default() },
     );
     let b0 = pcg::random_rhs(&a, 1);
     assert!(svc.solve(&a, &b0).expect("first build").1.converged);
