@@ -28,6 +28,7 @@ fn main() {
     println!("## Serve: open-loop clients × shared factor  [scale {scale:?}]\n");
     let mut table = Table::new(&[
         "problem", "clients", "solves", "solves/s", "p50 (ms)", "p99 (ms)", "waves", "coalesced",
+        "retries",
     ]);
     let mut rows: Vec<BenchRow> = Vec::new();
     for name in ["uniform_3d_poisson", "rand_expander"] {
@@ -45,6 +46,7 @@ fn main() {
                 requests_per_client: 32,
                 interval: Duration::from_micros(500),
                 seed: 7,
+                ..Default::default()
             };
             let rep = match run_open_loop(&svc, &lap, &spec) {
                 Ok(rep) => rep,
@@ -62,6 +64,7 @@ fn main() {
                 format!("{:.3}", rep.p99_ms),
                 rep.service.waves.to_string(),
                 rep.service.coalesced.to_string(),
+                rep.client_retries.to_string(),
             ]);
             rows.push(BenchRow {
                 name: format!("{} n={} clients={clients}", e.name, lap.n()),

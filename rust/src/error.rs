@@ -64,6 +64,31 @@ pub enum ParacError {
         /// The configured queue bound that was hit.
         capacity: usize,
     },
+    /// The request's deadline (`ServeOptions::deadline` or an explicit
+    /// per-request budget) lapsed before a solution converged — either
+    /// while queued (shed without solving) or mid-PCG (the iteration
+    /// loop checks the deadline every few iterations and abandons the
+    /// solve). Like [`ParacError::Overloaded`] this is load, not
+    /// corruption: the request is safe to retry. Counted in
+    /// `ServiceStats::deadline_shed`.
+    DeadlineExceeded,
+    /// An internal invariant broke while serving this request: a solve
+    /// wave or factor build panicked (caught at the serve leader
+    /// boundary), or a factorization produced non-finite values. The
+    /// offending cached session is quarantined and rebuilt; *this*
+    /// request failed, but the next one gets a fresh session.
+    Internal(String),
+}
+
+impl ParacError {
+    /// Whether the failure is transient load shedding that a client
+    /// should simply retry (after backoff): [`ParacError::Overloaded`]
+    /// and [`ParacError::DeadlineExceeded`]. Everything else reports a
+    /// property of the input or the system that retrying the identical
+    /// request will not fix.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ParacError::Overloaded { .. } | ParacError::DeadlineExceeded)
+    }
 }
 
 impl std::fmt::Display for ParacError {
@@ -85,6 +110,10 @@ impl std::fmt::Display for ParacError {
             ParacError::Overloaded { capacity } => {
                 write!(f, "service overloaded: {capacity} requests already queued")
             }
+            ParacError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the solve completed")
+            }
+            ParacError::Internal(m) => write!(f, "internal failure: {m}"),
         }
     }
 }
@@ -105,6 +134,23 @@ mod tests {
         assert!(e.to_string().contains("engine") && e.to_string().contains("tpu"));
         let e = ParacError::Overloaded { capacity: 64 };
         assert!(e.to_string().contains("overloaded") && e.to_string().contains("64"));
+        assert!(ParacError::DeadlineExceeded.to_string().contains("deadline"));
+        let e = ParacError::Internal("solve wave panicked".into());
+        assert!(e.to_string().contains("internal") && e.to_string().contains("panicked"));
+    }
+
+    #[test]
+    fn retryable_covers_exactly_the_load_errors() {
+        assert!(ParacError::Overloaded { capacity: 1 }.is_retryable());
+        assert!(ParacError::DeadlineExceeded.is_retryable());
+        assert!(!ParacError::ArenaFull { capacity: 1 }.is_retryable());
+        assert!(!ParacError::WorkspaceFull { capacity: 1 }.is_retryable());
+        assert!(!ParacError::BadInput("x".into()).is_retryable());
+        assert!(!ParacError::Internal("x".into()).is_retryable());
+        assert!(!ParacError::InvalidOption { what: "engine", got: "tpu".into() }.is_retryable());
+        assert!(
+            !ParacError::DimensionMismatch { what: "rhs", expected: 1, got: 2 }.is_retryable()
+        );
     }
 
     #[test]

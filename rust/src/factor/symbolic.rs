@@ -250,7 +250,7 @@ impl SymbolicFactor {
         self.check_pattern(lap)?;
         let timer = Timer::start();
         self.refresh_values(lap);
-        let mut stats = self.run_numeric()?;
+        let mut stats = self.run_numeric_checked()?;
         stats.symbolic_secs = self.symbolic_secs;
         stats.numeric_secs = timer.secs();
         let (g, diag) = self.spare.take_factor(self.n);
@@ -274,7 +274,7 @@ impl SymbolicFactor {
         self.check_pattern(lap)?;
         let timer = Timer::start();
         self.refresh_values(lap);
-        let mut stats = self.run_numeric()?;
+        let mut stats = self.run_numeric_checked()?;
         stats.symbolic_secs = 0.0;
         stats.symbolic_reused = true;
         stats.numeric_secs = timer.secs();
@@ -310,6 +310,39 @@ impl SymbolicFactor {
         for (dst, &src) in self.permuted.data.iter_mut().zip(&self.val_map) {
             *dst = lap.matrix.data[src];
         }
+    }
+
+    /// [`SymbolicFactor::run_numeric`] wrapped in the fault probes and
+    /// the always-on output audit. The overflow probes model an
+    /// overflow that **escaped** the doubling retry (they surface the
+    /// typed error without touching the real arena), the NaN probe
+    /// poisons one packed value after a successful sweep, and the audit
+    /// turns any non-finite produced value — injected or real — into a
+    /// typed [`FactorError::Internal`] instead of letting it poison
+    /// every downstream solve. With no fault plan installed the probes
+    /// are three relaxed atomic loads and the audit one predictable
+    /// O(nnz) pass (noise next to the sweep itself).
+    fn run_numeric_checked(&mut self) -> Result<FactorStats, FactorError> {
+        use crate::faults::{self, Site};
+        let est_cap = (self.arena_factor * (self.permuted.nnz() + self.n) as f64) as usize;
+        if faults::should_fire(Site::ArenaOverflow) {
+            return Err(FactorError::ArenaFull { capacity: est_cap });
+        }
+        if faults::should_fire(Site::WorkspaceOverflow) {
+            return Err(FactorError::WorkspaceFull { capacity: est_cap });
+        }
+        let stats = self.run_numeric()?;
+        if faults::should_fire(Site::NanPackedValues) {
+            if let Some(v) = self.spare.data.first_mut() {
+                *v = f64::NAN;
+            }
+        }
+        if self.spare.data.iter().chain(self.spare.diag.iter()).any(|v| !v.is_finite()) {
+            return Err(FactorError::Internal(
+                "factorization produced non-finite values".into(),
+            ));
+        }
+        Ok(stats)
     }
 
     /// One engine sweep into the spare buffers, with the same

@@ -1,0 +1,402 @@
+//! Deterministic, seeded fault injection for robustness testing.
+//!
+//! Production serving has failure modes that ordinary tests never
+//! exercise: an arena that overflows past the doubling retry, a worker
+//! thread that panics mid-wave, a factor whose packed values went
+//! non-finite, a solve that simply takes too long. This module gives
+//! every one of those paths a *deterministic* trigger so the recovery
+//! machinery (degrade-and-retry, panic quarantine, deadlines — see
+//! [`crate::serve`]) is a tested contract instead of a hope.
+//!
+//! ## Design constraints
+//!
+//! The plane must be invisible when disabled. Every probe compiles to a
+//! **single relaxed atomic load** ([`active`]) on the disabled path —
+//! no lock, no allocation, no branch on shared mutable state — so the
+//! crate's alloc-free and bit-identity contracts are untouched by the
+//! mere existence of the instrumentation. Only when a plan is installed
+//! does a probe take the `#[cold]` slow path that consults the
+//! schedule.
+//!
+//! ## The `PARAC_FAULTS` grammar
+//!
+//! A fault *plan* is a comma-separated list of `key=value` items:
+//!
+//! * `seed=<u64>` — seeds the per-site phase offsets (default 0).
+//! * `latency-us=<u64>` — duration injected by each fired
+//!   `solve-latency` fault (default 1000µs).
+//! * `<site>=<N>` — arm the named site to fire every `N`-th probe
+//!   (`N ≥ 1`), at a seed-derived phase. Site names:
+//!   `arena-overflow`, `gpusim-workspace-overflow`,
+//!   `nan-packed-values`, `worker-panic`, `solve-latency`.
+//!
+//! The strings `off` and `` (empty) mean "no plan". Example:
+//!
+//! ```text
+//! PARAC_FAULTS=seed=7,worker-panic=50,arena-overflow=100,latency-us=2000,solve-latency=25
+//! ```
+//!
+//! Plans are installed process-wide ([`install_spec`]) — either from
+//! the environment at the first `SolverBuilder::build` ([`init_from_env`])
+//! or explicitly via `SolverBuilder::faults`. Because the plane is
+//! global, tests that install plans must not run concurrently with
+//! other tests that assume a quiet plane (the chaos suite runs under
+//! `--test-threads=1` for exactly this reason).
+//!
+//! ## Determinism
+//!
+//! A site armed with period `N` under seed `s` fires on probe counts
+//! `c` where `c % N == phase(s, site)` — a pure function of the plan
+//! and the number of probes so far. Single-threaded runs replay
+//! exactly; multi-threaded runs keep the *number* of fired faults per
+//! site deterministic for a fixed probe count even though which thread
+//! observes each firing may vary.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Named fault sites — each one maps to a single probe point in the
+/// production code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// The CPU engine's bump arena reports exhaustion even though
+    /// capacity remains (probed in `factor::SymbolicFactor`): exercises
+    /// the escaped-`ArenaFull` degrade path.
+    ArenaOverflow,
+    /// The gpusim engine's slot workspace reports exhaustion
+    /// (same probe point, distinct typed error): exercises the escaped
+    /// `WorkspaceFull` degrade path.
+    WorkspaceOverflow,
+    /// Poison one packed factor value with NaN after a successful
+    /// numeric phase: exercises the non-finite-factor detection and
+    /// quarantine/rebuild path.
+    NanPackedValues,
+    /// Panic inside a worker-pool job (probed in `par::WorkerPool::run`
+    /// part 0): exercises panic quarantine at the serve leader boundary.
+    WorkerPanic,
+    /// Sleep at PCG solve entry: exercises deadline shedding.
+    SolveLatency,
+}
+
+/// Number of sites (array sizing).
+const NSITES: usize = 5;
+
+impl Site {
+    /// The site's name in the `PARAC_FAULTS` grammar.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::ArenaOverflow => "arena-overflow",
+            Site::WorkspaceOverflow => "gpusim-workspace-overflow",
+            Site::NanPackedValues => "nan-packed-values",
+            Site::WorkerPanic => "worker-panic",
+            Site::SolveLatency => "solve-latency",
+        }
+    }
+
+    /// All sites, in index order.
+    pub const ALL: [Site; NSITES] = [
+        Site::ArenaOverflow,
+        Site::WorkspaceOverflow,
+        Site::NanPackedValues,
+        Site::WorkerPanic,
+        Site::SolveLatency,
+    ];
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            Site::ArenaOverflow => 0,
+            Site::WorkspaceOverflow => 1,
+            Site::NanPackedValues => 2,
+            Site::WorkerPanic => 3,
+            Site::SolveLatency => 4,
+        }
+    }
+}
+
+/// A parsed fault schedule: which sites are armed, how often each
+/// fires, and with what phase offset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-site phase offsets.
+    pub seed: u64,
+    /// Duration injected per fired [`Site::SolveLatency`] fault.
+    pub latency: Duration,
+    /// Per-site firing period; 0 = site disarmed.
+    pub period: [u64; NSITES],
+    /// Per-site phase: the site fires when `probe_count % period == phase`.
+    pub phase: [u64; NSITES],
+    /// The spec string this plan was parsed from (idempotence check).
+    pub spec: String,
+}
+
+/// splitmix64 — the standard 64-bit finalizer; good avalanche, tiny.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Parse a `PARAC_FAULTS` spec. Returns `Ok(None)` for `off` /
+    /// empty (no plan), `Ok(Some(plan))` for a valid spec, and a
+    /// human-readable error otherwise.
+    pub fn parse(spec: &str) -> Result<Option<FaultPlan>, String> {
+        let trimmed = spec.trim();
+        if trimmed.is_empty() || trimmed == "off" {
+            return Ok(None);
+        }
+        let mut seed = 0u64;
+        let mut latency_us = 1000u64;
+        let mut period = [0u64; NSITES];
+        let mut armed = false;
+        for item in trimmed.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, value) = item
+                .split_once('=')
+                .ok_or_else(|| format!("fault item '{item}' is not key=value"))?;
+            let num: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault item '{item}': '{value}' is not a u64"))?;
+            match key.trim() {
+                "seed" => seed = num,
+                "latency-us" => latency_us = num,
+                other => {
+                    let site = Site::ALL
+                        .iter()
+                        .find(|s| s.name() == other)
+                        .ok_or_else(|| format!("unknown fault site '{other}'"))?;
+                    if num == 0 {
+                        return Err(format!("site '{other}': period must be >= 1"));
+                    }
+                    period[site.index()] = num;
+                    armed = true;
+                }
+            }
+        }
+        if !armed {
+            return Err("fault spec arms no site (use 'off' to disable)".into());
+        }
+        let mut phase = [0u64; NSITES];
+        for i in 0..NSITES {
+            if period[i] > 0 {
+                phase[i] = splitmix64(seed ^ (i as u64 + 1)) % period[i];
+            }
+        }
+        Ok(Some(FaultPlan {
+            seed,
+            latency: Duration::from_micros(latency_us),
+            period,
+            phase,
+            spec: trimmed.to_string(),
+        }))
+    }
+
+    /// Whether a site fires at a given (zero-based) probe count — the
+    /// pure schedule function, exposed for tests.
+    pub fn fires_at(&self, site: Site, probe_count: u64) -> bool {
+        let i = site.index();
+        self.period[i] > 0 && probe_count % self.period[i] == self.phase[i]
+    }
+}
+
+/// Fast-path gate: false ⇒ every probe is a single relaxed load.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// The installed plan (slow path only).
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Per-site probe counters (how many times the site was consulted).
+static PROBED: [AtomicU64; NSITES] = [const { AtomicU64::new(0) }; NSITES];
+/// Per-site fired counters (how many probes actually injected a fault).
+static FIRED: [AtomicU64; NSITES] = [const { AtomicU64::new(0) }; NSITES];
+
+/// Whether any fault plan is installed. This is the whole cost of a
+/// disabled probe: one relaxed atomic load.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Probe a site: returns `true` if the schedule says this probe should
+/// inject its fault. Disabled plane ⇒ one relaxed load, `false`.
+#[inline]
+pub fn should_fire(site: Site) -> bool {
+    if !active() {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: Site) -> bool {
+    let plan = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    let plan = match plan.as_ref() {
+        Some(p) => p,
+        None => return false,
+    };
+    let i = site.index();
+    if plan.period[i] == 0 {
+        return false;
+    }
+    let count = PROBED[i].fetch_add(1, Ordering::Relaxed);
+    let fire = count % plan.period[i] == plan.phase[i];
+    if fire {
+        FIRED[i].fetch_add(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+/// Combined probe for [`Site::SolveLatency`]: `Some(duration)` when the
+/// fault fires. Disabled plane ⇒ one relaxed load, `None`.
+#[inline]
+pub fn latency_fault() -> Option<Duration> {
+    if !active() {
+        return None;
+    }
+    latency_slow()
+}
+
+#[cold]
+fn latency_slow() -> Option<Duration> {
+    let d = {
+        let plan = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        plan.as_ref()?.latency
+    };
+    if fire_slow(Site::SolveLatency) {
+        Some(d)
+    } else {
+        None
+    }
+}
+
+/// How many times a site has fired since the last [`install`].
+pub fn fired(site: Site) -> u64 {
+    FIRED[site.index()].load(Ordering::Relaxed)
+}
+
+/// How many times a site has been probed since the last [`install`].
+pub fn probed(site: Site) -> u64 {
+    PROBED[site.index()].load(Ordering::Relaxed)
+}
+
+/// Install a plan (or clear with `None`), resetting all counters.
+pub fn install(plan: Option<FaultPlan>) {
+    let mut guard = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    for i in 0..NSITES {
+        PROBED[i].store(0, Ordering::Relaxed);
+        FIRED[i].store(0, Ordering::Relaxed);
+    }
+    ACTIVE.store(plan.is_some(), Ordering::Relaxed);
+    *guard = plan;
+}
+
+/// Parse and install a spec. Idempotent: re-installing the spec string
+/// that is already active leaves the plan *and its counters* untouched,
+/// so repeated `SolverBuilder::build` calls carrying the same `faults`
+/// knob (e.g. the serve cache's cloned builders) don't reset the
+/// schedule mid-soak.
+pub fn install_spec(spec: &str) -> Result<(), String> {
+    {
+        let guard = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(active_plan) = guard.as_ref() {
+            if active_plan.spec == spec.trim() {
+                return Ok(());
+            }
+        }
+    }
+    let plan = FaultPlan::parse(spec)?;
+    install(plan);
+    Ok(())
+}
+
+/// Read `PARAC_FAULTS` once per process and install it. Subsequent
+/// calls return the cached outcome without touching the environment,
+/// so an explicit [`install_spec`] is never clobbered by a later
+/// builder consulting the env.
+pub fn init_from_env() -> Result<(), String> {
+    static ENV: OnceLock<Result<(), String>> = OnceLock::new();
+    ENV.get_or_init(|| {
+        match std::env::var("PARAC_FAULTS") {
+            Ok(spec) => match FaultPlan::parse(&spec) {
+                Ok(Some(plan)) => {
+                    install(Some(plan));
+                    Ok(())
+                }
+                Ok(None) => Ok(()),
+                Err(e) => Err(e),
+            },
+            Err(_) => Ok(()),
+        }
+    })
+    .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests exercise only the *pure* pieces (parsing and
+    // the schedule function). Installing a global plan here would race
+    // the rest of the parallel test suite; install-based coverage lives
+    // in `rust/tests/chaos.rs`, which runs single-threaded.
+
+    #[test]
+    fn off_and_empty_mean_no_plan() {
+        assert_eq!(FaultPlan::parse("off").unwrap(), None);
+        assert_eq!(FaultPlan::parse("").unwrap(), None);
+        assert_eq!(FaultPlan::parse("  off  ").unwrap(), None);
+    }
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("seed=7,worker-panic=50,latency-us=2000,solve-latency=25")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.latency, Duration::from_micros(2000));
+        assert_eq!(p.period[Site::WorkerPanic.index()], 50);
+        assert_eq!(p.period[Site::SolveLatency.index()], 25);
+        assert_eq!(p.period[Site::ArenaOverflow.index()], 0);
+        // Phase is always within the period.
+        assert!(p.phase[Site::WorkerPanic.index()] < 50);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("worker-panic").is_err()); // no '='
+        assert!(FaultPlan::parse("worker-panic=x").is_err()); // not a u64
+        assert!(FaultPlan::parse("no-such-site=3").is_err()); // unknown site
+        assert!(FaultPlan::parse("worker-panic=0").is_err()); // period 0
+        assert!(FaultPlan::parse("seed=3").is_err()); // arms nothing
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_periodic() {
+        let p = FaultPlan::parse("seed=42,arena-overflow=10").unwrap().unwrap();
+        let fires: Vec<u64> = (0..100).filter(|&c| p.fires_at(Site::ArenaOverflow, c)).collect();
+        assert_eq!(fires.len(), 10, "period 10 over 100 probes fires 10 times");
+        for w in fires.windows(2) {
+            assert_eq!(w[1] - w[0], 10);
+        }
+        // Same spec ⇒ same schedule; different seed ⇒ (generally) a
+        // different phase. Disarmed sites never fire.
+        let q = FaultPlan::parse("seed=42,arena-overflow=10").unwrap().unwrap();
+        assert_eq!(p, q);
+        assert!((0..100).all(|c| !p.fires_at(Site::WorkerPanic, c)));
+    }
+
+    #[test]
+    fn site_names_roundtrip() {
+        for s in Site::ALL {
+            let spec = format!("{}=3", s.name());
+            let p = FaultPlan::parse(&spec).unwrap().unwrap();
+            assert_eq!(p.period[s.index()], 3, "{}", s.name());
+        }
+    }
+}

@@ -130,10 +130,19 @@ impl Laplacian {
         Laplacian { matrix: coo.to_csr(), kind: LapKind::Graph, name: name.to_string() }
     }
 
-    /// Check the Laplacian invariants: symmetry, non-positive
-    /// off-diagonals, and (for `Graph` kind) zero row sums.
+    /// Check the Laplacian invariants: finite values, symmetry,
+    /// non-positive off-diagonals, and (for `Graph` kind) zero row
+    /// sums. Non-finite weights are caught *first* — NaN compares
+    /// false against every threshold below, so without this check a
+    /// poisoned matrix would sail through the sign and row-sum tests.
     pub fn validate(&self) -> Result<(), String> {
         self.matrix.validate()?;
+        if let Some(i) = self.matrix.data.iter().position(|v| !v.is_finite()) {
+            return Err(format!(
+                "non-finite value {} at nnz index {i}",
+                self.matrix.data[i]
+            ));
+        }
         if !self.matrix.is_symmetric(1e-12) {
             return Err("not symmetric".into());
         }
@@ -282,6 +291,22 @@ mod tests {
         let mut e = l.edges();
         e.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.total_cmp(&b.2)));
         assert_eq!(e, vec![(0, 1, 1.0), (0, 2, 3.0), (1, 2, 2.0)]);
+    }
+
+    #[test]
+    fn non_finite_weights_fail_validation() {
+        // NaN compares false against every sign/row-sum threshold, so
+        // the finiteness check must catch it explicitly — and name the
+        // offending entry.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut l = triangle();
+            l.matrix.data[1] = bad;
+            let msg = l.validate().unwrap_err();
+            assert!(
+                msg.contains("non-finite value") && msg.contains("nnz index 1"),
+                "unexpected validation message for {bad}: {msg}"
+            );
+        }
     }
 
     #[test]

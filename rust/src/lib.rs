@@ -155,6 +155,7 @@ pub mod coordinator;
 pub mod error;
 pub mod etree;
 pub mod factor;
+pub mod faults;
 pub mod gpusim;
 pub mod graph;
 pub mod ordering;

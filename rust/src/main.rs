@@ -61,10 +61,15 @@ USAGE:
   parac repro table2|table3|fig3|fig4|hash [--scale tiny|small|medium] [--threads T]
   parac serve  --matrix NAME [--clients N[,N...]] [--requests R] [--interval-us U]
                [--max-wave W] [--max-wait-us U] [--max-queue Q] [--cache-cap C]
+               [--deadline-us D] [--retries K]
                [--threads T] [--precision f64|f32] [--json PATH]
                [engine/ordering flags]
                (--max-queue bounds admission: requests beyond Q pending
-               are shed with a typed overload error; 0 = unbounded)
+               are shed with a typed overload error; 0 = unbounded.
+               --deadline-us stamps each request with a wall-clock
+               budget — lapsed requests are shed typed; 0 = off.
+               --retries bounds client retry-with-backoff on retryable
+               errors)
                open-loop serving benchmark: N client threads share one
                cached factor through coalesced solve waves
 "
@@ -226,19 +231,25 @@ fn serve_cmd(args: &Args) -> Result<(), ParacError> {
         .threads(args.get_parse("threads", 0usize))
         .tol(args.get_parse("tol", 1e-8f64))
         .max_iter(args.get_parse("max-iter", 1000usize));
+    let deadline_us = args.get_parse("deadline-us", 0u64);
     let opts = ServeOptions {
         max_wave: args.get_parse("max-wave", ServeOptions::default().max_wave),
         max_wait: Duration::from_micros(args.get_parse("max-wait-us", 200u64)),
         max_queue: args.get_parse("max-queue", ServeOptions::default().max_queue),
+        deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
     };
     println!(
-        "{}: n={} nnz={}  max_wave={} max_wait={:?} max_queue={}",
+        "{}: n={} nnz={}  max_wave={} max_wait={:?} max_queue={} deadline={}",
         lap.name,
         fmt_count(lap.n()),
         fmt_count(lap.matrix.nnz()),
         opts.max_wave,
         opts.max_wait,
-        opts.max_queue
+        opts.max_queue,
+        match opts.deadline {
+            Some(d) => format!("{d:?}"),
+            None => "off".into(),
+        }
     );
     let mut t = Table::new(&[
         "clients",
@@ -260,6 +271,7 @@ fn serve_cmd(args: &Args) -> Result<(), ParacError> {
             requests_per_client: args.get_parse("requests", 32usize),
             interval: Duration::from_micros(args.get_parse("interval-us", 500u64)),
             seed: args.get_parse("rhs-seed", 7u64),
+            max_retries: args.get_parse("retries", LoadSpec::default().max_retries),
         };
         let rep = run_open_loop(&svc, &lap, &spec)?;
         t.row(vec![

@@ -191,7 +191,17 @@ impl WorkerPool {
         // it cannot already be set here, or the entry check above would
         // have taken the inline path.
         IN_POOL_WORKER.with(|w| w.set(true));
-        let caller = std::panic::catch_unwind(AssertUnwindSafe(|| f(0, parts)));
+        let caller = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // Fault site `worker-panic` (chaos testing): an injected
+            // panic in part 0 rides the pool's real panic machinery —
+            // wait for the workers, clear the flag, re-raise — exactly
+            // like a genuine job panic. One relaxed atomic load when no
+            // fault plan is installed.
+            if crate::faults::should_fire(crate::faults::Site::WorkerPanic) {
+                panic!("injected worker-pool job panic");
+            }
+            f(0, parts)
+        }));
         IN_POOL_WORKER.with(|w| w.set(false));
 
         let mut spins = 0u32;

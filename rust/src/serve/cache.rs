@@ -156,6 +156,16 @@ impl FactorCache {
                             // through to a fresh build.
                             inner.entries.insert(resident_full, entry);
                         }
+                        Err(ParacError::Internal(_)) => {
+                            // The numeric rerun produced non-finite
+                            // values: the resident session can no
+                            // longer be trusted. Drop it (auto-heal)
+                            // and fall through to a fresh build for
+                            // this request.
+                            if inner.patterns.get(&fp.pattern) == Some(&resident_full) {
+                                inner.patterns.remove(&fp.pattern);
+                            }
+                        }
                         Err(other) => {
                             inner.entries.insert(resident_full, entry);
                             return Err(other);
@@ -172,6 +182,59 @@ impl FactorCache {
 
         inner.stats.misses += 1;
         let solver = Arc::new(self.builder.build_shared(lap.clone())?);
+        inner.entries.insert(
+            fp.full,
+            Entry { solver: solver.clone(), pattern: fp.pattern, last_used: now },
+        );
+        inner.patterns.insert(fp.pattern, fp.full);
+        self.evict_past_capacity(inner, fp.full);
+        Ok(solver)
+    }
+
+    /// Quarantine the resident session keyed by the **full**
+    /// fingerprint hash `full`: remove it from the cache so no future
+    /// request is served from it (clients already holding its `Arc`
+    /// keep their clone; the memory is reclaimed when the last drops).
+    /// The next request for that graph takes the miss path and builds
+    /// fresh. Returns whether a session was actually resident. Counted
+    /// in [`CacheStats::evictions`]; the serve layer calls this when a
+    /// solve wave over the session panicked
+    /// (see `ServiceStats::quarantined`).
+    pub fn quarantine(&self, full: u64) -> bool {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        match inner.entries.remove(&full) {
+            Some(entry) => {
+                inner.stats.evictions += 1;
+                if inner.patterns.get(&entry.pattern) == Some(&full) {
+                    inner.patterns.remove(&entry.pattern);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Build a **fresh** session for `lap` with an explicit (typically
+    /// degraded) builder, replacing whatever is resident for that
+    /// fingerprint — the serve layer's degrade-and-retry path after an
+    /// escaped overflow or a non-finite factor. Same single-flight
+    /// semantics as [`FactorCache::get_or_build`] (the build runs under
+    /// the cache lock); the replaced entry's in-flight clients keep
+    /// solving on their `Arc`.
+    pub fn rebuild_with(
+        &self,
+        lap: &Arc<Laplacian>,
+        builder: &SolverBuilder,
+    ) -> Result<Arc<Solver<'static>>, ParacError> {
+        let fp = lap.fingerprint();
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let now = inner.tick;
+        inner.entries.remove(&fp.full);
+        inner.stats.misses += 1;
+        let solver = Arc::new(builder.build_shared(lap.clone())?);
         inner.entries.insert(
             fp.full,
             Entry { solver: solver.clone(), pattern: fp.pattern, last_used: now },
@@ -273,6 +336,49 @@ mod tests {
         assert!(held.solve_shared(&b, &mut x).unwrap().converged);
         let st = cache.stats();
         assert_eq!((st.hits, st.misses, st.refactorizes), (0, 2, 0));
+    }
+
+    #[test]
+    fn quarantine_forces_a_rebuild_on_the_next_request() {
+        let cache = FactorCache::new(builder().seed(7), 4);
+        let lap = Arc::new(generators::grid2d(9, 9, generators::Coeff::Uniform, 0));
+        let fp = lap.fingerprint();
+        let held = cache.get_or_build(&lap).unwrap();
+        assert!(cache.quarantine(fp.full), "the session was resident");
+        assert!(!cache.quarantine(fp.full), "already gone");
+        assert_eq!(cache.len(), 0);
+        // The quarantined clone keeps working for its holder…
+        let b = crate::solve::pcg::random_rhs(&lap, 1);
+        let mut x = vec![0.0; lap.n()];
+        assert!(held.solve_shared(&b, &mut x).unwrap().converged);
+        // …while the next request takes the miss path into a new
+        // session with identical answers.
+        let rebuilt = cache.get_or_build(&lap).unwrap();
+        assert!(!Arc::ptr_eq(&held, &rebuilt));
+        let mut x2 = vec![0.0; lap.n()];
+        assert!(rebuilt.solve_shared(&b, &mut x2).unwrap().converged);
+        assert_eq!(x, x2, "a rebuilt session answers bit-identically");
+        let st = cache.stats();
+        assert_eq!((st.misses, st.evictions), (2, 1));
+    }
+
+    #[test]
+    fn rebuild_with_replaces_the_resident_session() {
+        let cache = FactorCache::new(builder().seed(4), 4);
+        let lap = Arc::new(generators::grid2d(8, 8, generators::Coeff::Uniform, 0));
+        let first = cache.get_or_build(&lap).unwrap();
+        // Degraded rebuild (bigger arena, sequential engine): replaces
+        // the resident entry in place.
+        let degraded = builder().seed(4).arena_factor(48.0).engine(crate::factor::Engine::Seq);
+        let second = cache.rebuild_with(&lap, &degraded).unwrap();
+        assert!(!Arc::ptr_eq(&first, &second));
+        assert_eq!(cache.len(), 1);
+        // The replacement is what later requests get.
+        let third = cache.get_or_build(&lap).unwrap();
+        assert!(Arc::ptr_eq(&second, &third));
+        let b = crate::solve::pcg::random_rhs(&lap, 3);
+        let mut x = vec![0.0; lap.n()];
+        assert!(third.solve_shared(&b, &mut x).unwrap().converged);
     }
 
     #[test]

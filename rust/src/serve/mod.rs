@@ -29,6 +29,12 @@
 //! The `parac serve` CLI subcommand and `benches/bench_serve.rs` drive
 //! this stack under open-loop load via
 //! [`crate::coordinator::serve_driver`].
+//!
+//! The service is also the stack's **recovery boundary**: per-request
+//! deadlines, panic quarantine of corrupt sessions, and
+//! degrade-and-retry builds (see the [`service`] module docs and the
+//! deterministic fault plane in [`crate::faults`]; soak-tested in
+//! `rust/tests/chaos.rs`).
 
 pub mod cache;
 pub mod service;

@@ -23,18 +23,49 @@
 //! and counted in [`ServiceStats::shed`] — overload surfaces as
 //! back-pressure instead of an unbounded queue.
 //!
+//! ## Fault tolerance
+//!
+//! The service is the recovery boundary for everything below it:
+//!
+//! * **Deadlines** — [`ServeOptions::deadline`] stamps every request
+//!   with a wall-clock budget ([`crate::solve::pcg::Deadline`]). A
+//!   request whose budget lapses while queued is shed without solving;
+//!   one that lapses mid-PCG is abandoned at the next deadline check.
+//!   Both surface as [`ParacError::DeadlineExceeded`] (retryable) and
+//!   count in [`ServiceStats::deadline_shed`].
+//! * **Panic quarantine** — the wave leader runs the batched solve
+//!   under `catch_unwind`; if it panics (a worker-pool job blew up, or
+//!   the session is corrupt), every request of the wave fails with a
+//!   typed [`ParacError::Internal`], the cached session is
+//!   [quarantined](FactorCache::quarantine), and the next request
+//!   rebuilds fresh ([`ServiceStats::quarantined`]).
+//! * **Degrade-and-retry** — a build that fails with an escaped
+//!   [`ParacError::ArenaFull`] / [`ParacError::WorkspaceFull`], a
+//!   non-finite factor ([`ParacError::Internal`]), or a build panic is
+//!   retried up to [`MAX_BUILD_ATTEMPTS`] times with progressively
+//!   degraded settings — grown arena, pinned f64 plane, sequential
+//!   engine last — each retry counted in [`ServiceStats::retries`].
+//!
 //! No background threads anywhere: the service borrows its clients'
 //! threads, so a binary that drops the service leaks nothing.
 
 use crate::error::ParacError;
+use crate::factor::Engine;
 use crate::graph::Laplacian;
 use crate::serve::cache::FactorCache;
-use crate::solve::pcg::SolveStats;
-use crate::solver::Solver;
+use crate::solve::pcg::{Deadline, SolveStats};
+use crate::solver::{Solver, SolverBuilder};
+use crate::sparse::Precision;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Build attempts the degrade-and-retry policy makes beyond the first:
+/// one per rung of the degradation ladder (grown arena → f64 plane →
+/// sequential engine).
+pub const MAX_BUILD_ATTEMPTS: usize = 3;
 
 /// Coalescing knobs for a [`SolveService`].
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +81,12 @@ pub struct ServeOptions {
     /// bound — back-pressure the caller can retry on. `0` disables the
     /// bound (the pre-admission-control behaviour).
     pub max_queue: usize,
+    /// Per-request wall-clock budget: each request is stamped with
+    /// `Deadline::after(budget)` at admission. `None` (the default)
+    /// disables deadlines entirely — no clock is read on the solve
+    /// path and results stay bit-identical to the deadline-less
+    /// service.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeOptions {
@@ -58,6 +95,7 @@ impl Default for ServeOptions {
             max_wave: 8,
             max_wait: Duration::from_micros(200),
             max_queue: 1024,
+            deadline: None,
         }
     }
 }
@@ -65,10 +103,26 @@ impl Default for ServeOptions {
 /// Outcome of one request: the solution and its solve stats.
 type WaveItem = Result<(Vec<f64>, SolveStats), ParacError>;
 
+/// What the leader reports back to the service after running a wave.
+struct WaveOutcome {
+    /// Requests in the wave.
+    size: usize,
+    /// The batched solve panicked (caught at the leader boundary): the
+    /// service quarantines the session this wave ran on.
+    panicked: bool,
+}
+
+/// One queued request: its right-hand side and its admission-stamped
+/// deadline.
+struct Pending {
+    b: Vec<f64>,
+    deadline: Option<Deadline>,
+}
+
 /// State behind one gate's lock.
 struct GateState {
-    /// Right-hand sides of the wave currently collecting.
-    pending: Vec<Vec<f64>>,
+    /// Requests of the wave currently collecting.
+    pending: Vec<Pending>,
     /// Generation number of the collecting wave (bumped at seal, so a
     /// late arrival starts the next wave instead of joining a sealed
     /// one).
@@ -97,26 +151,32 @@ impl BatchGate {
     }
 
     /// Admit one request; returns its solution when the wave it joined
-    /// has been solved, plus `Some(wave_size)` when this thread led the
-    /// wave (for the caller's traffic accounting). The calling thread
-    /// either leads the wave (collect, seal, solve, distribute) or
-    /// follows (wait for the leader's hand-off). A request that finds
-    /// the collecting wave already at [`ServeOptions::max_queue`] is
-    /// shed at this admission point — before buffering its right-hand
-    /// side — with [`ParacError::Overloaded`].
+    /// has been solved, plus `Some(WaveOutcome)` when this thread led
+    /// the wave (for the caller's traffic accounting and quarantine
+    /// decision). The calling thread either leads the wave (collect,
+    /// seal, solve, distribute) or follows (wait for the leader's
+    /// hand-off). Two shed points at admission — before the right-hand
+    /// side is buffered: a collecting wave already at
+    /// [`ServeOptions::max_queue`] sheds with
+    /// [`ParacError::Overloaded`], and a request whose deadline has
+    /// already lapsed sheds with [`ParacError::DeadlineExceeded`].
     fn solve(
         &self,
         solver: &Solver<'static>,
         b: &[f64],
+        deadline: Option<Deadline>,
         opts: &ServeOptions,
-    ) -> (WaveItem, Option<usize>) {
+    ) -> (WaveItem, Option<WaveOutcome>) {
         let (my_gen, my_idx) = {
             let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
             if opts.max_queue > 0 && st.pending.len() >= opts.max_queue {
                 return (Err(ParacError::Overloaded { capacity: opts.max_queue }), None);
             }
+            if deadline.is_some_and(|d| d.lapsed()) {
+                return (Err(ParacError::DeadlineExceeded), None);
+            }
             let slot = (st.generation, st.pending.len());
-            st.pending.push(b.to_vec());
+            st.pending.push(Pending { b: b.to_vec(), deadline });
             if st.pending.len() >= opts.max_wave.max(1) {
                 // Wave full — wake the leader immediately.
                 self.cv.notify_all();
@@ -131,15 +191,16 @@ impl BatchGate {
         }
     }
 
-    /// Leader: wait out the coalescing window, seal, solve the wave,
-    /// distribute results, return our own plus the wave size.
+    /// Leader: wait out the coalescing window, seal, solve the wave
+    /// under `catch_unwind`, distribute results, return our own plus
+    /// the wave outcome.
     fn lead(
         &self,
         solver: &Solver<'static>,
         my_gen: u64,
         opts: &ServeOptions,
-    ) -> (WaveItem, Option<usize>) {
-        let deadline = Instant::now() + opts.max_wait;
+    ) -> (WaveItem, Option<WaveOutcome>) {
+        let window_end = Instant::now() + opts.max_wait;
         let batch = {
             let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
             loop {
@@ -147,12 +208,12 @@ impl BatchGate {
                     break;
                 }
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= window_end {
                     break;
                 }
                 let (next, timeout) = self
                     .cv
-                    .wait_timeout(st, deadline - now)
+                    .wait_timeout(st, window_end - now)
                     .unwrap_or_else(|p| p.into_inner());
                 st = next;
                 if timeout.timed_out() {
@@ -165,25 +226,47 @@ impl BatchGate {
         };
 
         let wave = batch.len();
-        let bs: Vec<&[f64]> = batch.iter().map(|b| b.as_slice()).collect();
+        let bs: Vec<&[f64]> = batch.iter().map(|p| p.b.as_slice()).collect();
+        let deadlines: Vec<Option<Deadline>> = batch.iter().map(|p| p.deadline).collect();
         let mut xs = vec![Vec::new(); wave];
-        let mut stats = Vec::new();
-        let outcome = solver.solve_batch_shared(&bs, &mut xs, &mut stats);
+        let mut results = Vec::new();
+        // The quarantine boundary: a panic anywhere below (a worker-
+        // pool job, a corrupt factor hit mid-sweep) is caught *here*,
+        // converted into a typed error for every request of the wave,
+        // and reported upward so the service can quarantine the
+        // session. The solver holds no locks across a wave, so
+        // unwinding cannot poison shared state.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            solver.solve_wave_shared(&bs, &deadlines, &mut xs, &mut results)
+        }));
+        let panicked = outcome.is_err();
 
         let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
         let mine = match outcome {
-            Ok(()) => {
-                // Hand each follower its solution (reverse order so the
+            Ok(Ok(())) => {
+                // Hand each follower its result (reverse order so the
                 // index-0 pop below is ours).
-                let mut pairs: Vec<WaveItem> =
-                    xs.into_iter().zip(stats).map(Ok).collect();
+                let mut items: Vec<WaveItem> = xs
+                    .into_iter()
+                    .zip(results)
+                    .map(|(x, r)| r.map(|stats| (x, stats)))
+                    .collect();
                 for idx in (1..wave).rev() {
-                    let item = pairs.pop().expect("one result per request");
+                    let item = items.pop().expect("one result per request");
                     st.results.insert((my_gen, idx), item);
                 }
-                pairs.pop().expect("leader's own result")
+                items.pop().expect("leader's own result")
             }
-            Err(e) => {
+            Ok(Err(e)) => {
+                // Whole-wave shape error: every request gets the same
+                // typed failure.
+                for idx in 1..wave {
+                    st.results.insert((my_gen, idx), Err(e.clone()));
+                }
+                Err(e)
+            }
+            Err(_panic) => {
+                let e = ParacError::Internal("solve wave panicked".into());
                 for idx in 1..wave {
                     st.results.insert((my_gen, idx), Err(e.clone()));
                 }
@@ -192,7 +275,7 @@ impl BatchGate {
         };
         drop(st);
         self.cv.notify_all();
-        (mine, Some(wave))
+        (mine, Some(WaveOutcome { size: wave, panicked }))
     }
 
     /// Follower: wait until the leader posts our result.
@@ -221,6 +304,15 @@ pub struct ServiceStats {
     /// the collecting wave was already at
     /// [`ServeOptions::max_queue`].
     pub shed: u64,
+    /// Degraded build attempts made by the degrade-and-retry policy
+    /// (one per rung climbed, across all sessions ever built).
+    pub retries: u64,
+    /// Sessions quarantined after a wave panicked on them; each
+    /// quarantine also shows up as a cache eviction.
+    pub quarantined: u64,
+    /// Requests that failed with [`ParacError::DeadlineExceeded`] —
+    /// shed while queued or abandoned mid-PCG.
+    pub deadline_shed: u64,
 }
 
 /// A concurrent solve front end: factor cache + per-operator
@@ -233,6 +325,9 @@ pub struct SolveService {
     waves: AtomicU64,
     coalesced: AtomicU64,
     shed: AtomicU64,
+    retries: AtomicU64,
+    quarantined: AtomicU64,
+    deadline_shed: AtomicU64,
 }
 
 impl SolveService {
@@ -246,6 +341,9 @@ impl SolveService {
             waves: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
         }
     }
 
@@ -266,6 +364,9 @@ impl SolveService {
             waves: self.waves.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            deadline_shed: self.deadline_shed.load(Ordering::Relaxed),
         }
     }
 
@@ -279,18 +380,100 @@ impl SolveService {
         lap: &Arc<Laplacian>,
         b: &[f64],
     ) -> Result<(Vec<f64>, SolveStats), ParacError> {
-        let solver = self.cache.get_or_build(lap)?;
-        let gate = self.gate_for(lap.fingerprint().full);
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let (out, led) = gate.solve(&solver, b, &self.opts);
+        let deadline = self.opts.deadline.map(Deadline::after);
+        let solver = match self.session(lap) {
+            Ok(s) => s,
+            Err(e) => return Err(self.count_err(e)),
+        };
+        let fp = lap.fingerprint();
+        let gate = self.gate_for(fp.full);
+        let (out, led) = gate.solve(&solver, b, deadline, &self.opts);
         if let Some(wave) = led {
             self.waves.fetch_add(1, Ordering::Relaxed);
-            self.coalesced.fetch_add(wave.saturating_sub(1) as u64, Ordering::Relaxed);
+            self.coalesced
+                .fetch_add(wave.size.saturating_sub(1) as u64, Ordering::Relaxed);
+            if wave.panicked {
+                // The session this wave ran on may be corrupt; drop it
+                // so the next request rebuilds fresh. Followers of the
+                // panicked wave already hold their typed errors.
+                self.cache.quarantine(fp.full);
+                self.quarantined.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        if matches!(out, Err(ParacError::Overloaded { .. })) {
-            self.shed.fetch_add(1, Ordering::Relaxed);
+        out.map_err(|e| self.count_err(e))
+    }
+
+    /// Count a terminal per-request failure in the matching stat.
+    fn count_err(&self, e: ParacError) -> ParacError {
+        match e {
+            ParacError::Overloaded { .. } => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            ParacError::DeadlineExceeded => {
+                self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
         }
-        out
+        e
+    }
+
+    /// A usable session for `lap`: the cached one when healthy,
+    /// otherwise degrade-and-retry. A build that fails with an escaped
+    /// overflow ([`ParacError::ArenaFull`] / [`ParacError::WorkspaceFull`]),
+    /// a non-finite factor ([`ParacError::Internal`]), or a panic is
+    /// retried up to [`MAX_BUILD_ATTEMPTS`] more times, each rung of
+    /// the ladder trading speed for headroom
+    /// (see [`Self::degraded_builder`]). Other build errors —
+    /// [`ParacError::BadInput`], dimension mismatches — are not
+    /// retryable and propagate immediately.
+    fn session(&self, lap: &Arc<Laplacian>) -> Result<Arc<Solver<'static>>, ParacError> {
+        let mut last = match catch_unwind(AssertUnwindSafe(|| self.cache.get_or_build(lap))) {
+            Ok(Ok(solver)) => return Ok(solver),
+            Ok(Err(e)) => e,
+            Err(_panic) => ParacError::Internal("factor build panicked".into()),
+        };
+        for attempt in 1..=MAX_BUILD_ATTEMPTS {
+            let degradable = matches!(
+                last,
+                ParacError::ArenaFull { .. }
+                    | ParacError::WorkspaceFull { .. }
+                    | ParacError::Internal(_)
+            );
+            if !degradable {
+                break;
+            }
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            let builder = self.degraded_builder(attempt);
+            last = match catch_unwind(AssertUnwindSafe(|| {
+                self.cache.rebuild_with(lap, &builder)
+            })) {
+                Ok(Ok(solver)) => return Ok(solver),
+                Ok(Err(e)) => e,
+                Err(_panic) => ParacError::Internal("factor build panicked".into()),
+            };
+        }
+        Err(last)
+    }
+
+    /// The degradation ladder: each rung keeps the previous rungs'
+    /// concessions and adds one more.
+    ///
+    /// 1. grow the arena headroom 8× (outruns estimator misses),
+    /// 2. pin the value plane to f64 (rules out f32 range/rounding),
+    /// 3. fall back to the sequential engine (rules out the parallel
+    ///    path entirely — slow but maximally conservative).
+    fn degraded_builder(&self, attempt: usize) -> SolverBuilder {
+        let base = self.cache.builder().clone();
+        let grown = base.parac_opts().arena_factor * 8.0;
+        let mut builder = base.arena_factor(grown);
+        if attempt >= 2 {
+            builder = builder.precision(Precision::F64);
+        }
+        if attempt >= 3 {
+            builder = builder.engine(Engine::Seq);
+        }
+        builder
     }
 
     /// The gate for one resident operator, created on first use. A
@@ -390,6 +573,30 @@ mod tests {
         let (_, stats) = svc.solve(&lap, &b).unwrap();
         assert!(stats.converged);
         assert!(t0.elapsed() >= Duration::from_millis(5), "window must be honored");
+    }
+
+    #[test]
+    fn lapsed_deadlines_are_shed_and_counted() {
+        // A zero budget has lapsed by the time the session is built, so
+        // the request is shed at admission without solving anything.
+        let cache = FactorCache::new(Solver::builder().seed(7), 4);
+        let svc = SolveService::new(
+            cache,
+            ServeOptions {
+                max_wave: 1,
+                deadline: Some(Duration::ZERO),
+                ..Default::default()
+            },
+        );
+        let lap = Arc::new(generators::grid2d(8, 8, generators::Coeff::Uniform, 0));
+        let b = pcg::random_rhs(&lap, 2);
+        let err = svc.solve(&lap, &b).unwrap_err();
+        assert!(matches!(err, ParacError::DeadlineExceeded));
+        assert!(err.is_retryable(), "deadline errors invite a client retry");
+        let st = svc.stats();
+        assert_eq!(st.requests, 1);
+        assert_eq!(st.deadline_shed, 1);
+        assert_eq!(st.waves, 0, "a shed request must not run a wave");
     }
 
     #[test]

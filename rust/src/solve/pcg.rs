@@ -57,12 +57,48 @@ use crate::sparse::ops::{
     fused_project_nrm2sq, fused_search_dir, mean, nrm2, project_mean_zero,
 };
 use crate::sparse::Precision;
+use std::time::{Duration, Instant};
 
 /// Iterations without a new best true residual before the f32
 /// refinement guard declares stagnation and promotes the preconditioner
 /// to its f64 plane. Generous on purpose: PCG residuals are not
 /// monotone, and a premature promotion wastes the cheap plane.
 pub const F32_STAGNATION_WINDOW: usize = 40;
+
+/// How often (in iterations) [`solve_into_deadline`] consults the
+/// deadline token. A clock read per iteration would be pure overhead on
+/// the hot path; every 16th iteration bounds the overshoot to one
+/// sub-millisecond stretch of iterations while keeping the check
+/// essentially free. The first check happens on iteration 1, so a
+/// budget that lapsed before the loop even started (e.g. a long queue
+/// wait) is caught immediately.
+pub const DEADLINE_CHECK_INTERVAL: usize = 16;
+
+/// A wall-clock budget token for a solve: an absolute instant after
+/// which the PCG loop abandons the request. Cheap to copy and thread
+/// through the serving layers; the same token is shared by every
+/// request of a coalesced wave.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline { at: Instant::now() + budget }
+    }
+
+    /// A deadline at an absolute instant.
+    pub fn at(at: Instant) -> Deadline {
+        Deadline { at }
+    }
+
+    /// Has the deadline passed?
+    pub fn lapsed(&self) -> bool {
+        Instant::now() >= self.at
+    }
+}
 
 /// PCG options.
 #[derive(Clone, Debug)]
@@ -125,6 +161,11 @@ pub struct SolveStats {
     /// f32 → f64 refinement-guard promotions during this solve (0 or
     /// 1: a session promotes at most once, and f64 sessions never do).
     pub fallbacks: u32,
+    /// The solve abandoned the iteration loop because its
+    /// [`Deadline`] lapsed (only ever `true` for
+    /// [`solve_into_deadline`] calls that carried a deadline; when set,
+    /// `converged` is `false` and `x` holds the best iterate so far).
+    pub timed_out: bool,
 }
 
 /// Reusable buffers for [`solve_into`]: the five Krylov-loop vectors
@@ -232,6 +273,32 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
     ws: &mut PcgWorkspace,
     x: &mut [f64],
 ) -> SolveStats {
+    solve_into_deadline(a, b, m, opts, ws, x, None)
+}
+
+/// [`solve_into`] with an optional wall-clock budget. When `deadline`
+/// is `Some`, the iteration loop consults it every
+/// [`DEADLINE_CHECK_INTERVAL`] iterations (first check on iteration 1)
+/// and abandons the solve once it lapses, reporting
+/// [`SolveStats::timed_out`]. With `deadline == None` the check branch
+/// reads one `Option` discriminant per checked iteration and the
+/// result is **bit-identical** to [`solve_into`] — no clock is ever
+/// read, so the bit-identity and alloc-free contracts are unaffected.
+pub fn solve_into_deadline<A: LinearOperator + ?Sized>(
+    a: &A,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    opts: &PcgOptions,
+    ws: &mut PcgWorkspace,
+    x: &mut [f64],
+    deadline: Option<Deadline>,
+) -> SolveStats {
+    // Fault site `solve-latency` (chaos testing): a fired probe sleeps
+    // here, blowing the request's deadline. One relaxed atomic load
+    // when no fault plan is installed.
+    if let Some(d) = crate::faults::latency_fault() {
+        std::thread::sleep(d);
+    }
     let n = a.n();
     debug_assert_eq!(b.len(), n);
     debug_assert_eq!(x.len(), n);
@@ -309,8 +376,21 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
         }
     }
 
+    let mut timed_out = false;
     while iters < opts.max_iter {
         iters += 1;
+        // Deadline token (armed only when the caller supplied one; a
+        // `None` deadline makes this branch side-effect-free, keeping
+        // deadline-less solves bit-identical to `solve_into`).
+        if iters % DEADLINE_CHECK_INTERVAL == 1 {
+            if let Some(d) = deadline {
+                if d.lapsed() {
+                    timed_out = true;
+                    iters -= 1;
+                    break;
+                }
+            }
+        }
         a.apply_to(p, ap);
         let pap = dot(p, ap);
         if pap <= 0.0 || !pap.is_finite() {
@@ -395,6 +475,7 @@ pub fn solve_into<A: LinearOperator + ?Sized>(
         // Sampled after the solve: a mid-solve promotion reports F64.
         precision: m.precision(),
         fallbacks,
+        timed_out,
     }
 }
 
@@ -697,6 +778,54 @@ mod tests {
         assert!(stats.converged);
         assert_eq!(stats.fallbacks, 0);
         assert_eq!(stats.precision, crate::sparse::Precision::F64);
+    }
+
+    #[test]
+    fn lapsed_deadline_abandons_the_solve_immediately() {
+        let l = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let b = random_rhs(&l, 4);
+        let pre = JacobiPrecond::new(&l.matrix);
+        let mut ws = PcgWorkspace::new(l.n());
+        let mut x = vec![0.0; l.n()];
+        // An already-lapsed budget: the first checked iteration (1)
+        // bails out before any Krylov work.
+        let d = Deadline::after(Duration::ZERO);
+        let stats = solve_into_deadline(
+            &l.matrix,
+            &b,
+            &pre,
+            &PcgOptions::default(),
+            &mut ws,
+            &mut x,
+            Some(d),
+        );
+        assert!(stats.timed_out);
+        assert!(!stats.converged);
+        assert_eq!(stats.iters, 0);
+    }
+
+    #[test]
+    fn none_deadline_is_bit_identical_to_solve_into() {
+        let l = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let b = random_rhs(&l, 8);
+        let pre = JacobiPrecond::new(&l.matrix);
+        let o = PcgOptions::default();
+        let mut ws = PcgWorkspace::new(l.n());
+        let mut x1 = vec![0.0; l.n()];
+        let mut x2 = vec![0.0; l.n()];
+        let s1 = solve_into(&l.matrix, &b, &pre, &o, &mut ws, &mut x1);
+        let s2 = solve_into_deadline(&l.matrix, &b, &pre, &o, &mut ws, &mut x2, None);
+        assert_eq!(x1, x2);
+        assert_eq!(s1.iters, s2.iters);
+        assert!(!s2.timed_out);
+        // A generous (far-future) deadline must not perturb the answer
+        // either — only the lapse changes behavior, not the token.
+        let far = Deadline::after(Duration::from_secs(3600));
+        let mut x3 = vec![0.0; l.n()];
+        let s3 = solve_into_deadline(&l.matrix, &b, &pre, &o, &mut ws, &mut x3, Some(far));
+        assert_eq!(x1, x3);
+        assert_eq!(s1.iters, s3.iters);
+        assert!(!s3.timed_out);
     }
 
     #[test]

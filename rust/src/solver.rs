@@ -234,6 +234,9 @@ pub struct SolverBuilder {
     /// Level-width cutoff for the packed sweep executor; `None` =
     /// `PARAC_LEVEL_CUTOFF` env override or the built-in default.
     level_cutoff: Option<usize>,
+    /// Explicit fault-injection spec (see [`crate::faults`]); `None` =
+    /// consult `PARAC_FAULTS` once per process.
+    faults: Option<String>,
 }
 
 impl Default for SolverBuilder {
@@ -245,6 +248,7 @@ impl Default for SolverBuilder {
             project: None,
             threads: 1,
             level_cutoff: None,
+            faults: None,
         }
     }
 }
@@ -364,6 +368,37 @@ impl SolverBuilder {
         self
     }
 
+    /// Install a fault-injection plan for robustness testing (see
+    /// [`crate::faults`] for the grammar; `"off"` clears). The plan is
+    /// process-wide and armed when the session builds; unset, the
+    /// `PARAC_FAULTS` environment variable is consulted once per
+    /// process. A malformed spec is a typed
+    /// [`ParacError::InvalidOption`] at build time.
+    pub fn faults(mut self, spec: &str) -> Self {
+        self.faults = Some(spec.to_string());
+        self
+    }
+
+    /// The ParAC option block this builder currently carries (the
+    /// serving layer's degrade-and-retry policy reads the active
+    /// `arena_factor` from here before growing it).
+    pub fn parac_opts(&self) -> &ParacOptions {
+        &self.parac
+    }
+
+    /// Arm the fault plane: an explicit [`SolverBuilder::faults`] spec
+    /// wins; otherwise `PARAC_FAULTS` is read once per process. Called
+    /// on every `build*` (cold path — one lock when a spec is present,
+    /// one `OnceLock` read otherwise).
+    fn arm_faults(&self) -> Result<(), ParacError> {
+        match &self.faults {
+            Some(spec) => crate::faults::install_spec(spec)
+                .map_err(|got| ParacError::InvalidOption { what: "faults", got }),
+            None => crate::faults::init_from_env()
+                .map_err(|got| ParacError::InvalidOption { what: "PARAC_FAULTS", got }),
+        }
+    }
+
     /// Replace the whole PCG option block at once (its `project` field
     /// is overridden by the automatic/explicit projection choice).
     pub fn pcg_options(mut self, opts: PcgOptions) -> Self {
@@ -379,6 +414,8 @@ impl SolverBuilder {
         if lap.n() == 0 {
             return Err(ParacError::BadInput("empty matrix".into()));
         }
+        check_finite_values(&lap.matrix.data)?;
+        self.arm_faults()?;
         let timer = Timer::start();
         let (pre, stats, symbolic) = self.build_precond(lap)?;
         let project = self.project.unwrap_or(lap.kind == LapKind::Graph);
@@ -396,6 +433,8 @@ impl SolverBuilder {
         if lap.n() == 0 {
             return Err(ParacError::BadInput("empty matrix".into()));
         }
+        check_finite_values(&lap.matrix.data)?;
+        self.arm_faults()?;
         let timer = Timer::start();
         let (pre, stats, symbolic) = self.build_precond(&lap)?;
         let project = self.project.unwrap_or(lap.kind == LapKind::Graph);
@@ -427,6 +466,8 @@ impl SolverBuilder {
                 a.nrows, a.ncols
             )));
         }
+        check_finite_values(&a.data)?;
+        self.arm_faults()?;
         let timer = Timer::start();
         let (pre, stats): (Box<dyn Preconditioner>, _) = match &self.precond {
             PrecondKind::Parac { level_threads } => {
@@ -586,6 +627,21 @@ fn wrap_ldl(
             cutoff.unwrap_or_else(crate::solve::packed::default_cutoff),
             Precision::F32,
         )),
+    }
+}
+
+/// Reject NaN/±inf matrix values at build time with a typed error: a
+/// single non-finite weight silently poisons the whole factorization
+/// (NaN propagates through every elimination it touches), so the
+/// session surface refuses it up front. One predictable pass over the
+/// value array — noise next to a factorization.
+fn check_finite_values(data: &[f64]) -> Result<(), ParacError> {
+    match data.iter().position(|v| !v.is_finite()) {
+        None => Ok(()),
+        Some(i) => Err(ParacError::BadInput(format!(
+            "matrix value at nnz index {i} is non-finite ({})",
+            data[i]
+        ))),
     }
 }
 
@@ -945,6 +1001,73 @@ impl<'a> Solver<'a> {
         Ok(())
     }
 
+    /// The serving wave primitive: [`Solver::solve_batch_shared`] with
+    /// **per-request deadlines and per-request outcomes**. Whole-wave
+    /// shape mismatches (slice lengths, RHS dimensions) are still one
+    /// `Err` before any solve runs, exactly like the batch path; per
+    /// request, a deadline that lapsed while the request was queued
+    /// sheds it without solving, and a deadline that lapses mid-PCG
+    /// abandons that solve — both reported as
+    /// [`ParacError::DeadlineExceeded`] in that request's slot of
+    /// `results`. One workspace serves the whole wave, and with every
+    /// deadline `None` the arithmetic — and every solution bit — is
+    /// identical to [`Solver::solve_batch_shared`].
+    pub fn solve_wave_shared(
+        &self,
+        bs: &[&[f64]],
+        deadlines: &[Option<pcg::Deadline>],
+        xs: &mut [Vec<f64>],
+        results: &mut Vec<Result<SolveStats, ParacError>>,
+    ) -> Result<(), ParacError> {
+        if bs.len() != xs.len() {
+            return Err(ParacError::DimensionMismatch {
+                what: "batch solutions",
+                expected: bs.len(),
+                got: xs.len(),
+            });
+        }
+        if bs.len() != deadlines.len() {
+            return Err(ParacError::DimensionMismatch {
+                what: "batch deadlines",
+                expected: bs.len(),
+                got: deadlines.len(),
+            });
+        }
+        for b in bs {
+            if b.len() != self.n {
+                return Err(ParacError::DimensionMismatch {
+                    what: "rhs",
+                    expected: self.n,
+                    got: b.len(),
+                });
+            }
+        }
+        for x in xs.iter_mut() {
+            x.resize(self.n, 0.0);
+        }
+        results.clear();
+        results.reserve(bs.len());
+        let mut ws = self.workspaces.checkout();
+        for ((b, d), x) in bs.iter().zip(deadlines).zip(xs.iter_mut()) {
+            if d.is_some_and(|d| d.lapsed()) {
+                // Shed while queued: the budget was gone before this
+                // request's turn in the wave came up.
+                results.push(Err(ParacError::DeadlineExceeded));
+                continue;
+            }
+            let stats =
+                pcg::solve_into_deadline(&self.op, b, self.pre.as_ref(), &self.pcg, &mut ws, x, *d);
+            results.push(if stats.timed_out {
+                Err(ParacError::DeadlineExceeded)
+            } else {
+                Ok(stats)
+            });
+        }
+        self.store_history(&mut ws);
+        self.workspaces.restore(ws);
+        Ok(())
+    }
+
     /// Publish a finished workspace's residual history to the session
     /// store (O(1) buffer swap; only when the session records history —
     /// otherwise both buffers are empty and the lock is skipped).
@@ -1295,6 +1418,80 @@ mod tests {
             .build(&lap)
             .unwrap();
         assert!(matches!(jac.refactorize(&lap), Err(ParacError::BadInput(_))));
+    }
+
+    #[test]
+    fn non_finite_weights_are_rejected_at_build_time() {
+        // Regression (satellite of the robustness PR): a NaN or ±inf
+        // edge weight used to flow straight into the factorization and
+        // poison it silently; now every build surface rejects it.
+        let mut lap = generators::grid2d(6, 6, generators::Coeff::Uniform, 0);
+        lap.matrix.data[3] = f64::NAN;
+        assert!(matches!(
+            Solver::builder().build(&lap),
+            Err(ParacError::BadInput(msg)) if msg.contains("non-finite")
+        ));
+        lap.matrix.data[3] = f64::INFINITY;
+        assert!(matches!(
+            Solver::builder().build_shared(Arc::new(lap.clone())),
+            Err(ParacError::BadInput(msg)) if msg.contains("non-finite")
+        ));
+        let mut a = generators::grid2d(6, 6, generators::Coeff::Uniform, 0).matrix;
+        a.data[0] = f64::NEG_INFINITY;
+        assert!(matches!(
+            Solver::builder().build_sdd(&a),
+            Err(ParacError::BadInput(msg)) if msg.contains("non-finite")
+        ));
+    }
+
+    #[test]
+    fn bad_fault_spec_is_a_typed_build_error() {
+        let lap = generators::grid2d(4, 4, generators::Coeff::Uniform, 0);
+        assert!(matches!(
+            Solver::builder().faults("no-such-site=3").build(&lap),
+            Err(ParacError::InvalidOption { what: "faults", .. })
+        ));
+        // "off" is a valid spec and must not perturb the build.
+        assert!(Solver::builder().faults("off").build(&lap).is_ok());
+    }
+
+    #[test]
+    fn solve_wave_matches_batch_without_deadlines_and_sheds_lapsed_ones() {
+        let lap = generators::grid2d(12, 12, generators::Coeff::Uniform, 0);
+        let s = Solver::builder().seed(3).build(&lap).unwrap();
+        let b1 = pcg::random_rhs(&lap, 1);
+        let b2 = pcg::random_rhs(&lap, 2);
+        let bs: Vec<&[f64]> = vec![&b1, &b2];
+
+        let mut batch_xs = vec![Vec::new(), Vec::new()];
+        let mut batch_stats = Vec::new();
+        s.solve_batch_shared(&bs, &mut batch_xs, &mut batch_stats).unwrap();
+
+        // All-None deadlines: bit-identical to the batch path.
+        let mut wave_xs = vec![Vec::new(), Vec::new()];
+        let mut results = Vec::new();
+        s.solve_wave_shared(&bs, &[None, None], &mut wave_xs, &mut results).unwrap();
+        assert_eq!(wave_xs, batch_xs, "deadline-less wave must match the batch path bit for bit");
+        for (r, want) in results.iter().zip(&batch_stats) {
+            let got = r.as_ref().unwrap();
+            assert_eq!(got.iters, want.iters);
+            assert!(!got.timed_out);
+        }
+
+        // A lapsed deadline sheds its request; the neighbor still
+        // solves to the same bits.
+        let lapsed = Some(pcg::Deadline::after(std::time::Duration::ZERO));
+        let mut xs = vec![Vec::new(), Vec::new()];
+        s.solve_wave_shared(&bs, &[lapsed, None], &mut xs, &mut results).unwrap();
+        assert!(matches!(results[0], Err(ParacError::DeadlineExceeded)));
+        assert!(results[1].as_ref().unwrap().converged);
+        assert_eq!(xs[1], batch_xs[1]);
+
+        // Shape errors stay whole-wave, before any solve.
+        assert!(matches!(
+            s.solve_wave_shared(&bs, &[None], &mut xs, &mut results),
+            Err(ParacError::DimensionMismatch { what: "batch deadlines", .. })
+        ));
     }
 
     #[test]

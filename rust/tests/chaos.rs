@@ -1,0 +1,223 @@
+//! Chaos soak: the ISSUE 9 capstone.
+//!
+//! One test, four phases, all driven by the deterministic fault plane
+//! (`parac::faults`):
+//!
+//! 1. **Poisoned-lock recovery** — a `worker-panic=1` plan makes the
+//!    first pooled build panic *inside* `FactorCache::get_or_build`
+//!    (poisoning the cache mutex); once faults clear, the same cache
+//!    must keep serving.
+//! 2. **Degrade-and-retry ladder** — a seed chosen so the very first
+//!    arena and NaN probes fire walks the service through all three
+//!    rungs (grown arena → f64 plane → sequential engine) before the
+//!    build lands; `ServiceStats::retries` reconciles exactly.
+//! 3. **Seeded soak** — 8 client threads hammer a deadline-armed
+//!    service while latency (and, when the pool is real, worker-panic)
+//!    faults fire on schedule. Contract: no hang, no escaped panic,
+//!    every failure is a typed `ParacError`, and the service counters
+//!    reconcile with what the clients observed.
+//! 4. **Recovery** — with the plan cleared, the soaked service still
+//!    converges, and a fresh graph served through it is bit-identical
+//!    to a standalone fault-free solver with the same knobs.
+//!
+//! The fault plane is process-global state, so this binary holds
+//! exactly one `#[test]` and CI runs it with `--test-threads=1`.
+//! Sites probed from inside worker-pool jobs cannot fire when the
+//! global pool degenerates to an inline call (`PARAC_THREADS=1`);
+//! those phases gate on the pool size so the soak passes under both
+//! CI thread counts.
+
+use parac::error::ParacError;
+use parac::faults::{self, FaultPlan, Site};
+use parac::graph::generators::{self, Coeff};
+use parac::serve::{FactorCache, ServeOptions, SolveService};
+use parac::solve::pcg;
+use parac::solver::Solver;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Client threads in the soak phase.
+const SOAK_CLIENTS: usize = 8;
+/// Requests each soak client issues.
+const SOAK_REQUESTS: usize = 12;
+
+#[test]
+fn chaos_soak_stays_typed_and_recovery_restores_bit_identity() {
+    // Consume the PARAC_FAULTS env slot first so a later builder's
+    // `init_from_env` can never clobber the plans this test installs.
+    faults::init_from_env().expect("PARAC_FAULTS must parse");
+    // Pool-borne sites (worker-panic) only fire on a real dispatch;
+    // a size-1 global pool runs every job inline past the probe.
+    let pooled = parac::par::global().size() > 1;
+
+    // ------------------------------------------------------------------
+    // Phase 1: a build panic poisons the cache lock; the cache recovers.
+    // ------------------------------------------------------------------
+    if pooled {
+        faults::install_spec("worker-panic=1").unwrap();
+        let cache = FactorCache::new(Solver::builder().seed(3).threads(2), 4);
+        let lap = Arc::new(generators::grid2d(16, 16, Coeff::Uniform, 1));
+        let r = catch_unwind(AssertUnwindSafe(|| cache.get_or_build(&lap)));
+        assert!(r.is_err(), "worker-panic=1 must panic the pooled build");
+        assert!(faults::fired(Site::WorkerPanic) >= 1);
+
+        faults::install(None);
+        let solver = cache
+            .get_or_build(&lap)
+            .expect("a poisoned cache lock must keep serving after recovery");
+        let b = pcg::random_rhs(&lap, 1);
+        let mut x = vec![0.0; lap.n()];
+        assert!(solver.solve_shared(&b, &mut x).unwrap().converged);
+    }
+
+    // ------------------------------------------------------------------
+    // Phase 2: escaped overflow + NaN factor walk the full degrade
+    // ladder deterministically.
+    // ------------------------------------------------------------------
+    // Pick a seed whose phase makes probe 0 fire on both sites (about a
+    // quarter of seeds do); with period 2 the probe sequence is then
+    // arena: fire,ok,fire,ok,…  nan: fire,ok,…  which drives exactly:
+    //   attempt 0  arena(c0) fires  -> ArenaFull
+    //   retry 1    arena(c1) ok, nan(c0) fires -> non-finite factor
+    //   retry 2    arena(c2) fires  -> ArenaFull
+    //   retry 3    arena(c3) ok, nan(c1) ok    -> built (seq engine)
+    let ladder_seed = (0u64..256)
+        .find(|s| {
+            let spec = format!("seed={s},arena-overflow=2,nan-packed-values=2");
+            let p = FaultPlan::parse(&spec).unwrap().unwrap();
+            p.fires_at(Site::ArenaOverflow, 0) && p.fires_at(Site::NanPackedValues, 0)
+        })
+        .expect("some seed under 256 fires both sites at probe 0");
+    faults::install_spec(&format!(
+        "seed={ladder_seed},arena-overflow=2,nan-packed-values=2"
+    ))
+    .unwrap();
+
+    let svc = SolveService::new(
+        FactorCache::new(Solver::builder().seed(7), 4),
+        ServeOptions { max_wave: 1, ..Default::default() },
+    );
+    let lap = Arc::new(generators::grid2d(14, 14, Coeff::Uniform, 2));
+    let b = pcg::random_rhs(&lap, 5);
+    let (x, stats) = svc.solve(&lap, &b).expect("degrade-and-retry must save this build");
+    assert!(stats.converged);
+    assert_eq!(x.len(), lap.n());
+    assert_eq!(
+        svc.stats().retries,
+        3,
+        "the schedule above climbs exactly three rungs"
+    );
+    assert!(faults::fired(Site::ArenaOverflow) >= 2);
+    assert!(faults::fired(Site::NanPackedValues) >= 1);
+
+    // ------------------------------------------------------------------
+    // Phase 3: seeded soak under deadlines, latency faults, and (when
+    // pooled) injected worker panics.
+    // ------------------------------------------------------------------
+    let soak_spec = if pooled {
+        "seed=11,solve-latency=5,latency-us=20000,worker-panic=700"
+    } else {
+        "seed=11,solve-latency=5,latency-us=20000"
+    };
+    faults::install_spec(soak_spec).unwrap();
+
+    let svc = SolveService::new(
+        FactorCache::new(Solver::builder().seed(9).threads(2), 4),
+        ServeOptions {
+            max_wave: 4,
+            max_wait: Duration::from_micros(200),
+            max_queue: 4,
+            deadline: Some(Duration::from_millis(5)),
+        },
+    );
+    let laps = [
+        Arc::new(generators::grid2d(12, 12, Coeff::Uniform, 3)),
+        Arc::new(generators::grid2d(13, 13, Coeff::Uniform, 3)),
+    ];
+    let ok = AtomicU64::new(0);
+    let deadline_errs = AtomicU64::new(0);
+    let overload_errs = AtomicU64::new(0);
+    let internal_errs = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for client in 0..SOAK_CLIENTS {
+            let svc = &svc;
+            let laps = &laps;
+            let (ok, deadline_errs, overload_errs, internal_errs) =
+                (&ok, &deadline_errs, &overload_errs, &internal_errs);
+            scope.spawn(move || {
+                for i in 0..SOAK_REQUESTS {
+                    let lap = &laps[(client + i) % laps.len()];
+                    let b = pcg::random_rhs(lap, (client * SOAK_REQUESTS + i) as u64);
+                    match svc.solve(lap, &b) {
+                        Ok((x, stats)) => {
+                            assert_eq!(x.len(), lap.n());
+                            assert!(stats.converged, "an Ok solve must have converged");
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ParacError::DeadlineExceeded) => {
+                            deadline_errs.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ParacError::Overloaded { .. }) => {
+                            overload_errs.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ParacError::Internal(_)) => {
+                            internal_errs.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("chaos surfaced a non-contract error: {e}"),
+                    }
+                }
+            });
+        }
+    });
+
+    let issued = (SOAK_CLIENTS * SOAK_REQUESTS) as u64;
+    let st = svc.stats();
+    let observed = (
+        ok.load(Ordering::Relaxed),
+        deadline_errs.load(Ordering::Relaxed),
+        overload_errs.load(Ordering::Relaxed),
+        internal_errs.load(Ordering::Relaxed),
+    );
+    assert_eq!(
+        observed.0 + observed.1 + observed.2 + observed.3,
+        issued,
+        "every request resolves exactly once"
+    );
+    assert_eq!(st.requests, issued, "the service saw every request");
+    assert_eq!(st.deadline_shed, observed.1, "deadline stat reconciles with clients");
+    assert_eq!(st.shed, observed.2, "overload stat reconciles with clients");
+    assert!(
+        st.quarantined <= observed.3,
+        "every quarantined wave failed at least its leader with Internal"
+    );
+    assert!(observed.0 > 0, "the soak must not starve every request");
+    assert!(
+        faults::probed(Site::SolveLatency) > 0,
+        "the latency site must have been consulted during the soak"
+    );
+
+    // ------------------------------------------------------------------
+    // Phase 4: faults cleared — the soaked service recovers, and fresh
+    // traffic is bit-identical to a fault-free standalone solver.
+    // ------------------------------------------------------------------
+    faults::install(None);
+    for lap in &laps {
+        let b = pcg::random_rhs(lap, 999);
+        let (_, stats) = svc.solve(lap, &b).expect("soaked graphs must still serve");
+        assert!(stats.converged);
+    }
+
+    let fresh = Arc::new(generators::grid2d(17, 17, Coeff::Uniform, 4));
+    let bf = pcg::random_rhs(&fresh, 99);
+    let (got, stats) = svc.solve(&fresh, &bf).expect("fresh graph after chaos");
+    assert!(stats.converged);
+    let standalone = Solver::builder().seed(9).threads(2).build(&fresh).unwrap();
+    let mut want = vec![0.0; fresh.n()];
+    standalone.solve_shared(&bf, &mut want).unwrap();
+    assert_eq!(
+        got, want,
+        "with the plan cleared, served bits must match the fault-free reference"
+    );
+}

@@ -190,7 +190,12 @@ fn bounded_admission_sheds_excess_requests_under_contention() {
     let lap = Arc::new(generators::grid2d(12, 12, Coeff::Uniform, 6));
     let svc = SolveService::new(
         FactorCache::new(Solver::builder().seed(3), 2),
-        ServeOptions { max_wave: 8, max_wait: Duration::from_secs(1), max_queue: 1 },
+        ServeOptions {
+            max_wave: 8,
+            max_wait: Duration::from_secs(1),
+            max_queue: 1,
+            ..Default::default()
+        },
     );
     // Pre-build the factor through the cache so neither contender pays
     // the build inside the timed window.
