@@ -1,0 +1,103 @@
+//! Dynamic-graph update streams: per-path update latency against a
+//! from-scratch rebuild baseline, plus how each scenario's rounds
+//! classified (weight-only / cone-localized / rebuild).
+//!
+//! Emits `BENCH_dynamic.json` through the hand-rolled JSON writer so
+//! successive PRs can diff the dynamic trajectory mechanically; CI runs
+//! this binary at `PARAC_SCALE=tiny` as a smoke step so a broken
+//! classification path, a mis-spliced cone factor (every round asserts
+//! convergence), or a broken JSON emit fails visibly.
+
+mod bench_common;
+
+use parac::coordinator::pipeline::{self, BenchRow};
+use parac::coordinator::report::Table;
+use parac::dynamic::scenario::{self, ScenarioOptions};
+use parac::dynamic::DynamicOptions;
+use parac::graph::suite::{self, Scale};
+use parac::solver::Solver;
+use std::path::Path;
+
+fn main() {
+    let scale = bench_common::bench_scale();
+    let threads = bench_common::bench_threads();
+    let rounds = match scale {
+        Scale::Tiny => 4,
+        _ => 8,
+    };
+    println!("## Dynamic: delta-classified update streams  [scale {scale:?}]\n");
+    let sopts = ScenarioOptions {
+        rounds,
+        seed: 0xD11A,
+        measure_full_rebuild: true,
+        dynamic: DynamicOptions::default(),
+    };
+    let mut table = Table::new(&[
+        "problem",
+        "scenario",
+        "weight-only",
+        "localized",
+        "rebuild",
+        "wo (ms)",
+        "loc (ms)",
+        "rb (ms)",
+        "full rb (ms)",
+        "iters",
+    ]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let ms = |s: f64| {
+        if s > 0.0 {
+            format!("{:.3}", s * 1e3)
+        } else {
+            "-".into()
+        }
+    };
+    // One grid, one road-like, and the high-diameter adversary — the
+    // three shapes with the most different cone geometry.
+    for name in ["uniform_3d_poisson", "GAP-road", "clique_ladder"] {
+        let e = match suite::by_name(name) {
+            Some(e) => e,
+            None => {
+                eprintln!("error: unknown suite entry {name}");
+                std::process::exit(1);
+            }
+        };
+        let lap = (e.build)(scale);
+        let builder = Solver::builder().seed(7).threads(threads).tol(1e-7).max_iter(2000);
+        for sc in scenario::SCENARIOS {
+            let rep = match scenario::run(sc, &lap, builder.clone(), &sopts) {
+                Ok(rep) => rep,
+                Err(err) => {
+                    eprintln!("error: {name}/{sc}: {err}");
+                    std::process::exit(1);
+                }
+            };
+            // Every round must have converged — a mis-spliced cone
+            // factor shows up here, not as a silently slow stream.
+            assert!(rep.all_converged, "{name}/{sc}: a round failed to converge");
+            table.row(vec![
+                e.name.into(),
+                rep.name.into(),
+                rep.counts.weight_only.to_string(),
+                rep.counts.localized.to_string(),
+                rep.counts.rebuild.to_string(),
+                ms(rep.weight_only_secs),
+                ms(rep.localized_secs),
+                ms(rep.rebuild_secs),
+                ms(rep.full_rebuild_secs),
+                format!("{:.1}", rep.mean_iters),
+            ]);
+            rows.push(BenchRow {
+                name: format!("{} {} n={}", e.name, rep.name, lap.n()),
+                fields: rep.fields(),
+            });
+        }
+    }
+    print!("{}", table.render());
+    if let Err(e) = pipeline::write_bench_rows_json(Path::new("BENCH_dynamic.json"), "dynamic", &rows)
+    {
+        eprintln!("error writing BENCH_dynamic.json: {e}");
+        std::process::exit(1);
+    }
+    println!("\nwrote BENCH_dynamic.json");
+}

@@ -9,23 +9,24 @@
 //! round — no incremental symbolic state to maintain), and solves the
 //! round's system. The per-round cost is the paper's headline
 //! "construction ≪ solve" economics in a loop.
+//!
+//! This is the **reference loop**: deliberately the dumbest correct
+//! thing. The first-class dynamic subsystem lives in [`crate::dynamic`]
+//! — [`crate::dynamic::DynamicSession`] classifies each batch onto
+//! weight-only / cone-localized / rebuild repair paths instead of
+//! rebuilding every round, and shares this module's [`UpdateBatch`].
 
 use crate::error::ParacError;
 use crate::factor::{self, ParacOptions};
-use crate::graph::Laplacian;
+use crate::graph::{Fingerprint, Laplacian};
 use crate::precond::LdlPrecond;
 use crate::solve::pcg::{self, PcgOptions, PcgWorkspace};
 use crate::util::Timer;
 use std::collections::HashMap;
 
-/// One batch of graph updates.
-#[derive(Clone, Debug, Default)]
-pub struct UpdateBatch {
-    /// Edges to add (or strengthen): `(u, v, +w)`.
-    pub add: Vec<(u32, u32, f64)>,
-    /// Edges to remove entirely (by endpoint pair).
-    pub remove: Vec<(u32, u32)>,
-}
+/// Batch type shared with the delta-classified session — see
+/// [`crate::dynamic::UpdateBatch`] for the pinned semantics.
+pub use crate::dynamic::UpdateBatch;
 
 /// Per-round report.
 #[derive(Clone, Debug)]
@@ -34,6 +35,9 @@ pub struct RoundReport {
     pub round: usize,
     /// Live edges after the batch.
     pub edges: usize,
+    /// Fingerprint of the round's graph (deterministic: the edge list
+    /// is sorted before the Laplacian is built).
+    pub fingerprint: Fingerprint,
     /// ParAC factorization seconds.
     pub factor_secs: f64,
     /// PCG solve seconds.
@@ -87,8 +91,8 @@ impl IncrementalSession {
                 got: b.len(),
             });
         }
+        batch.validate(self.n)?;
         for &(u, v, w) in &batch.add {
-            debug_assert!(w > 0.0);
             let key = (u.min(v), u.max(v));
             if key.0 != key.1 {
                 *self.edges.entry(key).or_insert(0.0) += w;
@@ -97,9 +101,14 @@ impl IncrementalSession {
         for &(u, v) in &batch.remove {
             self.edges.remove(&(u.min(v), u.max(v)));
         }
-        let list: Vec<(u32, u32, f64)> =
+        let mut list: Vec<(u32, u32, f64)> =
             self.edges.iter().map(|(&(u, v), &w)| (u, v, w)).collect();
+        // HashMap iteration order is randomized per process; sort so the
+        // round graph (edge order, fingerprint, ordering heuristics) is
+        // identical for identical session histories.
+        list.sort_unstable_by_key(|&(u, v, _)| (u, v));
         let lap = Laplacian::from_edges(self.n, &list, &format!("round{}", self.round));
+        let fingerprint = lap.fingerprint();
 
         let t = Timer::start();
         // Fresh seed per round — resparsification wants independent
@@ -118,6 +127,7 @@ impl IncrementalSession {
         let report = RoundReport {
             round: self.round,
             edges: self.edges.len(),
+            fingerprint,
             factor_secs,
             solve_secs,
             iters: out.iters,

@@ -5,7 +5,9 @@
 //! [`pipeline::RunResult`] rows (including the machine-readable
 //! `BENCH_pipeline.json` via [`pipeline::write_bench_json`]);
 //! [`repro`] regenerates the paper's tables/figures; [`incremental`]
-//! runs the dynamic-graph resparsification loop; [`serve_driver`]
+//! runs the rebuild-every-round resparsification reference loop (the
+//! delta-classified version lives in [`crate::dynamic`]);
+//! [`serve_driver`]
 //! measures the serving subsystem ([`crate::serve`]) under open-loop
 //! multi-client load. Everything returns typed
 //! [`crate::error::ParacError`]s — only binaries exit.

@@ -1,0 +1,301 @@
+//! Cone-localized refactorization: repair a factor after a small
+//! structural edit without re-eliminating the whole graph.
+//!
+//! In an LDL-style elimination, the values of factor column `j` depend
+//! only on columns that are *descendants* of `j` in the elimination
+//! tree. Turned around: when an edit touches a set of vertices `T`, the
+//! only columns whose values can change are `T` plus their etree
+//! **ancestors** — the *dependency cone* `cone(T)`. Because the cone is
+//! ancestor-closed, every column outside it has all of its descendants
+//! outside the edit's influence too, so those columns are byte-for-byte
+//! reusable.
+//!
+//! [`localized_factor`] exploits this: it extracts the cone's induced
+//! subproblem from the **new** graph, collapses every edge leaving the
+//! cone onto a ground vertex (exactly how
+//! [`crate::factor::factorize_sdd`] grounds an SDD system), re-runs the
+//! randomized elimination on that small grounded problem pinned so the
+//! ground is eliminated last, truncates the ground away, and splices
+//! the re-eliminated columns back into the old factor. The result is a
+//! *bona fide* approximate factor of the new graph — the cone columns
+//! see the exact boundary coupling (Schur complements onto the ground
+//! are what elimination does anyway), and the rest is unchanged by the
+//! ancestor-closure argument.
+//!
+//! The splice is approximate in the same sense the base factor is
+//! (randomized sampling inside the cone uses fresh clique samples), so
+//! correctness is pinned behaviorally in `rust/tests/dynamic.rs`: the
+//! spliced factor's PCG solve must converge to the same tolerance as a
+//! full rebuild for every suite graph. Any structural doubt —
+//! oversized cone, non-natural local ordering, a failed
+//! [`crate::factor::LdlFactor::validate`] — returns `None` and the
+//! caller falls back to a full rebuild.
+
+use crate::etree;
+use crate::factor::{self, LdlFactor, ParacOptions};
+use crate::graph::Laplacian;
+use crate::ordering::Ordering;
+use crate::sparse::Csc;
+
+/// Union of elimination-tree root-paths from the `touched` columns
+/// (indices in the factor's permuted space): every factor column whose
+/// values can depend on a touched column. Returned sorted ascending.
+/// Returns `None` as soon as the cone exceeds `max_cone` — the signal
+/// that a localized repair would not pay for itself.
+pub fn dependency_cone(parent: &[i64], touched: &[u32], max_cone: usize) -> Option<Vec<u32>> {
+    let mut seen = vec![false; parent.len()];
+    let mut cone = Vec::new();
+    for &t in touched {
+        let mut j = t as usize;
+        loop {
+            if j >= seen.len() || seen[j] {
+                break;
+            }
+            seen[j] = true;
+            cone.push(j as u32);
+            if cone.len() > max_cone {
+                return None;
+            }
+            match parent[j] {
+                p if p >= 0 && p as usize > j => j = p as usize,
+                _ => break,
+            }
+        }
+    }
+    cone.sort_unstable();
+    Some(cone)
+}
+
+/// Re-eliminate the dependency cone of `touched` (original vertex ids)
+/// against `new_lap` and splice the result into `old`, producing a
+/// factor for the new graph. Returns the spliced factor and the cone
+/// size, or `None` when the repair is not worthwhile / not safe (cone
+/// larger than `max_cone`, cone covers the whole graph, local
+/// elimination failed, or the spliced factor fails validation) — the
+/// caller should fall back to a full rebuild.
+pub fn localized_factor(
+    old: &LdlFactor,
+    new_lap: &Laplacian,
+    touched: &[u32],
+    opts: &ParacOptions,
+    max_cone: usize,
+) -> Option<(LdlFactor, usize)> {
+    let n = old.n();
+    if n == 0 || new_lap.n() != n || touched.is_empty() || max_cone == 0 {
+        return None;
+    }
+    // The cone lives in the factor's elimination (permuted) space.
+    let touched_perm: Vec<u32> = match &old.perm {
+        Some(p) => touched
+            .iter()
+            .map(|&v| p.get(v as usize).copied())
+            .collect::<Option<Vec<u32>>>()?,
+        None => touched.to_vec(),
+    };
+    let parent = etree::etree_from_factor(&old.g);
+    let cone = dependency_cone(&parent, &touched_perm, max_cone)?;
+    let m = cone.len();
+    if m == 0 || m >= n {
+        return None;
+    }
+
+    // Original vertex id of each cone member; cone order (ascending
+    // permuted index) is the elimination order the splice must keep.
+    let orig: Vec<u32> = match &old.perm {
+        Some(p) => {
+            let mut iperm = vec![0u32; n];
+            for (o, &np) in p.iter().enumerate() {
+                iperm[np as usize] = o as u32;
+            }
+            cone.iter().map(|&c| iperm[c as usize]).collect()
+        }
+        None => cone.clone(),
+    };
+    let mut local_of = vec![u32::MAX; n]; // keyed by original vertex id
+    for (l, &o) in orig.iter().enumerate() {
+        local_of[o as usize] = l as u32;
+    }
+
+    // Grounded cone subproblem of the NEW graph: intra-cone edges keep
+    // their weights; all coupling that leaves the cone collapses onto a
+    // ground vertex (index m), eliminated last and truncated away.
+    let mut ledges: Vec<(u32, u32, f64)> = Vec::new();
+    let mut ground = vec![0.0f64; m];
+    for (l, &o) in orig.iter().enumerate() {
+        let row = o as usize;
+        let idx = new_lap.matrix.row_indices(row);
+        let val = new_lap.matrix.row_data(row);
+        for (&c, &v) in idx.iter().zip(val) {
+            let c = c as usize;
+            if c == row {
+                continue;
+            }
+            let w = -v; // off-diagonal of a Laplacian is -weight
+            if !w.is_finite() || w <= 0.0 {
+                continue;
+            }
+            let lc = local_of[c];
+            if lc == u32::MAX {
+                ground[l] += w;
+            } else if (lc as usize) > l {
+                ledges.push((l as u32, lc, w));
+            }
+        }
+    }
+    for (l, &g) in ground.iter().enumerate() {
+        if g > 0.0 {
+            ledges.push((l as u32, m as u32, g));
+        }
+    }
+    if ledges.is_empty() {
+        return None;
+    }
+    let ext = Laplacian::from_edges(m + 1, &ledges, "cone");
+    // Natural ordering + pin-last keeps local labels in place, so local
+    // column l IS cone position l — the property the splice relies on.
+    let lopts = ParacOptions {
+        ordering: Ordering::Natural,
+        ..opts.clone()
+    };
+    let f = factor::factorize_pinned(&ext, &lopts, Some(m as u32)).ok()?;
+    let local = f.truncate_last();
+    if local.n() != m {
+        return None;
+    }
+    if let Some(p) = &local.perm {
+        // Anything but the identity would mis-splice; bail rather than
+        // assume (defensive — Natural + pin-last is identity today).
+        if p.iter().enumerate().any(|(i, &q)| q as usize != i) {
+            return None;
+        }
+    }
+
+    // Splice: cone columns come from the local factor (rows mapped back
+    // through `cone` — monotone, so sortedness and strict lowerness are
+    // preserved), every other column is carried over verbatim.
+    let mut in_cone = vec![false; n];
+    for &c in &cone {
+        in_cone[c as usize] = true;
+    }
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut rowidx: Vec<u32> = Vec::new();
+    let mut data: Vec<f64> = Vec::new();
+    let mut diag = old.diag.clone();
+    let mut next_local = 0usize;
+    for j in 0..n {
+        if in_cone[j] {
+            let l = next_local;
+            next_local += 1;
+            for (&r, &v) in local.g.col_rows(l).iter().zip(local.g.col_data(l)) {
+                rowidx.push(cone[r as usize]);
+                data.push(v);
+            }
+            diag[j] = local.diag[l];
+        } else {
+            for (&r, &v) in old.g.col_rows(j).iter().zip(old.g.col_data(j)) {
+                rowidx.push(r);
+                data.push(v);
+            }
+        }
+        colptr.push(rowidx.len());
+    }
+    let g = Csc {
+        nrows: n,
+        ncols: n,
+        colptr,
+        rowidx,
+        data,
+    };
+    let spliced = LdlFactor {
+        g,
+        diag,
+        perm: old.perm.clone(),
+        stats: old.stats.clone(),
+    };
+    spliced.validate().ok()?;
+    Some((spliced, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Coeff};
+    use crate::precond::LdlPrecond;
+    use crate::solve::pcg::{self, PcgOptions, PcgWorkspace};
+
+    #[test]
+    fn dependency_cone_climbs_root_paths() {
+        // A path etree: 0 → 1 → 2 → 3 → root.
+        let parent = vec![1i64, 2, 3, -1];
+        assert_eq!(dependency_cone(&parent, &[0], 10), Some(vec![0, 1, 2, 3]));
+        assert_eq!(dependency_cone(&parent, &[2], 10), Some(vec![2, 3]));
+        // Shared ancestors are visited once.
+        assert_eq!(dependency_cone(&parent, &[0, 2], 10), Some(vec![0, 1, 2, 3]));
+        // Budget exceeded → None.
+        assert_eq!(dependency_cone(&parent, &[0], 3), None);
+    }
+
+    #[test]
+    fn localized_factor_splices_a_working_preconditioner() {
+        let lap = generators::grid2d(12, 12, Coeff::Uniform, 0);
+        let opts = ParacOptions::default();
+        let old = factor::factorize(&lap, &opts).unwrap();
+
+        // Structural edit: one fresh long-range edge.
+        let mut edges = lap.edges();
+        edges.push((3, 100, 1.25));
+        let new_lap = Laplacian::from_edges(lap.n(), &edges, "edited");
+
+        let (spliced, m) =
+            localized_factor(&old, &new_lap, &[3, 100], &opts, lap.n()).expect("cone repair");
+        assert!(m >= 2 && m < lap.n(), "cone size {m} out of range");
+        spliced.validate().unwrap();
+
+        // Non-cone columns are byte-identical to the old factor.
+        let parent = etree::etree_from_factor(&old.g);
+        let perm = old.perm.as_ref().unwrap();
+        let cone = dependency_cone(&parent, &[perm[3], perm[100]], lap.n()).unwrap();
+        let mut in_cone = vec![false; lap.n()];
+        for &c in &cone {
+            in_cone[c as usize] = true;
+        }
+        for j in 0..lap.n() {
+            if !in_cone[j] {
+                assert_eq!(spliced.g.col_rows(j), old.g.col_rows(j));
+                assert_eq!(spliced.g.col_data(j), old.g.col_data(j));
+                assert_eq!(spliced.diag[j], old.diag[j]);
+            }
+        }
+
+        // And the spliced factor preconditions the NEW system to
+        // convergence.
+        let pre = LdlPrecond::new(spliced);
+        let b = pcg::random_rhs(&new_lap, 7);
+        let mut ws = PcgWorkspace::new(new_lap.n());
+        let mut x = vec![0.0; new_lap.n()];
+        let popts = PcgOptions {
+            tol: 1e-8,
+            max_iter: 600,
+            ..Default::default()
+        };
+        let stats = pcg::solve_into(&new_lap.matrix, &b, &pre, &popts, &mut ws, &mut x);
+        assert!(
+            stats.converged,
+            "spliced preconditioner failed: {} iters, rel {}",
+            stats.iters, stats.rel_residual
+        );
+    }
+
+    #[test]
+    fn oversized_cone_is_refused() {
+        let lap = generators::grid2d(10, 10, Coeff::Uniform, 1);
+        let opts = ParacOptions::default();
+        let old = factor::factorize(&lap, &opts).unwrap();
+        let mut edges = lap.edges();
+        edges.push((0, 99, 1.0));
+        let new_lap = Laplacian::from_edges(lap.n(), &edges, "edited");
+        // A one-column budget cannot hold any real cone.
+        assert!(localized_factor(&old, &new_lap, &[0, 99], &opts, 1).is_none());
+    }
+}

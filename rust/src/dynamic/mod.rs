@@ -1,0 +1,183 @@
+//! Dynamic graphs: delta-classified updates over a live solver session.
+//!
+//! The paper's §1 motivation names workloads "where the input changes
+//! every round, such as incremental sparsification". This subsystem
+//! makes that first-class: a [`DynamicSession`] keeps a
+//! [`crate::solver::Solver`] session alive while the graph mutates, and
+//! classifies each [`UpdateBatch`] onto the cheapest of three
+//! escalating repair paths:
+//!
+//! 1. **Weight-only** — the batch reweights existing edges without
+//!    changing the sparsity pattern. The frozen symbolic analysis from
+//!    the PR 5 split still describes the graph, so the session reruns
+//!    only the numeric phase
+//!    ([`crate::solver::Solver::refactorize_shared`]) — bit-identical
+//!    to a fresh build at a fraction of the cost.
+//! 2. **Cone-localized** — the pattern changed, but the damage is
+//!    contained. The columns whose factor values can depend on the
+//!    touched vertices form a *dependency cone* in the elimination
+//!    tree (the touched columns plus their etree ancestors,
+//!    [`cone::dependency_cone`]); [`cone::localized_factor`]
+//!    re-eliminates just that cone against the new graph (grounding the
+//!    boundary exactly like [`crate::factor::factorize_sdd`] grounds an
+//!    SDD system) and splices the result into the previous factor via
+//!    [`crate::solver::Solver::splice_factor`].
+//! 3. **Full rebuild** — the cone exceeds the damage threshold
+//!    ([`DynamicOptions::damage_threshold`]) or a splice fails
+//!    validation. Rebuilds route through a [`crate::serve::FactorCache`]
+//!    so returning to a previously seen graph (or pattern) hits the
+//!    cache instead of refactorizing from scratch.
+//!
+//! The [`scenario`] zoo drives the session with the workloads the paper
+//! gestures at: edge-churn streams, spectral partitioning via
+//! inverse-power iteration on the solver itself, and an
+//! effective-resistance sparsification loop. The `parac dynamic` CLI
+//! subcommand and `benches/bench_dynamic.rs` (`BENCH_dynamic.json`)
+//! report per-path update latency against a from-scratch rebuild
+//! baseline plus classification counts.
+//!
+//! [`crate::coordinator::incremental`] remains as the minimal
+//! rebuild-every-round reference loop; its [`UpdateBatch`] now lives
+//! here and is shared by both.
+
+pub mod cone;
+pub mod scenario;
+pub mod session;
+
+pub use session::{
+    ClassCounts, DynamicOptions, DynamicSession, StepReport, UpdateClass,
+};
+
+use crate::error::ParacError;
+
+/// One batch of edge updates applied between solves.
+///
+/// Semantics (pinned in `rust/tests/dynamic.rs`):
+/// * `add` edges **accumulate**: adding an existing edge increases its
+///   weight; repeated adds of the same endpoints sum.
+/// * `remove` deletes the edge outright regardless of weight; removing
+///   a nonexistent edge is a no-op.
+/// * Adds apply before removes, so add-then-remove of the same edge in
+///   one batch nets to the edge being absent.
+/// * Endpoints are unordered (`(u, v)` ≡ `(v, u)`); self-loops are
+///   ignored.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateBatch {
+    /// Edges to insert or reweight: `(u, v, added_weight)`.
+    pub add: Vec<(u32, u32, f64)>,
+    /// Edges to delete: `(u, v)`.
+    pub remove: Vec<(u32, u32)>,
+}
+
+impl UpdateBatch {
+    /// An empty batch (identical to `Default::default()`).
+    pub fn new() -> UpdateBatch {
+        UpdateBatch::default()
+    }
+
+    /// True when the batch carries no adds and no removes.
+    pub fn is_empty(&self) -> bool {
+        self.add.is_empty() && self.remove.is_empty()
+    }
+
+    /// Reject malformed updates with typed errors **before** anything
+    /// is applied: non-finite or nonpositive add-weights and
+    /// out-of-range endpoints are [`ParacError::BadInput`], matching
+    /// the finiteness gates on the serving path. Sessions call this at
+    /// the top of `step`, so a rejected batch leaves the graph
+    /// untouched.
+    pub fn validate(&self, n: usize) -> Result<(), ParacError> {
+        for &(u, v, w) in &self.add {
+            if !w.is_finite() {
+                return Err(ParacError::BadInput(format!(
+                    "update weight for edge ({u}, {v}) is not finite ({w})"
+                )));
+            }
+            if w <= 0.0 {
+                return Err(ParacError::BadInput(format!(
+                    "update weight for edge ({u}, {v}) must be positive, got {w}"
+                )));
+            }
+            if u as usize >= n || v as usize >= n {
+                return Err(ParacError::BadInput(format!(
+                    "update edge ({u}, {v}) out of range for {n} vertices"
+                )));
+            }
+        }
+        for &(u, v) in &self.remove {
+            if u as usize >= n || v as usize >= n {
+                return Err(ParacError::BadInput(format!(
+                    "removal edge ({u}, {v}) out of range for {n} vertices"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sorted, deduplicated list of every vertex the batch touches
+    /// (self-loop endpoints excluded — they never enter the graph).
+    /// This is the seed set for the dependency cone.
+    pub fn touched(&self) -> Vec<u32> {
+        let mut t = Vec::with_capacity(2 * (self.add.len() + self.remove.len()));
+        for &(u, v, _) in &self.add {
+            if u != v {
+                t.push(u);
+                t.push(v);
+            }
+        }
+        for &(u, v) in &self.remove {
+            if u != v {
+                t.push(u);
+                t.push(v);
+            }
+        }
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_bad_weights_and_bounds() {
+        let ok = UpdateBatch {
+            add: vec![(0, 1, 0.5)],
+            remove: vec![(2, 3)],
+        };
+        ok.validate(4).unwrap();
+        for w in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+            let bad = UpdateBatch {
+                add: vec![(0, 1, w)],
+                remove: vec![],
+            };
+            assert!(
+                matches!(bad.validate(4), Err(ParacError::BadInput(_))),
+                "weight {w} must be rejected"
+            );
+        }
+        let oob = UpdateBatch {
+            add: vec![(0, 4, 1.0)],
+            remove: vec![],
+        };
+        assert!(matches!(oob.validate(4), Err(ParacError::BadInput(_))));
+        let oob = UpdateBatch {
+            add: vec![],
+            remove: vec![(4, 0)],
+        };
+        assert!(matches!(oob.validate(4), Err(ParacError::BadInput(_))));
+    }
+
+    #[test]
+    fn touched_is_sorted_unique_and_skips_self_loops() {
+        let b = UpdateBatch {
+            add: vec![(5, 2, 1.0), (2, 5, 1.0), (7, 7, 1.0)],
+            remove: vec![(0, 2)],
+        };
+        assert_eq!(b.touched(), vec![0, 2, 5]);
+        assert!(UpdateBatch::new().is_empty());
+        assert!(UpdateBatch::new().touched().is_empty());
+    }
+}

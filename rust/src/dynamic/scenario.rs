@@ -1,0 +1,520 @@
+//! The scenario zoo: dynamic workloads that drive a [`DynamicSession`]
+//! the way the paper's §1 imagines — "the input changes every round".
+//!
+//! Three scenarios, each exercising a different mix of repair paths:
+//!
+//! * [`edge_churn`] — rotating reweight / insert / delete rounds, the
+//!   generic stream: reweights land on the weight-only path, small
+//!   inserts and deletes on the localized path.
+//! * [`spectral_partition`] — inverse-power iteration **on the session's
+//!   own solver** approximates the Fiedler vector, the induced median
+//!   cut is weakened by deleting its lightest edges each round (never
+//!   disconnecting the graph). This is the classic
+//!   partition-refine-repartition loop, and every round's deletions are
+//!   structural.
+//! * [`resistance_sparsify`] — Spielman–Srivastava-style: sample edges,
+//!   estimate leverage `w·R_eff` with one projected solve per edge
+//!   (`R_eff(u,v) = (e_u - e_v)ᵀ L⁺ (e_u - e_v)`), and drop the
+//!   lowest-leverage edges, again keeping the graph connected. The
+//!   incremental-sparsification use-case verbatim.
+//!
+//! Every scenario returns a [`ScenarioReport`] with classification
+//! counts, mean per-path update latency, and (optionally) a from-scratch
+//! rebuild baseline timed on the same round graphs — the numbers
+//! `BENCH_dynamic.json` and `parac dynamic` publish.
+
+use crate::dynamic::{ClassCounts, DynamicOptions, DynamicSession, StepReport, UpdateBatch, UpdateClass};
+use crate::error::ParacError;
+use crate::graph::Laplacian;
+use crate::rng::Rng;
+use crate::solve::pcg;
+use crate::solver::SolverBuilder;
+use crate::util::Timer;
+
+/// Names accepted by [`run`], in display order.
+pub const SCENARIOS: &[&str] = &["churn", "spectral", "resist"];
+
+/// Shared scenario knobs.
+#[derive(Clone, Debug)]
+pub struct ScenarioOptions {
+    /// Update rounds to drive (default 8).
+    pub rounds: usize,
+    /// Stream seed (default `0xD11A`).
+    pub seed: u64,
+    /// Also time a from-scratch `build_shared` on every round graph as
+    /// the latency yardstick (default `true`; benches keep it on, tests
+    /// turn it off).
+    pub measure_full_rebuild: bool,
+    /// Session policy knobs.
+    pub dynamic: DynamicOptions,
+}
+
+impl Default for ScenarioOptions {
+    fn default() -> ScenarioOptions {
+        ScenarioOptions {
+            rounds: 8,
+            seed: 0xD11A,
+            measure_full_rebuild: true,
+            dynamic: DynamicOptions::default(),
+        }
+    }
+}
+
+/// What one scenario run did and what each path cost.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Scenario name (one of [`SCENARIOS`]).
+    pub name: &'static str,
+    /// Graph the stream ran on.
+    pub graph: String,
+    /// Rounds driven.
+    pub rounds: usize,
+    /// How the rounds classified.
+    pub counts: ClassCounts,
+    /// Stalled localized repairs escalated to rebuilds.
+    pub escalations: u64,
+    /// Mean update seconds on the weight-only path (0 when unused).
+    pub weight_only_secs: f64,
+    /// Mean update seconds on the localized path (0 when unused).
+    pub localized_secs: f64,
+    /// Mean update seconds on the rebuild path (0 when unused).
+    pub rebuild_secs: f64,
+    /// Mean from-scratch build seconds on the same round graphs (0 when
+    /// [`ScenarioOptions::measure_full_rebuild`] was off).
+    pub full_rebuild_secs: f64,
+    /// Mean per-round solve seconds.
+    pub solve_secs: f64,
+    /// Mean per-round PCG iterations.
+    pub mean_iters: f64,
+    /// Whether every round's solve converged.
+    pub all_converged: bool,
+    /// Live edges after the last round.
+    pub final_edges: usize,
+    /// Scenario-specific scalar: edges churned (churn), final cut
+    /// weight (spectral), edges removed (resist).
+    pub metric: f64,
+}
+
+impl ScenarioReport {
+    /// Flatten into [`crate::coordinator::pipeline::BenchRow`] fields.
+    pub fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("rounds", self.rounds as f64),
+            ("weight_only", self.counts.weight_only as f64),
+            ("localized", self.counts.localized as f64),
+            ("rebuild", self.counts.rebuild as f64),
+            ("escalations", self.escalations as f64),
+            ("weight_only_secs", self.weight_only_secs),
+            ("localized_secs", self.localized_secs),
+            ("rebuild_secs", self.rebuild_secs),
+            ("full_rebuild_secs", self.full_rebuild_secs),
+            ("solve_secs", self.solve_secs),
+            ("mean_iters", self.mean_iters),
+            ("converged", if self.all_converged { 1.0 } else { 0.0 }),
+            ("final_edges", self.final_edges as f64),
+            ("metric", self.metric),
+        ]
+    }
+}
+
+/// Run a named scenario (see [`SCENARIOS`]).
+pub fn run(
+    name: &str,
+    lap: &Laplacian,
+    builder: SolverBuilder,
+    opts: &ScenarioOptions,
+) -> Result<ScenarioReport, ParacError> {
+    match name {
+        "churn" => edge_churn(lap, builder, opts),
+        "spectral" => spectral_partition(lap, builder, opts),
+        "resist" => resistance_sparsify(lap, builder, opts),
+        other => Err(ParacError::InvalidOption {
+            what: "scenario (churn|spectral|resist)",
+            got: other.into(),
+        }),
+    }
+}
+
+/// Per-path accumulator shared by the scenario drivers.
+struct Acc {
+    wo: (f64, u64),
+    loc: (f64, u64),
+    rb: (f64, u64),
+    solve: f64,
+    iters: f64,
+    rounds: usize,
+    converged: bool,
+    baseline: f64,
+    baseline_n: u64,
+}
+
+impl Acc {
+    fn new() -> Acc {
+        Acc {
+            wo: (0.0, 0),
+            loc: (0.0, 0),
+            rb: (0.0, 0),
+            solve: 0.0,
+            iters: 0.0,
+            rounds: 0,
+            converged: true,
+            baseline: 0.0,
+            baseline_n: 0,
+        }
+    }
+
+    fn absorb(&mut self, rep: &StepReport) {
+        let slot = match rep.class {
+            UpdateClass::WeightOnly => &mut self.wo,
+            UpdateClass::Localized => &mut self.loc,
+            UpdateClass::Rebuild => &mut self.rb,
+        };
+        slot.0 += rep.update_secs;
+        slot.1 += 1;
+        self.solve += rep.solve_secs;
+        self.iters += rep.iters as f64;
+        self.rounds += 1;
+        self.converged &= rep.converged;
+    }
+
+    /// Time a from-scratch build on the session's current graph — the
+    /// "what a rebuild-every-round loop would pay" yardstick.
+    fn baseline_round(
+        &mut self,
+        session: &DynamicSession,
+        builder: &SolverBuilder,
+    ) -> Result<(), ParacError> {
+        let t = Timer::start();
+        let s = builder.build_shared(session.laplacian().clone())?;
+        self.baseline += t.secs();
+        self.baseline_n += 1;
+        drop(s);
+        Ok(())
+    }
+
+    fn report(
+        self,
+        name: &'static str,
+        session: &DynamicSession,
+        metric: f64,
+    ) -> ScenarioReport {
+        let mean = |(secs, n): (f64, u64)| if n > 0 { secs / n as f64 } else { 0.0 };
+        let rounds = self.rounds.max(1) as f64;
+        ScenarioReport {
+            name,
+            graph: session.laplacian().name.clone(),
+            rounds: self.rounds,
+            counts: session.counts(),
+            escalations: session.escalations(),
+            weight_only_secs: mean(self.wo),
+            localized_secs: mean(self.loc),
+            rebuild_secs: mean(self.rb),
+            full_rebuild_secs: mean((self.baseline, self.baseline_n)),
+            solve_secs: self.solve / rounds,
+            mean_iters: self.iters / rounds,
+            all_converged: self.converged,
+            final_edges: session.num_edges(),
+            metric,
+        }
+    }
+}
+
+/// Candidate removals keep the graph connected? Checked on a probe
+/// Laplacian of the surviving edges — the projected solve needs one
+/// component.
+fn stays_connected(session: &DynamicSession, removals: &[(u32, u32)]) -> bool {
+    let edges: Vec<(u32, u32, f64)> = session
+        .laplacian()
+        .edges()
+        .into_iter()
+        .filter(|&(u, v, _)| !removals.contains(&(u.min(v), u.max(v))))
+        .collect();
+    if edges.is_empty() {
+        return false;
+    }
+    let probe = Laplacian::from_edges(session.n(), &edges, "probe");
+    probe.components().1 == 1
+}
+
+/// Rotating reweight / insert / delete stream: round `3k` reweights
+/// existing edges (weight-only path), round `3k+1` inserts fresh random
+/// edges, round `3k+2` deletes some of the previously inserted extras
+/// (both structural). The base graph is never deleted from, so the
+/// stream stays connected by construction. `metric` = edges churned.
+pub fn edge_churn(
+    lap: &Laplacian,
+    builder: SolverBuilder,
+    opts: &ScenarioOptions,
+) -> Result<ScenarioReport, ParacError> {
+    let n = lap.n();
+    let mut session = DynamicSession::new(lap, builder.clone(), opts.dynamic.clone())?;
+    let mut rng = Rng::new(opts.seed ^ 0xC0FF_EE00);
+    let b = pcg::random_rhs(lap, opts.seed);
+    let churn = (n / 50).clamp(2, 64);
+    let mut acc = Acc::new();
+    let mut extras: Vec<(u32, u32)> = Vec::new();
+    let mut churned = 0u64;
+    for round in 0..opts.rounds {
+        let mut batch = UpdateBatch::default();
+        match round % 3 {
+            0 => {
+                // Reweight existing edges: pattern-preserving.
+                let edges = session.laplacian().edges();
+                for _ in 0..churn {
+                    let (u, v, _) = edges[rng.below(edges.len())];
+                    batch.add.push((u, v, rng.range_f64(0.1, 1.0)));
+                }
+            }
+            1 => {
+                // Insert fresh random edges; only record as removable
+                // extras the ones that did not already exist, so the
+                // delete round never touches the base graph.
+                for _ in 0..churn {
+                    let u = rng.below(n) as u32;
+                    let v = rng.below(n) as u32;
+                    let key = (u.min(v), u.max(v));
+                    if u == v || extras.contains(&key) {
+                        continue;
+                    }
+                    let existed =
+                        session.laplacian().matrix.get(u as usize, v as usize) != 0.0;
+                    batch.add.push((u, v, rng.range_f64(0.5, 2.0)));
+                    if !existed {
+                        extras.push(key);
+                    }
+                }
+            }
+            _ => {
+                // Delete previously inserted extras.
+                for _ in 0..churn.min(extras.len()) {
+                    let i = rng.below(extras.len());
+                    batch.remove.push(extras.swap_remove(i));
+                }
+                if batch.remove.is_empty() {
+                    // Nothing insert-round gave us yet: reweight instead.
+                    let edges = session.laplacian().edges();
+                    let (u, v, _) = edges[rng.below(edges.len())];
+                    batch.add.push((u, v, 0.5));
+                }
+            }
+        }
+        churned += (batch.add.len() + batch.remove.len()) as u64;
+        let (rep, _x) = session.step(&batch, &b)?;
+        acc.absorb(&rep);
+        if opts.measure_full_rebuild {
+            acc.baseline_round(&session, &builder)?;
+        }
+    }
+    Ok(acc.report("churn", &session, churned as f64))
+}
+
+/// One projected-and-normalized vector (mean removed, unit 2-norm).
+fn project_and_normalize(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+    let nrm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if nrm > 0.0 {
+        for v in x.iter_mut() {
+            *v /= nrm;
+        }
+    }
+}
+
+/// Approximate Fiedler vector by inverse-power iteration on the
+/// session's solver: repeatedly apply `L⁺` (one PCG solve per step) to
+/// a mean-zero vector — low Laplacian modes are amplified most.
+fn inverse_power(
+    session: &DynamicSession,
+    steps: usize,
+    rng: &mut Rng,
+) -> Result<Vec<f64>, ParacError> {
+    let n = session.n();
+    let mut x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+    project_and_normalize(&mut x);
+    let mut y = vec![0.0; n];
+    for _ in 0..steps {
+        session.solve(&x, &mut y)?;
+        std::mem::swap(&mut x, &mut y);
+        project_and_normalize(&mut x);
+    }
+    Ok(x)
+}
+
+/// Spectral partition-and-refine loop: per round, estimate the Fiedler
+/// vector (inverse-power on the session), split at its median, and
+/// delete up to 3 of the cut's lightest edges — skipping any deletion
+/// that would disconnect the graph; rounds with nothing removable
+/// strengthen an uncut edge instead (weight-only). `metric` = final cut
+/// weight.
+pub fn spectral_partition(
+    lap: &Laplacian,
+    builder: SolverBuilder,
+    opts: &ScenarioOptions,
+) -> Result<ScenarioReport, ParacError> {
+    let n = lap.n();
+    let mut session = DynamicSession::new(lap, builder.clone(), opts.dynamic.clone())?;
+    let mut rng = Rng::new(opts.seed ^ 0x5EC7_0000);
+    let b = pcg::random_rhs(lap, opts.seed);
+    let mut acc = Acc::new();
+    let mut cut_weight = 0.0;
+    for _round in 0..opts.rounds {
+        let fiedler = inverse_power(&session, 4, &mut rng)?;
+        let mut sorted = fiedler.clone();
+        sorted.sort_by(f64::total_cmp);
+        let median = sorted[n / 2];
+        let side: Vec<bool> = fiedler.iter().map(|&v| v > median).collect();
+
+        let mut cut: Vec<(u32, u32, f64)> = session
+            .laplacian()
+            .edges()
+            .into_iter()
+            .filter(|&(u, v, _)| side[u as usize] != side[v as usize])
+            .collect();
+        cut_weight = cut.iter().map(|e| e.2).sum();
+        cut.sort_by(|a, c| a.2.total_cmp(&c.2));
+
+        let mut batch = UpdateBatch::default();
+        let mut removals: Vec<(u32, u32)> = Vec::new();
+        for &(u, v, _) in cut.iter().take(6) {
+            if batch.remove.len() == 3 {
+                break;
+            }
+            removals.push((u.min(v), u.max(v)));
+            if stays_connected(&session, &removals) {
+                batch.remove.push((u, v));
+            } else {
+                removals.pop();
+            }
+        }
+        if batch.remove.is_empty() {
+            // Cut is all bridges (or empty): strengthen the heaviest
+            // uncut edge instead so the round still does work.
+            let uncut = session
+                .laplacian()
+                .edges()
+                .into_iter()
+                .filter(|&(u, v, _)| side[u as usize] == side[v as usize])
+                .max_by(|a, c| a.2.total_cmp(&c.2));
+            if let Some((u, v, w)) = uncut {
+                batch.add.push((u, v, 0.5 * w.max(1e-12)));
+            }
+        }
+        let (rep, _x) = session.step(&batch, &b)?;
+        acc.absorb(&rep);
+        if opts.measure_full_rebuild {
+            acc.baseline_round(&session, &builder)?;
+        }
+    }
+    Ok(acc.report("spectral", &session, cut_weight))
+}
+
+/// Effective-resistance sparsification: per round, sample up to 8
+/// edges, estimate each one's leverage `w·R_eff` with one projected
+/// solve (`R_eff(u,v) = x[u] - x[v]` for `L x = e_u - e_v`), and drop
+/// the lowest-leverage half — skipping near-bridges (leverage ≈ 1) and
+/// anything that would disconnect the graph; incompressible rounds
+/// reweight instead. `metric` = total edges removed.
+pub fn resistance_sparsify(
+    lap: &Laplacian,
+    builder: SolverBuilder,
+    opts: &ScenarioOptions,
+) -> Result<ScenarioReport, ParacError> {
+    let n = lap.n();
+    let mut session = DynamicSession::new(lap, builder.clone(), opts.dynamic.clone())?;
+    let mut rng = Rng::new(opts.seed ^ 0x2E55_0000);
+    let b = pcg::random_rhs(lap, opts.seed);
+    let mut acc = Acc::new();
+    let mut removed_total = 0u64;
+    let mut rhs = vec![0.0; n];
+    let mut x = vec![0.0; n];
+    for _round in 0..opts.rounds {
+        let edges = session.laplacian().edges();
+        let sample = edges.len().min(8);
+        // Sample `sample` distinct edge indices (partial Fisher–Yates).
+        let mut idx: Vec<usize> = (0..edges.len()).collect();
+        let mut scored: Vec<((u32, u32), f64)> = Vec::with_capacity(sample);
+        for k in 0..sample {
+            let j = k + rng.below(idx.len() - k);
+            idx.swap(k, j);
+            let (u, v, w) = edges[idx[k]];
+            rhs.fill(0.0);
+            rhs[u as usize] = 1.0;
+            rhs[v as usize] = -1.0;
+            session.solve(&rhs, &mut x)?;
+            let r_eff = (x[u as usize] - x[v as usize]).max(0.0);
+            scored.push(((u, v), w * r_eff));
+        }
+        scored.sort_by(|a, c| a.1.total_cmp(&c.1));
+
+        let mut batch = UpdateBatch::default();
+        let mut removals: Vec<(u32, u32)> = Vec::new();
+        for &((u, v), leverage) in scored.iter().take(sample / 2) {
+            if leverage >= 0.99 {
+                // Bridge-like: R_eff ≈ 1/w ⇒ leverage ≈ 1; removal
+                // would disconnect (or nearly so). Keep it.
+                continue;
+            }
+            removals.push((u.min(v), u.max(v)));
+            if stays_connected(&session, &removals) {
+                batch.remove.push((u, v));
+            } else {
+                removals.pop();
+            }
+        }
+        if batch.remove.is_empty() {
+            // Fully incompressible round: compensating reweight.
+            let ((u, v), _) = scored[scored.len() - 1];
+            batch.add.push((u, v, 0.25));
+        }
+        removed_total += batch.remove.len() as u64;
+        let (rep, _sol) = session.step(&batch, &b)?;
+        acc.absorb(&rep);
+        if opts.measure_full_rebuild {
+            acc.baseline_round(&session, &builder)?;
+        }
+    }
+    Ok(acc.report("resist", &session, removed_total as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Coeff};
+    use crate::solver::Solver;
+
+    #[test]
+    fn every_scenario_runs_and_converges_on_a_grid() {
+        let lap = generators::grid2d(12, 12, Coeff::Uniform, 1);
+        let opts = ScenarioOptions {
+            rounds: 3,
+            seed: 11,
+            measure_full_rebuild: false,
+            dynamic: DynamicOptions::default(),
+        };
+        for name in SCENARIOS {
+            let rep = run(
+                name,
+                &lap,
+                Solver::builder().seed(2).tol(1e-7).max_iter(1200),
+                &opts,
+            )
+            .unwrap();
+            assert_eq!(rep.rounds, 3, "{name}");
+            assert_eq!(rep.counts.total(), 3, "{name}");
+            assert!(rep.all_converged, "{name} had a non-converged round");
+            assert!(rep.mean_iters > 0.0, "{name}");
+            assert_eq!(rep.fields().len(), 14);
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_is_a_typed_error() {
+        let lap = generators::grid2d(6, 6, Coeff::Uniform, 0);
+        assert!(matches!(
+            run("nope", &lap, Solver::builder(), &ScenarioOptions::default()),
+            Err(ParacError::InvalidOption { .. })
+        ));
+    }
+}

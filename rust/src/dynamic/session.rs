@@ -1,0 +1,405 @@
+//! [`DynamicSession`]: a live solver session over a mutating graph.
+//!
+//! Each [`DynamicSession::step`] applies one [`UpdateBatch`] and picks
+//! the cheapest repair path the delta admits (see the module docs in
+//! [`crate::dynamic`]): pattern-preserving reweights rerun only the
+//! numeric phase, contained structural edits take the cone-localized
+//! repair from [`super::cone`], and everything else rebuilds through a
+//! [`FactorCache`] so returning to a known graph is a cache hit. The
+//! chosen path, cone size, update/solve timings, and the post-update
+//! graph fingerprint come back in a [`StepReport`].
+
+use crate::dynamic::{cone, UpdateBatch};
+use crate::error::ParacError;
+use crate::factor::LdlFactor;
+use crate::graph::{Fingerprint, Laplacian};
+use crate::serve::{CacheStats, FactorCache};
+use crate::solve::pcg::SolveStats;
+use crate::solver::{Solver, SolverBuilder};
+use crate::util::Timer;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Which repair path a step took.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateClass {
+    /// The sparsity pattern survived (or nothing changed): numeric-only
+    /// refactorization, bit-identical to a fresh build.
+    WeightOnly,
+    /// Structural delta below the damage threshold: the elimination
+    /// cone was re-eliminated and spliced into the factor.
+    Localized,
+    /// Full rebuild through the session's [`FactorCache`].
+    Rebuild,
+}
+
+impl UpdateClass {
+    /// Stable lower-case name (report/JSON field labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdateClass::WeightOnly => "weight-only",
+            UpdateClass::Localized => "localized",
+            UpdateClass::Rebuild => "rebuild",
+        }
+    }
+}
+
+/// How many steps each repair path has served.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassCounts {
+    /// Steps classified [`UpdateClass::WeightOnly`].
+    pub weight_only: u64,
+    /// Steps classified [`UpdateClass::Localized`].
+    pub localized: u64,
+    /// Steps classified [`UpdateClass::Rebuild`] (escalations included).
+    pub rebuild: u64,
+}
+
+impl ClassCounts {
+    /// Total steps counted.
+    pub fn total(&self) -> u64 {
+        self.weight_only + self.localized + self.rebuild
+    }
+}
+
+/// Knobs for the classification policy.
+#[derive(Clone, Debug)]
+pub struct DynamicOptions {
+    /// Maximum dependency-cone size for the localized path, as a
+    /// fraction of `n` (default 0.25). `0.0` disables the localized
+    /// path entirely — every structural update rebuilds.
+    pub damage_threshold: f64,
+    /// Capacity of the rebuild-path [`FactorCache`] (default 4).
+    pub cache_capacity: usize,
+    /// When a localized repair's solve fails to converge, escalate to a
+    /// full rebuild and re-solve instead of returning the stalled
+    /// result (default `true`). The step is then counted as a rebuild
+    /// and flagged [`StepReport::escalated`].
+    pub escalate_on_stall: bool,
+}
+
+impl Default for DynamicOptions {
+    fn default() -> DynamicOptions {
+        DynamicOptions {
+            damage_threshold: 0.25,
+            cache_capacity: 4,
+            escalate_on_stall: true,
+        }
+    }
+}
+
+/// What one [`DynamicSession::step`] did and what it cost.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// 0-based step index.
+    pub round: usize,
+    /// Repair path the update took.
+    pub class: UpdateClass,
+    /// True when a stalled localized repair was escalated to a rebuild
+    /// (`class` is then [`UpdateClass::Rebuild`]).
+    pub escalated: bool,
+    /// Dependency-cone size when the localized path ran.
+    pub cone: Option<usize>,
+    /// Seconds spent repairing the factor (classification included;
+    /// escalation rebuild time included).
+    pub update_secs: f64,
+    /// Seconds spent in the PCG solve that produced `x`.
+    pub solve_secs: f64,
+    /// PCG iterations of that solve.
+    pub iters: usize,
+    /// Relative residual the solve reached.
+    pub rel_residual: f64,
+    /// Whether the solve converged to the session tolerance.
+    pub converged: bool,
+    /// Live edges after the batch.
+    pub edges: usize,
+    /// Fingerprint of the post-update graph (deterministic: the
+    /// session's edge store iterates in sorted order).
+    pub fingerprint: Fingerprint,
+}
+
+/// A solver session that follows a mutating graph; see
+/// [`crate::dynamic`] for the path taxonomy.
+pub struct DynamicSession {
+    n: usize,
+    /// Canonical edge store: key `(min(u,v), max(u,v))`, sorted
+    /// iteration — round graphs are deterministic by construction.
+    edges: BTreeMap<(u32, u32), f64>,
+    lap: Arc<Laplacian>,
+    fp: Fingerprint,
+    solver: Arc<Solver<'static>>,
+    cache: FactorCache,
+    opts: DynamicOptions,
+    round: usize,
+    counts: ClassCounts,
+    escalations: u64,
+    /// True while the live factor matches the frozen symbolic analysis
+    /// (fresh build / numeric refactorize). A splice invalidates it, so
+    /// subsequent pattern-preserving batches must also go through the
+    /// localized path until the next rebuild re-freezes the analysis.
+    symbolic_fresh: bool,
+}
+
+impl DynamicSession {
+    /// Open a session on `initial`, building the first factor with
+    /// `builder` (which also parameterizes every later repair and the
+    /// rebuild cache).
+    pub fn new(
+        initial: &Laplacian,
+        builder: SolverBuilder,
+        opts: DynamicOptions,
+    ) -> Result<DynamicSession, ParacError> {
+        let n = initial.n();
+        let mut edges = BTreeMap::new();
+        for (u, v, w) in initial.edges() {
+            let key = (u.min(v), u.max(v));
+            if key.0 != key.1 {
+                *edges.entry(key).or_insert(0.0) += w;
+            }
+        }
+        let lap = Arc::new(Self::assemble(n, &edges, 0));
+        let fp = lap.fingerprint();
+        let solver = Arc::new(builder.build_shared(lap.clone())?);
+        let cache = FactorCache::new(builder, opts.cache_capacity.max(1));
+        Ok(DynamicSession {
+            n,
+            edges,
+            lap,
+            fp,
+            solver,
+            cache,
+            opts,
+            round: 0,
+            counts: ClassCounts::default(),
+            escalations: 0,
+            symbolic_fresh: true,
+        })
+    }
+
+    fn assemble(n: usize, edges: &BTreeMap<(u32, u32), f64>, round: usize) -> Laplacian {
+        let list: Vec<(u32, u32, f64)> =
+            edges.iter().map(|(&(u, v), &w)| (u, v, w)).collect();
+        Laplacian::from_edges(n, &list, &format!("dyn{round}"))
+    }
+
+    /// Apply `batch`, repair the factor along the cheapest admissible
+    /// path, and solve `L x = b` on the updated graph. A batch that
+    /// fails [`UpdateBatch::validate`] is rejected with a typed error
+    /// before the graph is touched.
+    pub fn step(
+        &mut self,
+        batch: &UpdateBatch,
+        b: &[f64],
+    ) -> Result<(StepReport, Vec<f64>), ParacError> {
+        if b.len() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "rhs",
+                expected: self.n,
+                got: b.len(),
+            });
+        }
+        batch.validate(self.n)?;
+
+        // Adds before removes: add-then-remove of one edge in a single
+        // batch nets to a removal.
+        for &(u, v, w) in &batch.add {
+            let key = (u.min(v), u.max(v));
+            if key.0 != key.1 {
+                *self.edges.entry(key).or_insert(0.0) += w;
+            }
+        }
+        for &(u, v) in &batch.remove {
+            self.edges.remove(&(u.min(v), u.max(v)));
+        }
+        let new_lap = Arc::new(Self::assemble(self.n, &self.edges, self.round + 1));
+        let new_fp = new_lap.fingerprint();
+
+        let timer = Timer::start();
+        let mut class;
+        let mut cone_size = None;
+        if new_fp.full == self.fp.full {
+            // The batch netted to nothing — the factor already matches.
+            class = UpdateClass::WeightOnly;
+        } else if new_fp.pattern == self.fp.pattern && self.symbolic_fresh {
+            match self.try_weight_only(&new_lap) {
+                Ok(()) => class = UpdateClass::WeightOnly,
+                // A refused refactorize (shared session, stale symbolic,
+                // numeric breakdown) degrades to a rebuild, not an error.
+                Err(ParacError::BadInput(_)) | Err(ParacError::Internal(_)) => {
+                    self.rebuild(&new_lap)?;
+                    class = UpdateClass::Rebuild;
+                }
+                Err(e) => return Err(e),
+            }
+        } else {
+            match self.try_localized(&new_lap, batch)? {
+                Some(m) => {
+                    class = UpdateClass::Localized;
+                    cone_size = Some(m);
+                }
+                None => {
+                    self.rebuild(&new_lap)?;
+                    class = UpdateClass::Rebuild;
+                }
+            }
+        }
+        let mut update_secs = timer.secs();
+
+        let mut x = vec![0.0; self.n];
+        let solve_timer = Timer::start();
+        let mut stats = self.solver.solve_shared(b, &mut x)?;
+        let mut solve_secs = solve_timer.secs();
+        let mut escalated = false;
+        if !stats.converged && class == UpdateClass::Localized && self.opts.escalate_on_stall {
+            // The spliced factor was not a good enough preconditioner:
+            // escalate to a full rebuild and serve from that instead.
+            let esc_timer = Timer::start();
+            self.rebuild(&new_lap)?;
+            update_secs += esc_timer.secs();
+            let solve_timer = Timer::start();
+            stats = self.solver.solve_shared(b, &mut x)?;
+            solve_secs = solve_timer.secs();
+            class = UpdateClass::Rebuild;
+            cone_size = None;
+            escalated = true;
+            self.escalations += 1;
+        }
+        match class {
+            UpdateClass::WeightOnly => self.counts.weight_only += 1,
+            UpdateClass::Localized => self.counts.localized += 1,
+            UpdateClass::Rebuild => self.counts.rebuild += 1,
+        }
+
+        self.lap = new_lap;
+        self.fp = new_fp;
+        let report = StepReport {
+            round: self.round,
+            class,
+            escalated,
+            cone: cone_size,
+            update_secs,
+            solve_secs,
+            iters: stats.iters,
+            rel_residual: stats.rel_residual,
+            converged: stats.converged,
+            edges: self.edges.len(),
+            fingerprint: new_fp,
+        };
+        self.round += 1;
+        Ok((report, x))
+    }
+
+    /// Numeric-only refactorize on the session's solver. Needs `&mut`
+    /// access to the `Arc`'d solver; when the rebuild cache still holds
+    /// a clone of it (the session's solver IS the cached one after a
+    /// rebuild), quarantine that entry first to regain sole ownership.
+    fn try_weight_only(&mut self, lap: &Arc<Laplacian>) -> Result<(), ParacError> {
+        match self.exclusive_solver() {
+            Some(s) => s.refactorize_shared(lap.clone()),
+            None => Err(ParacError::BadInput(
+                "session solver is shared; falling back to rebuild".into(),
+            )),
+        }
+    }
+
+    fn exclusive_solver(&mut self) -> Option<&mut Solver<'static>> {
+        if Arc::get_mut(&mut self.solver).is_none() {
+            self.cache.quarantine(self.fp.full);
+        }
+        Arc::get_mut(&mut self.solver)
+    }
+
+    /// Cone-localized repair; `Ok(None)` means "fall back to rebuild".
+    fn try_localized(
+        &mut self,
+        lap: &Arc<Laplacian>,
+        batch: &UpdateBatch,
+    ) -> Result<Option<usize>, ParacError> {
+        let max_cone = (self.opts.damage_threshold * self.n as f64) as usize;
+        if max_cone == 0 {
+            return Ok(None);
+        }
+        let touched = batch.touched();
+        if touched.is_empty() {
+            return Ok(None);
+        }
+        let spliced = {
+            let Some(old) = self.solver.factor() else {
+                return Ok(None);
+            };
+            let opts = self.cache.builder().parac_opts().clone();
+            cone::localized_factor(old, lap, &touched, &opts, max_cone)
+        };
+        let Some((f, m)) = spliced else {
+            return Ok(None);
+        };
+        let Some(s) = self.exclusive_solver() else {
+            return Ok(None);
+        };
+        match s.splice_factor(lap.clone(), f) {
+            Ok(()) => {
+                self.symbolic_fresh = false;
+                Ok(Some(m))
+            }
+            // Any splice refusal falls back to the rebuild path.
+            Err(_) => Ok(None),
+        }
+    }
+
+    fn rebuild(&mut self, lap: &Arc<Laplacian>) -> Result<(), ParacError> {
+        self.solver = self.cache.get_or_build(lap)?;
+        self.symbolic_fresh = true;
+        Ok(())
+    }
+
+    /// Solve on the current graph without applying an update (read-only:
+    /// usable between steps, e.g. by the scenario drivers).
+    pub fn solve(&self, b: &[f64], x: &mut [f64]) -> Result<SolveStats, ParacError> {
+        self.solver.solve_shared(b, x)
+    }
+
+    /// Vertex count (fixed for the session's lifetime).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Live edge count.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Steps applied so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// The current graph (rebuilt canonically after every step).
+    pub fn laplacian(&self) -> &Arc<Laplacian> {
+        &self.lap
+    }
+
+    /// Fingerprint of the current graph.
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.fp
+    }
+
+    /// Per-path classification counts.
+    pub fn counts(&self) -> ClassCounts {
+        self.counts
+    }
+
+    /// Localized repairs that stalled and were escalated to rebuilds.
+    pub fn escalations(&self) -> u64 {
+        self.escalations
+    }
+
+    /// Hit/miss/refactorize counters of the rebuild cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The live factor, when the active preconditioner exposes one.
+    pub fn factor(&self) -> Option<&LdlFactor> {
+        self.solver.factor()
+    }
+}

@@ -328,6 +328,34 @@ pub fn random_tree(n: usize, seed: u64) -> Laplacian {
     Laplacian::from_edges(n, &edges, &format!("random_tree({n})"))
 }
 
+/// Path of cliques ("caterpillar ladder"): `cliques` cliques of `k`
+/// vertices each, consecutive cliques joined by a single light bridge
+/// edge. The high-diameter adversary ROADMAP item 5 asks for: diameter
+/// grows linearly in `cliques` (every cross-graph route threads all the
+/// bridges), which is worst-case for level-scheduled sweeps, while each
+/// clique locally stresses the sampler. Random weights, deterministic
+/// per seed. `n = cliques·k`, `m = cliques·k(k-1)/2 + cliques - 1`.
+pub fn clique_path(cliques: usize, k: usize, seed: u64) -> Laplacian {
+    assert!(cliques >= 1 && k >= 2, "need at least one clique of size 2");
+    let mut rng = Rng::new(seed);
+    let n = cliques * k;
+    let mut edges = Vec::with_capacity(cliques * k * (k - 1) / 2 + cliques - 1);
+    for c in 0..cliques {
+        let base = (c * k) as u32;
+        for a in 0..k as u32 {
+            for b in 0..a {
+                edges.push((base + b, base + a, rng.range_f64(0.5, 2.0)));
+            }
+        }
+        if c + 1 < cliques {
+            // One light bridge, last vertex of this clique to the first
+            // of the next: the only route across.
+            edges.push((base + k as u32 - 1, base + k as u32, rng.range_f64(0.25, 1.0)));
+        }
+    }
+    Laplacian::from_edges(n, &edges, &format!("clique_path({cliques}x{k})"))
+}
+
 /// A small connected random graph with random weights — the property-test
 /// workhorse (connected by construction: random tree + extra edges).
 pub fn random_connected(n: usize, extra_edges: usize, seed: u64) -> Laplacian {
@@ -463,5 +491,24 @@ mod tests {
         assert_eq!(a.matrix, b.matrix);
         let c = random_connected(100, 50, 43);
         assert_ne!(a.matrix, c.matrix);
+    }
+
+    #[test]
+    fn clique_path_structure() {
+        let l = clique_path(30, 4, 11);
+        l.validate().unwrap();
+        assert_eq!(l.n(), 120);
+        // 30 cliques of C(4,2)=6 edges plus 29 bridges.
+        assert_eq!(l.num_edges(), 30 * 6 + 29);
+        let (_, ncomp) = l.components();
+        assert_eq!(ncomp, 1, "bridges must connect the ladder");
+        // Degrees: k-1 inside a clique, +1 for a bridge endpoint (the
+        // first and last vertex of interior cliques carry one each).
+        let degs: Vec<usize> =
+            (0..l.n()).map(|r| l.matrix.row_indices(r).len() - 1).collect();
+        assert!(degs.iter().all(|&d| (3..=4).contains(&d)), "degree outside [k-1, k]");
+        // Deterministic per seed, distinct across seeds.
+        assert_eq!(l.matrix, clique_path(30, 4, 11).matrix);
+        assert_ne!(l.matrix, clique_path(30, 4, 12).matrix);
     }
 }

@@ -213,6 +213,18 @@ pub const SUITE: &[SuiteEntry] = &[
             generators::grid3d(d, d, d / 2 + 1, Coeff::HighContrast(5.0), 114)
         },
     },
+    SuiteEntry {
+        name: "clique_ladder",
+        class: "high-diameter",
+        build: |s| {
+            // Path-of-cliques caterpillar: the suite's high-diameter
+            // adversary (ROADMAP item 5) — diameter ~ clique count, so
+            // level-scheduled sweeps face maximal dependency chains
+            // while each clique stresses the sampler locally.
+            let cliques = dims(s, 140, 1100, 4500);
+            generators::clique_path(cliques, 4, 118)
+        },
+    },
 ];
 
 /// Look up a suite entry by name.

@@ -101,6 +101,24 @@
 //! `parac serve` subcommand and `benches/bench_serve.rs` measure the
 //! stack under open-loop load via [`coordinator::serve_driver`].
 //!
+//! ## Dynamic graphs: updates without full rebuilds
+//!
+//! The [`dynamic`] subsystem keeps a session live while the graph
+//! changes — the paper's §1 "input changes every round" workloads.
+//! [`dynamic::DynamicSession::step`] applies an
+//! [`dynamic::UpdateBatch`] and classifies it onto the cheapest repair
+//! path: pattern-preserving reweights rerun only the numeric phase
+//! ([`solver::Solver::refactorize_shared`]); small structural deltas
+//! take a **cone-localized refactorization** (re-eliminate just the
+//! touched columns and their elimination-tree ancestors and splice the
+//! result into the factor — [`dynamic::cone`],
+//! [`solver::Solver::splice_factor`]); heavy damage rebuilds through a
+//! [`serve::FactorCache`] so known graphs hit the cache. The
+//! [`dynamic::scenario`] zoo (edge churn, spectral partitioning via
+//! inverse-power iteration, effective-resistance sparsification)
+//! drives it from the `parac dynamic` subcommand and
+//! `benches/bench_dynamic.rs` (`BENCH_dynamic.json`).
+//!
 //! ## Precision: the f32 value plane
 //!
 //! Numeric *storage* is a pluggable plane under the same kernels: the
@@ -152,6 +170,7 @@
 
 pub mod cli;
 pub mod coordinator;
+pub mod dynamic;
 pub mod error;
 pub mod etree;
 pub mod factor;

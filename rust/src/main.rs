@@ -30,6 +30,7 @@ fn main() {
         }
         "repro" => repro_cmd(&args),
         "serve" => serve_cmd(&args),
+        "dynamic" => dynamic_cmd(&args),
         _ => {
             help();
             Ok(())
@@ -72,6 +73,16 @@ USAGE:
                errors)
                open-loop serving benchmark: N client threads share one
                cached factor through coalesced solve waves
+  parac dynamic --matrix NAME [--scenario churn|spectral|resist|all]
+               [--rounds R] [--threshold F] [--cache-cap C] [--seed S]
+               [--no-baseline] [--threads T] [--tol 1e-8] [--max-iter N]
+               [--json PATH] [engine/ordering flags]
+               dynamic-graph update streams: each round's batch is
+               classified weight-only / cone-localized / rebuild.
+               --threshold caps the dependency-cone fraction of n before
+               a structural update escalates to a full rebuild;
+               --no-baseline skips the per-round from-scratch build
+               timed as the latency yardstick
 "
     );
 }
@@ -293,6 +304,89 @@ fn serve_cmd(args: &Args) -> Result<(), ParacError> {
     if !json.is_empty() {
         let path = std::path::Path::new(json);
         pipeline::write_bench_rows_json(path, "serve", &rows)
+            .map_err(|e| ParacError::BadInput(format!("writing {json}: {e}")))?;
+        println!("wrote {json}");
+    }
+    Ok(())
+}
+
+fn dynamic_cmd(args: &Args) -> Result<(), ParacError> {
+    use parac::dynamic::scenario::{self, ScenarioOptions};
+    use parac::dynamic::DynamicOptions;
+
+    let lap = build_matrix(args)?;
+    let builder = parac::solver::Solver::builder()
+        .parac_options(parac_opts(args)?)
+        .threads(args.get_parse("threads", 0usize))
+        .tol(args.get_parse("tol", 1e-8f64))
+        .max_iter(args.get_parse("max-iter", 1000usize));
+    let sopts = ScenarioOptions {
+        rounds: args.get_parse("rounds", 8usize),
+        seed: args.get_parse("seed", 0xD11Au64),
+        measure_full_rebuild: !args.flag("no-baseline"),
+        dynamic: DynamicOptions {
+            damage_threshold: args.get_parse("threshold", 0.25f64),
+            cache_capacity: args.get_parse("cache-cap", 4usize),
+            ..Default::default()
+        },
+    };
+    let which = args.get("scenario", "all");
+    let names: Vec<&str> = if which == "all" {
+        scenario::SCENARIOS.to_vec()
+    } else {
+        vec![which]
+    };
+    println!(
+        "{}: n={} nnz={}  rounds={} threshold={} baseline={}",
+        lap.name,
+        fmt_count(lap.n()),
+        fmt_count(lap.matrix.nnz()),
+        sopts.rounds,
+        sopts.dynamic.damage_threshold,
+        if sopts.measure_full_rebuild { "on" } else { "off" },
+    );
+    let ms = |s: f64| {
+        if s > 0.0 {
+            format!("{:.3}", s * 1e3)
+        } else {
+            "-".into()
+        }
+    };
+    let mut t = Table::new(&[
+        "scenario",
+        "weight-only",
+        "localized",
+        "rebuild",
+        "wo (ms)",
+        "loc (ms)",
+        "rb (ms)",
+        "full rb (ms)",
+        "iters",
+    ]);
+    let mut rows = Vec::new();
+    for name in names {
+        let rep = scenario::run(name, &lap, builder.clone(), &sopts)?;
+        t.row(vec![
+            rep.name.into(),
+            rep.counts.weight_only.to_string(),
+            rep.counts.localized.to_string(),
+            rep.counts.rebuild.to_string(),
+            ms(rep.weight_only_secs),
+            ms(rep.localized_secs),
+            ms(rep.rebuild_secs),
+            ms(rep.full_rebuild_secs),
+            format!("{:.1}", rep.mean_iters),
+        ]);
+        rows.push(pipeline::BenchRow {
+            name: format!("{} {}", lap.name, rep.name),
+            fields: rep.fields(),
+        });
+    }
+    print!("{}", t.render());
+    let json = args.get("json", "");
+    if !json.is_empty() {
+        let path = std::path::Path::new(json);
+        pipeline::write_bench_rows_json(path, "dynamic", &rows)
             .map_err(|e| ParacError::BadInput(format!("writing {json}: {e}")))?;
         println!("wrote {json}");
     }

@@ -825,6 +825,59 @@ impl<'a> Solver<'a> {
         Ok(())
     }
 
+    /// Swap a **structurally different** factor under the session in
+    /// one move. This is the splice half of the dynamic subsystem's
+    /// cone-localized refactorization ([`crate::dynamic::cone`]): the
+    /// caller re-eliminated the damaged columns against `lap` and
+    /// spliced them into the previous factor; this call installs the
+    /// result and re-points the session operator at `lap`. The packed
+    /// sweep schedules are re-analyzed from the new factor (the
+    /// structure changed, so the refill fast path cannot apply), and
+    /// the frozen symbolic analysis is dropped — it describes the old
+    /// pattern — so a later [`Solver::refactorize_shared`] on this
+    /// session is a typed [`ParacError::BadInput`] until a full rebuild
+    /// re-freezes it. Only available on sessions built with
+    /// [`SolverBuilder::build_shared`] and the ParAC preconditioner.
+    pub fn splice_factor(
+        &mut self,
+        lap: Arc<Laplacian>,
+        factor: crate::factor::LdlFactor,
+    ) -> Result<(), ParacError> {
+        if !matches!(self.op, SessionOp::OwnedLap { .. }) {
+            return Err(ParacError::BadInput(
+                "splice_factor requires a session built with SolverBuilder::build_shared".into(),
+            ));
+        }
+        if lap.n() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "splice operator",
+                expected: self.n,
+                got: lap.n(),
+            });
+        }
+        if factor.n() != self.n {
+            return Err(ParacError::DimensionMismatch {
+                what: "splice factor",
+                expected: self.n,
+                got: factor.n(),
+            });
+        }
+        let ldl = self.pre.as_ldl_mut().ok_or_else(|| {
+            ParacError::BadInput("splice_factor requires the ParAC preconditioner".into())
+        })?;
+        ldl.refactorize_numeric(|f| {
+            *f = factor;
+            // Structure not preserved: force packed-plane re-analysis.
+            Ok::<bool, ParacError>(false)
+        })?;
+        self.factor_stats = Some(ldl.factor().stats.clone());
+        self.symbolic = None;
+        if let SessionOp::OwnedLap { lap: owned, .. } = &mut self.op {
+            *owned = lap;
+        }
+        Ok(())
+    }
+
     /// Shared numeric-refactorize core: validates, reruns the numeric
     /// phase on the frozen symbolic analysis, refreshes the factor
     /// stats. The caller re-points the session operator.
@@ -1388,6 +1441,47 @@ mod tests {
         assert!(got.converged);
         assert_eq!(got.x, want.x);
         assert_eq!(got.iters, want.iters);
+    }
+
+    #[test]
+    fn splice_factor_repoints_the_session_and_errors_are_typed() {
+        let lap = generators::grid2d(10, 10, generators::Coeff::Uniform, 0);
+        let denser = {
+            let mut edges = lap.edges();
+            edges.push((0, 55, 1.5));
+            Laplacian::from_edges(lap.n(), &edges, "denser")
+        };
+        // A full factor of the new graph stands in for a spliced one
+        // here — the splice construction itself is pinned in
+        // `crate::dynamic::cone`.
+        let f = crate::factor::factorize(&denser, &crate::factor::ParacOptions::default()).unwrap();
+        let denser = Arc::new(denser);
+        let mut s = Solver::builder().seed(3).build_shared(Arc::new(lap.clone())).unwrap();
+        s.splice_factor(denser.clone(), f).unwrap();
+        // The session now solves the *new* system.
+        let b = pcg::random_rhs(&denser, 2);
+        let mut x = vec![0.0; denser.n()];
+        assert!(s.solve_shared(&b, &mut x).unwrap().converged);
+        // The structural change drops the frozen symbolic phase.
+        assert!(matches!(
+            s.refactorize_shared(denser.clone()),
+            Err(ParacError::BadInput(_))
+        ));
+        // Dimension mismatches are typed.
+        let small = generators::grid2d(4, 4, generators::Coeff::Uniform, 0);
+        let f_small =
+            crate::factor::factorize(&small, &crate::factor::ParacOptions::default()).unwrap();
+        assert!(matches!(
+            s.splice_factor(denser.clone(), f_small),
+            Err(ParacError::DimensionMismatch { what: "splice factor", .. })
+        ));
+        // Borrowed sessions cannot splice.
+        let mut borrowed = Solver::builder().build(&lap).unwrap();
+        let f2 = crate::factor::factorize(&lap, &crate::factor::ParacOptions::default()).unwrap();
+        assert!(matches!(
+            borrowed.splice_factor(denser.clone(), f2),
+            Err(ParacError::BadInput(_))
+        ));
     }
 
     #[test]

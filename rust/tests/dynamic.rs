@@ -1,0 +1,364 @@
+//! Dynamic-graph subsystem pins (ISSUE 10): weight-only streams are
+//! bit-identical to numeric refactorize, the cone-localized path
+//! converges like a full rebuild on **every** suite graph, update
+//! batches have typed validation and pinned edge semantics, and both
+//! session types are deterministic.
+
+use parac::coordinator::incremental::IncrementalSession;
+use parac::dynamic::scenario::{self, ScenarioOptions};
+use parac::dynamic::{DynamicOptions, DynamicSession, UpdateBatch, UpdateClass};
+use parac::error::ParacError;
+use parac::factor::ParacOptions;
+use parac::graph::generators::{self, Coeff};
+use parac::graph::suite::{Scale, SUITE};
+use parac::rng::Rng;
+use parac::solve::pcg::{self, PcgOptions};
+use parac::solver::{Solver, SolverBuilder};
+
+fn builder() -> SolverBuilder {
+    Solver::builder().seed(5).tol(1e-8).max_iter(1500)
+}
+
+/// A pattern-preserving stream reruns only the numeric phase, and the
+/// resulting factor is bit-identical to a fresh build on the final
+/// graph — the PR 5 refactorize contract carried through the session.
+#[test]
+fn weight_only_stream_is_bit_identical_to_refactorize() {
+    let lap = generators::grid2d(14, 14, Coeff::Uniform, 0);
+    let mut sess = DynamicSession::new(&lap, builder(), DynamicOptions::default()).unwrap();
+    let b = pcg::random_rhs(&lap, 3);
+    for round in 0..3 {
+        let mut batch = UpdateBatch::default();
+        let edges = sess.laplacian().edges();
+        for (i, &(u, v, _)) in edges.iter().enumerate().take(40) {
+            if i % 2 == round % 2 {
+                batch.add.push((u, v, 0.25 + i as f64 * 0.01));
+            }
+        }
+        let (rep, x) = sess.step(&batch, &b).unwrap();
+        assert_eq!(rep.class, UpdateClass::WeightOnly, "round {round}");
+        assert!(!rep.escalated);
+        assert!(rep.converged, "round {round}: rel {}", rep.rel_residual);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(sess.counts().weight_only, 3);
+    assert_eq!(sess.counts().localized, 0);
+    assert_eq!(sess.counts().rebuild, 0);
+
+    let fresh = builder().build_shared(sess.laplacian().clone()).unwrap();
+    let ours = sess.factor().expect("session factor");
+    let theirs = fresh.factor().expect("fresh factor");
+    assert_eq!(ours.g, theirs.g, "weight-only stream must match a fresh build bit-for-bit");
+    assert_eq!(ours.diag, theirs.diag);
+}
+
+/// The acceptance pin: for every suite graph, a structural-update
+/// stream through the session converges to the same tolerance as a
+/// full rebuild on the final graph — and the cone-localized path
+/// actually fires across the suite.
+#[test]
+fn localized_stream_converges_across_suite() {
+    let mut localized_seen = 0u64;
+    for e in SUITE {
+        let lap = (e.build)(Scale::Tiny);
+        let n = lap.n();
+        let b = pcg::random_rhs(&lap, 7);
+        let bld = Solver::builder().seed(9).tol(1e-6).max_iter(1200);
+        let mut sess = DynamicSession::new(
+            &lap,
+            bld.clone(),
+            DynamicOptions { damage_threshold: 0.6, ..Default::default() },
+        )
+        .unwrap();
+
+        // Four long-range edges that do not exist yet — guaranteed
+        // structural on any suite graph.
+        let mut picked: Vec<(u32, u32)> = Vec::new();
+        'outer: for u in 0..n as u32 {
+            for off in [n as u32 / 2, n as u32 / 3] {
+                let v = (u + off) % n as u32;
+                let key = (u.min(v), u.max(v));
+                if u != v
+                    && sess.laplacian().matrix.get(u as usize, v as usize) == 0.0
+                    && !picked.contains(&key)
+                {
+                    picked.push(key);
+                    if picked.len() == 4 {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(picked.len() == 4, "{}: could not find fresh edges", e.name);
+
+        for chunk in picked.chunks(2) {
+            let mut batch = UpdateBatch::default();
+            for &(u, v) in chunk {
+                batch.add.push((u, v, 1.0));
+            }
+            let (rep, _x) = sess.step(&batch, &b).unwrap();
+            assert_ne!(
+                rep.class,
+                UpdateClass::WeightOnly,
+                "{}: structural batch misclassified",
+                e.name
+            );
+            assert!(
+                rep.converged,
+                "{}: {} round did not converge (rel {})",
+                e.name,
+                rep.class.name(),
+                rep.rel_residual
+            );
+            if rep.class == UpdateClass::Localized {
+                localized_seen += 1;
+            }
+        }
+
+        // Same tolerance as a from-scratch rebuild on the final graph.
+        let fresh = bld.build_shared(sess.laplacian().clone()).unwrap();
+        let mut x_fresh = vec![0.0; n];
+        let fresh_stats = fresh.solve_shared(&b, &mut x_fresh).unwrap();
+        assert!(fresh_stats.converged, "{}: full rebuild did not converge", e.name);
+        let mut x_sess = vec![0.0; n];
+        let sess_stats = sess.solve(&b, &mut x_sess).unwrap();
+        assert!(
+            sess_stats.converged && sess_stats.rel_residual <= 1e-6,
+            "{}: session solve rel {} vs rebuild rel {}",
+            e.name,
+            sess_stats.rel_residual,
+            fresh_stats.rel_residual
+        );
+    }
+    assert!(
+        localized_seen > 0,
+        "no suite graph ever took the cone-localized path"
+    );
+}
+
+/// Satellite: nonpositive / non-finite weights and out-of-range
+/// endpoints are typed `BadInput` at batch application — in both
+/// session types — and a rejected batch leaves the graph untouched.
+#[test]
+fn bad_update_weights_are_typed_errors() {
+    let lap = generators::grid2d(8, 8, Coeff::Uniform, 0);
+    let mut dyn_sess = DynamicSession::new(&lap, builder(), DynamicOptions::default()).unwrap();
+    let mut inc_sess = IncrementalSession::new(
+        &lap,
+        ParacOptions::default(),
+        PcgOptions { tol: 1e-6, max_iter: 400, ..Default::default() },
+    );
+    let b = pcg::random_rhs(&lap, 1);
+    let edges_before = dyn_sess.num_edges();
+    let fp_before = dyn_sess.fingerprint();
+    for w in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+        let batch = UpdateBatch { add: vec![(0, 63, w)], remove: vec![] };
+        assert!(
+            matches!(dyn_sess.step(&batch, &b), Err(ParacError::BadInput(_))),
+            "DynamicSession accepted weight {w}"
+        );
+        assert!(
+            matches!(inc_sess.step(&batch, &b), Err(ParacError::BadInput(_))),
+            "IncrementalSession accepted weight {w}"
+        );
+    }
+    let oob = UpdateBatch { add: vec![(0, 64, 1.0)], remove: vec![] };
+    assert!(matches!(dyn_sess.step(&oob, &b), Err(ParacError::BadInput(_))));
+    let oob = UpdateBatch { add: vec![], remove: vec![(64, 0)] };
+    assert!(matches!(inc_sess.step(&oob, &b), Err(ParacError::BadInput(_))));
+    // Rejected batches moved nothing.
+    assert_eq!(dyn_sess.num_edges(), edges_before);
+    assert_eq!(dyn_sess.fingerprint(), fp_before);
+    // Both sessions remain usable afterwards.
+    let ok = UpdateBatch { add: vec![(0, 63, 0.5)], remove: vec![] };
+    assert!(dyn_sess.step(&ok, &b).unwrap().0.converged);
+    assert!(inc_sess.step(&ok, &b).unwrap().0.converged);
+}
+
+/// Satellite: `UpdateBatch` edge semantics pinned through the session —
+/// add-then-remove nets out, removing a nonexistent edge is a no-op,
+/// repeated adds accumulate, and a disconnecting update still solves
+/// (projected, per-component mean-zero rhs).
+#[test]
+fn update_batch_edge_semantics_are_pinned() {
+    let lap = generators::grid2d(8, 8, Coeff::Uniform, 0);
+    let b = pcg::random_rhs(&lap, 2);
+    let mut sess = DynamicSession::new(&lap, builder(), DynamicOptions::default()).unwrap();
+
+    // Add-then-remove of one (new) edge in one batch: adds apply first,
+    // removes second — the edge nets out absent and nothing changed.
+    let batch = UpdateBatch { add: vec![(0, 63, 2.0)], remove: vec![(0, 63)] };
+    let before = sess.fingerprint();
+    let (rep, _) = sess.step(&batch, &b).unwrap();
+    assert_eq!(sess.laplacian().matrix.get(0, 63), 0.0);
+    assert_eq!(sess.fingerprint(), before);
+    assert_eq!(rep.class, UpdateClass::WeightOnly);
+
+    // Removing a nonexistent edge is a no-op, not an error.
+    let batch = UpdateBatch { add: vec![], remove: vec![(1, 50)] };
+    let (rep, _) = sess.step(&batch, &b).unwrap();
+    assert_eq!(sess.fingerprint(), before);
+    assert_eq!(rep.class, UpdateClass::WeightOnly);
+
+    // Repeated adds accumulate — within a batch and across batches
+    // (endpoint order does not matter).
+    let batch = UpdateBatch { add: vec![(0, 9, 0.5), (9, 0, 0.25)], remove: vec![] };
+    sess.step(&batch, &b).unwrap();
+    let batch = UpdateBatch { add: vec![(0, 9, 0.25)], remove: vec![] };
+    sess.step(&batch, &b).unwrap();
+    assert_eq!(sess.laplacian().matrix.get(0, 9), -1.0, "weights must accumulate");
+
+    // A disconnecting removal: the projected solve on the surviving
+    // component still succeeds (the isolated vertex rides a zero pivot).
+    let star = generators::star(40);
+    let mut sess = DynamicSession::new(&star, builder(), DynamicOptions::default()).unwrap();
+    let mut b = vec![0.0f64; 40];
+    for (i, bi) in b.iter_mut().enumerate() {
+        if i != 7 {
+            *bi = (i as f64 * 0.37).sin();
+        }
+    }
+    let mean = b.iter().sum::<f64>() / 39.0;
+    for (i, bi) in b.iter_mut().enumerate() {
+        if i != 7 {
+            *bi -= mean;
+        }
+    }
+    let batch = UpdateBatch { add: vec![], remove: vec![(0, 7)] };
+    let (rep, x) = sess.step(&batch, &b).unwrap();
+    assert_eq!(sess.num_edges(), 38);
+    assert!(rep.converged, "solve on the surviving component must converge");
+    assert!(x.iter().all(|v| v.is_finite()));
+
+    // Same semantics through the rebuild-every-round reference loop.
+    let mut inc = IncrementalSession::new(
+        &star,
+        ParacOptions::default(),
+        PcgOptions { tol: 1e-7, max_iter: 300, ..Default::default() },
+    );
+    let (irep, ix) = inc
+        .step(&UpdateBatch { add: vec![], remove: vec![(0, 7)] }, &b)
+        .unwrap();
+    assert_eq!(irep.edges, 38);
+    assert!(ix.iter().all(|v| v.is_finite()));
+}
+
+/// Satellite regression: identical session histories produce identical
+/// round graphs — the `HashMap` iteration-order bug would make these
+/// fingerprints (and the solves) differ run-to-run.
+#[test]
+fn incremental_rounds_are_deterministic() {
+    let lap = generators::road_like(12, 12, 0.2, 5);
+    let mk = || {
+        IncrementalSession::new(
+            &lap,
+            ParacOptions::default(),
+            PcgOptions { tol: 1e-6, max_iter: 600, ..Default::default() },
+        )
+    };
+    let mut a = mk();
+    let mut c = mk();
+    let b = pcg::random_rhs(&lap, 4);
+    let mut rng = Rng::new(17);
+    for round in 0..4 {
+        let mut batch = UpdateBatch::default();
+        for _ in 0..12 {
+            let u = rng.below(lap.n()) as u32;
+            let v = rng.below(lap.n()) as u32;
+            if u != v {
+                batch.add.push((u, v, rng.range_f64(0.5, 2.0)));
+            }
+        }
+        let (ra, xa) = a.step(&batch, &b).unwrap();
+        let (rc, xc) = c.step(&batch, &b).unwrap();
+        assert_eq!(ra.fingerprint, rc.fingerprint, "round {round} graphs diverged");
+        assert_eq!(xa, xc, "round {round} solutions must be bit-identical");
+    }
+}
+
+/// The delta-classified session is deterministic too: same initial
+/// graph + same batches ⇒ same fingerprints, same classification, and
+/// bit-identical solutions.
+#[test]
+fn dynamic_sessions_are_deterministic() {
+    let lap = generators::grid2d(10, 10, Coeff::Uniform, 3);
+    let mut a = DynamicSession::new(&lap, builder(), DynamicOptions::default()).unwrap();
+    let mut c = DynamicSession::new(&lap, builder(), DynamicOptions::default()).unwrap();
+    let b = pcg::random_rhs(&lap, 9);
+    let batches = [
+        UpdateBatch { add: vec![(0, 55, 1.0), (3, 77, 0.5)], remove: vec![] },
+        UpdateBatch { add: vec![(0, 55, 0.25)], remove: vec![(3, 77)] },
+        UpdateBatch { add: vec![(2, 3, 0.5)], remove: vec![] },
+    ];
+    for (i, batch) in batches.iter().enumerate() {
+        let (ra, xa) = a.step(batch, &b).unwrap();
+        let (rc, xc) = c.step(batch, &b).unwrap();
+        assert_eq!(ra.fingerprint, rc.fingerprint, "batch {i}");
+        assert_eq!(ra.class, rc.class, "batch {i}");
+        assert_eq!(xa, xc, "batch {i} solutions must be bit-identical");
+    }
+}
+
+/// Structural updates past the damage threshold rebuild through the
+/// factor cache — and returning to a previously seen graph is a cache
+/// hit, not a fresh factorization.
+#[test]
+fn rebuild_path_routes_through_the_factor_cache() {
+    let lap = generators::grid2d(10, 10, Coeff::Uniform, 2);
+    // Threshold 0 disables the localized path: every structural update
+    // must rebuild.
+    let mut sess = DynamicSession::new(
+        &lap,
+        builder(),
+        DynamicOptions { damage_threshold: 0.0, ..Default::default() },
+    )
+    .unwrap();
+    let b = pcg::random_rhs(&lap, 5);
+    let (r1, _) = sess
+        .step(&UpdateBatch { add: vec![(0, 55, 1.0)], remove: vec![] }, &b)
+        .unwrap();
+    assert_eq!(r1.class, UpdateClass::Rebuild);
+    let (r2, _) = sess
+        .step(&UpdateBatch { add: vec![], remove: vec![(0, 55)] }, &b)
+        .unwrap();
+    assert_eq!(r2.class, UpdateClass::Rebuild);
+    // Back to the graph of round 1 (same weights): full-fingerprint hit.
+    let (r3, _) = sess
+        .step(&UpdateBatch { add: vec![(0, 55, 1.0)], remove: vec![] }, &b)
+        .unwrap();
+    assert_eq!(r3.class, UpdateClass::Rebuild);
+    let st = sess.cache_stats();
+    assert_eq!(st.hits, 1, "returning to a known graph must hit the cache");
+    assert_eq!(st.misses, 2);
+    assert_eq!(sess.counts().rebuild, 3);
+    assert_eq!(sess.counts().localized, 0);
+}
+
+/// The scenario zoo runs end to end on a suite-independent grid (the
+/// bench asserts convergence at scale; this is the cheap CI pin).
+#[test]
+fn scenario_zoo_smoke() {
+    let lap = generators::grid2d(12, 12, Coeff::Uniform, 1);
+    let opts = ScenarioOptions {
+        rounds: 3,
+        seed: 11,
+        measure_full_rebuild: true,
+        dynamic: DynamicOptions::default(),
+    };
+    for name in scenario::SCENARIOS {
+        let rep = scenario::run(
+            name,
+            &lap,
+            Solver::builder().seed(2).tol(1e-7).max_iter(1200),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(rep.rounds, 3, "{name}");
+        assert_eq!(rep.counts.total(), 3, "{name}");
+        assert!(rep.all_converged, "{name} had a non-converged round");
+        assert!(
+            rep.full_rebuild_secs > 0.0,
+            "{name} must time the rebuild baseline"
+        );
+    }
+}
